@@ -1,0 +1,44 @@
+"""Paper Table V / Fig 6: correlations between dimension products
+(MxN, MxK, NxK, MxNxK) and runtime/power/energy/TFLOPS."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dump, get_dataset, row, timeit
+from repro.core.mlperf.metrics import correlation_matrix
+
+
+def run() -> list[dict]:
+    table = get_dataset()
+    dims = ["mxn", "mxk", "nxk", "mxnxk"]
+    mets = ["runtime_ms", "power_w", "energy_j", "tflops"]
+    mat_all = correlation_matrix(table, dims, mets)
+    # The paper sweeps tuned CUTLASS kernels — no pathological tiles. Our
+    # sweep includes sub-MXU blocks whose overhead-bound runtimes decouple
+    # from mxnxk; the comparable population is the production-block subset.
+    sel = np.asarray(table["block_m"]) >= 64
+    sub = {k: np.asarray(v)[sel] for k, v in table.items()
+           if k in dims + mets}
+    mat = correlation_matrix(sub, dims, mets)
+    us = timeit(lambda: correlation_matrix(sub, dims, mets), n=3)
+    paper = {
+        "mxn": [0.85, 0.80, 0.77, -0.39],
+        "mxk": [0.89, 0.59, 0.81, -0.23],
+        "nxk": [0.69, 0.38, 0.65, -0.09],
+        "mxnxk": [0.98, 0.70, 0.91, -0.41],
+    }
+    dump("correlations", {
+        "dims": dims, "metrics": mets,
+        "ours_production_blocks": {
+            d: [float(x) for x in mat[i]] for i, d in enumerate(dims)},
+        "ours_all_configs": {
+            d: [float(x) for x in mat_all[i]] for i, d in enumerate(dims)},
+        "paper": paper,
+    })
+    i = dims.index("mxnxk")
+    return [row(
+        "table5.correlations", us,
+        f"corr(mxnxk,rt)={mat[i][0]:.2f}(paper:0.98);"
+        f"corr(mxn,pw)={mat[0][1]:.2f}(paper:0.80);"
+        f"corr(mxnxk,tflops)={mat[i][3]:.2f}(paper:-0.41)")]

@@ -1,0 +1,28 @@
+"""Paper §IV-C: the 16,128-operation CUTLASS-analogue profiling sweep."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import dump, get_dataset, row
+
+
+def run() -> list[dict]:
+    t0 = time.perf_counter()
+    table = get_dataset()
+    dt = time.perf_counter() - t0
+    n = len(table["runtime_ms"])
+    bounds = {}
+    for b in table["bound"]:
+        bounds[str(b)] = bounds.get(str(b), 0) + 1
+    dump("dataset_sweep", {
+        "rows": n,
+        "collect_or_load_s": dt,
+        "bound_distribution": bounds,
+        "runtime_ms_range": [float(table["runtime_ms"].min()),
+                             float(table["runtime_ms"].max())],
+        "power_w_range": [float(table["power_w"].min()),
+                          float(table["power_w"].max())],
+    })
+    return [row("dataset.profile_sweep", dt / max(n, 1) * 1e6,
+                f"rows={n};bounds={bounds}")]

@@ -1,0 +1,41 @@
+"""Kernel-level microbench: Pallas tiled GEMM (interpret mode, CPU container)
+vs the jnp oracle — correctness tracking plus call latency. On real TPU
+hardware this module is where wall-clock kernel timing would plug in."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dump, row, timeit
+from repro.kernels.ref import matmul_ref
+from repro.kernels.tiled_matmul import BlockConfig, tiled_matmul
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    m, n, k = 256, 256, 256
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    cfg = BlockConfig(64, 128, 128)
+
+    out_p = tiled_matmul(a, b, config=cfg, interpret=True)
+    out_r = matmul_ref(a, b)
+    err = float(jnp.max(jnp.abs(out_p - out_r)))
+
+    us_pallas = timeit(
+        lambda: tiled_matmul(a, b, config=cfg,
+                             interpret=True).block_until_ready(), n=3)
+    us_ref = timeit(lambda: matmul_ref(a, b).block_until_ready(), n=10)
+    dump("kernel_micro", {
+        "shape": [m, n, k],
+        "block": cfg.as_tuple(),
+        "max_abs_err": err,
+        "us_pallas_interpret": us_pallas,
+        "us_xla_ref": us_ref,
+    })
+    return [
+        row("kernel.pallas_interpret_256", us_pallas,
+            f"max_err={err:.2e} (interpret=CPU correctness mode)"),
+        row("kernel.xla_ref_256", us_ref, "oracle"),
+    ]

@@ -1,0 +1,58 @@
+"""Paper Tables II/III: linear-regression coefficients for runtime and power
+on the tiled-matmul study (m, n, k, tile size), with R^2 — reproducing the
+paper's observation that runtime is poorly linear (R^2 0.13) while power is
+much more linear (R^2 0.82)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dump, row, timeit
+from repro.core.hwsim import GemmConfig, TpuGemmSimulator
+from repro.core.mlperf import LinearRegression, r2_score
+
+
+def _tiled_dataset(n_runtime: int = 142, n_power: int = 196):
+    """Mimic the paper's two small hand-collected datasets."""
+    sim = TpuGemmSimulator(seed=1)
+    rng = np.random.default_rng(1)
+    sizes = [256, 512, 1024, 2048, 4096, 6144, 8192]
+    tiles = [8, 64, 128, 256, 512, 1024]
+    rows = []
+    while len(rows) < max(n_runtime, n_power):
+        m, n, k = rng.choice(sizes, 3)
+        t = int(rng.choice(tiles))
+        tel = sim.measure(GemmConfig(int(m), int(n), int(k), t, t,
+                                     min(t, 512)))
+        if tel.valid:
+            rows.append((m, n, k, t, tel.runtime_ms, tel.power_w))
+    arr = np.array(rows)
+    X = arr[:, :4]
+    return X[:n_runtime], arr[:n_runtime, 4], X[:n_power], arr[:n_power, 5]
+
+
+def run() -> list[dict]:
+    Xr, y_rt, Xp, y_pw = _tiled_dataset()
+    lr_rt = LinearRegression().fit(Xr, y_rt)
+    lr_pw = LinearRegression().fit(Xp, y_pw)
+    r2_rt = r2_score(y_rt, lr_rt.predict(Xr))
+    r2_pw = r2_score(y_pw, lr_pw.predict(Xp))
+    us = timeit(lambda: LinearRegression().fit(Xr, y_rt), n=10)
+    dump("linreg_tables", {
+        "runtime_coefficients": dict(zip(["m", "n", "k", "tile"],
+                                         map(float, lr_rt.coef_))),
+        "power_coefficients": dict(zip(["m", "n", "k", "tile"],
+                                       map(float, lr_pw.coef_))),
+        "runtime_r2": r2_rt, "power_r2": r2_pw,
+        "paper_runtime_r2": 0.1344, "paper_power_r2": 0.8209,
+        "tile_coef_signs": {
+            "runtime": float(np.sign(lr_rt.coef_[3])),
+            "power": float(np.sign(lr_pw.coef_[3])),
+        },
+    })
+    return [
+        row("linreg.runtime", us,
+            f"r2={r2_rt:.3f};tile_coef={lr_rt.coef_[3]:.3g}(paper:-2588)"),
+        row("linreg.power", us,
+            f"r2={r2_pw:.3f};tile_coef={lr_pw.coef_[3]:.3g}(paper:-0.769)"),
+    ]

@@ -1,0 +1,72 @@
+"""Paper Fig 1: roofline model — ridge points and bound classification for
+the target chip (TPU v5e) vs the paper's RTX 4070; plus the per-cell
+roofline table derived from the dry-run artifacts (§Roofline deliverable)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART, dump, row
+from repro.core.chips import RTX_4070, TPU_V5E
+from repro.core.energy import energy_report
+from repro.core.roofline import RooflineReport, format_report_table
+
+
+def reports_from_artifacts(mesh: str = "pod16x16") -> list[RooflineReport]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "dryrun", mesh,
+                                              "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        variant = d.get("variant")
+        label = f"{d['arch']}/{d['shape']}" + (f"+{variant}" if variant
+                                               else "")
+        out.append(RooflineReport(
+            name=label,
+            n_chips=d["n_chips"],
+            dtype="bf16",
+            hlo_flops=d["flops_per_chip"] * d["n_chips"],
+            hlo_bytes=d["bytes_per_chip"] * d["n_chips"],
+            collective_wire_bytes=(d["collective_wire_bytes_per_chip"]
+                                   * d["n_chips"]),
+            compute_s=d["flops_per_chip"] / TPU_V5E.peak("bf16"),
+            memory_s=d["bytes_per_chip"] / TPU_V5E.hbm_bw,
+            collective_s=(d["collective_wire_bytes_per_chip"]
+                          / TPU_V5E.ici_link_bw),
+            model_flops=d["model_flops"],
+            bytes_per_device=d["memory_analysis"]["argument_size_in_bytes"],
+        ))
+    return out
+
+
+def run() -> list[dict]:
+    ridge_v5e = TPU_V5E.ridge_point("bf16")
+    ridge_4070 = RTX_4070.ridge_point("f32")
+    rows = [row("roofline.ridge_points", 0.0,
+                f"v5e={ridge_v5e:.0f}FLOPs/B;rtx4070={ridge_4070:.0f}"
+                f"(paper:59)")]
+    reports = reports_from_artifacts()
+    if reports:
+        table = format_report_table(reports)
+        energies = [energy_report(
+            r, tokens_per_step=1.0).as_row() for r in reports]
+        dump("cell_roofline", {
+            "table": table,
+            "rows": [r.as_row() for r in reports],
+            "energy": energies,
+        })
+        dominated = {}
+        for r in reports:
+            dominated[r.dominant] = dominated.get(r.dominant, 0) + 1
+        fracs = sorted((r.roofline_fraction, r.name) for r in reports)
+        rows.append(row("roofline.cells", 0.0,
+                        f"cells={len(reports)};dominant={dominated};"
+                        f"worst={fracs[0][1]}@{100*fracs[0][0]:.1f}%"))
+        rows.append(row("roofline.best_cell", 0.0,
+                        f"{fracs[-1][1]}@{100*fracs[-1][0]:.1f}%"))
+    else:
+        rows.append(row("roofline.cells", 0.0,
+                        "no dryrun artifacts (run repro.launch.dryrun)"))
+    return rows

@@ -1,0 +1,56 @@
+"""Paper Figs 2-5 + Table I: tiled-matmul runtime/power vs matrix size per
+tile size, and the occupancy (VMEM buffer) cliff."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dump, row, timeit
+from repro.core.hwsim import GemmConfig, TpuGemmSimulator
+
+# TPU tile analogues of the paper's CUDA tiles 1..32 (square blocks; the
+# "tile=8" point is the sub-MXU pathological one like the paper's tile=1)
+TILES = (8, 64, 128, 256, 512, 1024, 2048)
+SIZES = (256, 512, 1024, 2048, 4096, 8192)
+
+
+def run() -> list[dict]:
+    sim = TpuGemmSimulator(seed=0)
+    runtime = {}
+    power = {}
+    for t in TILES:
+        rts, pws = [], []
+        for s in SIZES:
+            cfg = GemmConfig(m=s, n=s, k=s, block_m=t, block_n=t,
+                             block_k=min(t, 512))
+            tel = sim.analyze(cfg)
+            rts.append(tel.runtime_ms if tel.valid else float("nan"))
+            pws.append(tel.power_w if tel.valid else float("nan"))
+        runtime[t] = rts
+        power[t] = pws
+
+    occupancy = sim.occupancy_report(list(TILES))
+
+    # best tile at the paper's reference size (4096)
+    i4096 = SIZES.index(4096)
+    valid = {t: runtime[t][i4096] for t in TILES
+             if np.isfinite(runtime[t][i4096])}
+    best_tile = min(valid, key=valid.get)
+    worst_tile = max(valid, key=valid.get)
+    speedup = valid[worst_tile] / valid[best_tile]
+
+    us = timeit(lambda: sim.analyze(GemmConfig(4096, 4096, 4096)), n=50)
+    dump("tile_sweep", {
+        "sizes": list(SIZES),
+        "runtime_ms": {str(k): v for k, v in runtime.items()},
+        "power_w": {str(k): v for k, v in power.items()},
+        "occupancy": {str(k): v for k, v in occupancy.items()},
+        "best_tile_4096": best_tile,
+        "speedup_best_vs_worst": speedup,
+    })
+    return [
+        row("tile_sweep.analyze", us,
+            f"best_tile@4096={best_tile};speedup_vs_worst={speedup:.1f}x"),
+        row("tile_sweep.occupancy_cliff", us,
+            "occupancy=" + ",".join(f"{t}:{occupancy[t]}" for t in TILES)),
+    ]

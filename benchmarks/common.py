@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: timing, dataset cache, CSV row protocol.
+
+Every bench module exposes `run() -> list[dict]` with keys
+{name, us_per_call, derived}; `benchmarks.run` aggregates to CSV and dumps
+detailed JSON to artifacts/bench/.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+BENCH_ART = os.path.join(ART, "bench")
+DATASET_PATH = os.path.join(ART, "gemm_dataset.npz")
+
+os.makedirs(BENCH_ART, exist_ok=True)
+
+
+def timeit(fn, *args, n: int = 5, warmup: int = 1) -> float:
+    """Mean wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def get_dataset(n_configs: int = 16128, seed: int = 0):
+    """The paper-scale profiled dataset, cached on disk."""
+    from repro.core.profiler import collect_dataset, load_dataset, save_dataset
+
+    if os.path.exists(DATASET_PATH):
+        table = load_dataset(DATASET_PATH)
+        if len(table["runtime_ms"]) >= n_configs * 0.9:
+            return table
+    table = collect_dataset(n_configs=n_configs, seed=seed)
+    os.makedirs(os.path.dirname(DATASET_PATH), exist_ok=True)
+    save_dataset(table, DATASET_PATH)
+    return table
+
+
+def paper_split(table, train_n: int = 2076, test_n: int = 519, seed: int = 0):
+    """The paper's split: 2,076 train / 519 test rows of the 16,128."""
+    n = len(table["runtime_ms"])
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    tr_idx, te_idx = perm[:train_n], perm[train_n:train_n + test_n]
+    tr = {k: np.asarray(v)[tr_idx] for k, v in table.items()}
+    te = {k: np.asarray(v)[te_idx] for k, v in table.items()}
+    return tr, te
+
+
+def dump(name: str, payload) -> None:
+    with open(os.path.join(BENCH_ART, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def row(name: str, us: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us, "derived": derived}

@@ -1,0 +1,47 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV; detailed JSON lands in
+artifacts/bench/.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+BENCHES = [
+    "bench_roofline",        # Fig 1 + §Roofline cell table
+    "bench_tile_sweep",      # Figs 2-5 + Table I
+    "bench_linreg",          # Tables II & III
+    "bench_dataset",         # §IV-C 16,128-op sweep
+    "bench_model_metrics",   # Table IV
+    "bench_correlation",     # Table V / Fig 6
+    "bench_model_comparison",# Table VI
+    "bench_autotune",        # §Abstract 3.2x / 22% claims
+    "bench_kernel",          # Pallas kernel micro
+]
+
+
+def main() -> None:
+    import importlib
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in BENCHES:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for r in mod.run():
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']:.1f},{derived}",
+                      flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

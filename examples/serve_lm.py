@@ -1,0 +1,48 @@
+"""Serving example: batched greedy generation with the continuous-batching
+engine over a small dense LM (random weights — the point is the serving
+machinery: prefill, KV cache, lockstep decode, wave packing).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", kind="dense", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=1024, vocab=4096, param_dtype="float32",
+        activation_dtype="float32", remat=False,
+    )
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    engine = ServingEngine(model, params, cfg, max_batch=4, max_len=128)
+
+    rng = np.random.default_rng(0)
+    n_requests = 10
+    for uid in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab, rng.integers(4, 24))
+        engine.submit(Request(uid=uid, prompt=prompt.astype(np.int32),
+                              max_new_tokens=16))
+
+    import time
+    t0 = time.perf_counter()
+    results = engine.run_until_empty()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.tokens) for r in results)
+    for r in sorted(results, key=lambda r: r.uid)[:4]:
+        print(f"req {r.uid}: prompt_len={r.prompt_len} -> {r.tokens[:8]}...")
+    print(f"served {len(results)} requests, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.0f} tok/s on CPU)")
+    assert len(results) == n_requests
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+with the full production stack — autotuned GEMM path, AdamW + cosine
+schedule, checkpointing every 50 steps, fault-tolerant resume, straggler
+monitoring, synthetic-but-learnable data.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import os
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, DataLoader, SyntheticLMDataset
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, resume_or_init, run_train_loop
+from repro.train.step import init_train_state, make_train_step
+
+
+def hundred_m_config() -> ModelConfig:
+    """~100M params: 12L x 768 wide, GQA 12/4 heads, 8k vocab."""
+    return ModelConfig(
+        name="lm-100m", kind="dense", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, d_ff=3072, vocab=8192, param_dtype="float32",
+        activation_dtype="float32", remat=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    model = get_model(cfg)
+    print(f"model: {cfg.name}  params~{cfg.n_params()/1e6:.0f}M  "
+          f"devices={jax.devices()}")
+
+    ds = SyntheticLMDataset(DataConfig(seq_len=args.seq,
+                                       global_batch=args.batch,
+                                       vocab=cfg.vocab, seed=0))
+    loader = DataLoader(ds)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, decay_steps=args.steps)
+    train_step = jax.jit(make_train_step(model, cfg, opt_cfg),
+                         donate_argnums=0)
+
+    state, start = resume_or_init(
+        ckpt=ckpt,
+        init_fn=lambda: init_train_state(jax.random.key(0), model, cfg),
+        loader=loader)
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+
+    state, summary = run_train_loop(
+        train_step=train_step, state=state, loader=loader, ckpt=ckpt,
+        loop_cfg=LoopConfig(total_steps=args.steps, ckpt_every=50,
+                            log_every=20),
+        start_step=start)
+    print(f"done: step={summary['final_step']} "
+          f"loss={summary['final_loss']:.4f} "
+          f"({summary['mean_step_time_s']*1e3:.0f} ms/step)")
+    curve = summary["loss_curve"]
+    if len(curve) > 20:
+        print(f"loss first10={curve[:10].mean():.3f} "
+              f"last10={curve[-10:].mean():.3f}")
+        assert curve[-10:].mean() < curve[:10].mean(), "loss did not improve"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

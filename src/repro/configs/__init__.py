@@ -1,0 +1,81 @@
+"""Assigned-architecture registry: one module per arch, exact published
+configs, reduced smoke variants, and per-shape input specs.
+
+    from repro.configs import get_config, list_archs, SHAPES
+    cfg = get_config("qwen2-7b")            # full config
+    cfg = get_config("qwen2-7b", smoke=True)
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "falcon_mamba_7b",
+    "olmoe_1b_7b",
+    "deepseek_v2_236b",
+    "codeqwen1_5_7b",
+    "starcoder2_3b",
+    "qwen2_5_14b",
+    "qwen2_7b",
+    "seamless_m4t_medium",
+    "qwen2_vl_2b",
+    "zamba2_2_7b",
+]
+
+# canonical ids as given in the assignment (dashes/dots)
+CANONICAL = {
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "starcoder2-3b": "starcoder2_3b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen2-7b": "qwen2_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+SHAPE_DEFS = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "step": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "step": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "step": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "step": "decode"},
+}
+
+
+def _module(arch: str):
+    name = CANONICAL.get(arch, arch.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def list_archs() -> list[str]:
+    return list(CANONICAL)
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = _module(arch)
+    return mod.smoke_config() if smoke else mod.full_config()
+
+
+def input_specs(arch: str, shape: str, smoke: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape)."""
+    mod = _module(arch)
+    return mod.input_specs(shape, smoke=smoke)
+
+
+def supported_cells(arch: str) -> list[str]:
+    """Shapes this arch runs (long_500k only for sub-quadratic archs)."""
+    mod = _module(arch)
+    cfg = mod.full_config()
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        shapes.append("long_500k")
+    return shapes
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in list_archs() for s in supported_cells(a)]

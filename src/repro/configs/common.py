@@ -1,0 +1,88 @@
+"""Shared input-spec builders for the assigned shape cells.
+
+Every builder returns a dict of jax.ShapeDtypeStruct — weak-type-correct,
+shardable, zero-allocation stand-ins consumed by `jit(...).lower(**specs)`.
+
+Shape semantics (task spec):
+  train_4k / prefill_32k  -> full-sequence step at (global_batch, seq_len)
+  decode_32k / long_500k  -> ONE new token against a cache of seq_len
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPE_DEFS
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _bs(shape: str, smoke: bool) -> tuple[int, int]:
+    d = SHAPE_DEFS[shape]
+    if smoke:
+        return (2, min(d["seq_len"], 64))
+    return (d["global_batch"], d["seq_len"])
+
+
+def lm_train_specs(cfg: ModelConfig, shape: str, smoke: bool = False) -> dict:
+    B, S = _bs(shape, smoke)
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def lm_prefill_specs(cfg: ModelConfig, shape: str, smoke: bool = False) -> dict:
+    B, S = _bs(shape, smoke)
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def _cache_specs(cfg: ModelConfig, B: int, S: int, family: str) -> dict:
+    L_ = cfg.n_layers
+    if family == "kv":
+        kv = (L_, B, S, cfg.kv_heads, cfg.hd)
+        return {"k": SDS(kv, jnp.bfloat16), "v": SDS(kv, jnp.bfloat16)}
+    if family == "mla":
+        return {
+            "c_kv": SDS((L_, B, S, cfg.kv_lora_rank), jnp.bfloat16),
+            "k_pe": SDS((L_, B, S, cfg.rope_head_dim), jnp.bfloat16),
+        }
+    if family == "mamba1":
+        return {
+            "conv": SDS((L_, B, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+            "ssm": SDS((L_, B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        }
+    if family == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        e = cfg.attn_every
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        H = cfg.d_inner // cfg.ssm_headdim
+        return {
+            "mamba": {
+                "conv": SDS((g, e, B, cfg.d_conv - 1, conv_ch), jnp.float32),
+                "ssm": SDS((g, e, B, H, cfg.ssm_state, cfg.ssm_headdim),
+                           jnp.float32),
+            },
+            "attn": {
+                "k": SDS((g, B, S, cfg.kv_heads, cfg.hd), jnp.bfloat16),
+                "v": SDS((g, B, S, cfg.kv_heads, cfg.hd), jnp.bfloat16),
+            },
+        }
+    raise ValueError(family)
+
+
+def lm_decode_specs(cfg: ModelConfig, shape: str, family: str = "kv",
+                    smoke: bool = False) -> dict:
+    """Inputs of decode_step: token (B,), state {kv/cache, index}."""
+    B, S = _bs(shape, smoke)
+    state: dict = {"index": SDS((), jnp.int32)}
+    if family == "hybrid":
+        state["cache"] = _cache_specs(cfg, B, S, family)
+    else:
+        state["kv"] = _cache_specs(cfg, B, S, family)
+    if family == "vlm_kv":
+        state["kv"] = _cache_specs(cfg, B, S, "kv")
+        state["next_pos"] = SDS((B,), jnp.int32)
+    return {"token": SDS((B,), jnp.int32), "state": state}

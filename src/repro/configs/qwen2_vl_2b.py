@@ -1,0 +1,93 @@
+"""qwen2-vl-2b — 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936,
+M-RoPE, vision frontend stubbed as precomputed patch embeddings
+[arXiv:2409.12191].
+
+Shape semantics: 1024 image patches (32x32 grid) + (seq_len - 1024) text
+tokens for full-sequence steps; decode is text-only continuation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+N_PATCHES = 1024
+GRID = (32, 32)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        kind="vlm",
+        n_layers=28,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=2,
+        d_ff=8960,
+        vocab=151936,
+        qkv_bias=True,
+        rope_theta=1e6,
+        mrope=True,
+        mrope_sections=(16, 24, 24),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b-smoke",
+        kind="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=256,
+        qkv_bias=True,
+        mrope=True,
+        mrope_sections=(4, 2, 2),
+        param_dtype="float32",
+        activation_dtype="float32",
+        remat=False,
+    )
+
+
+def _split(shape: str, smoke: bool) -> tuple[int, int, int, tuple[int, int]]:
+    d = common.SHAPE_DEFS[shape]
+    if smoke:
+        B, S = 2, 64
+        n_patch, grid = 16, (4, 4)
+    else:
+        B, S = d["global_batch"], d["seq_len"]
+        n_patch, grid = N_PATCHES, GRID
+    return B, S, n_patch, grid
+
+
+def input_specs(shape: str, smoke: bool = False) -> dict:
+    cfg = smoke_config() if smoke else full_config()
+    B, S, n_patch, grid = _split(shape, smoke)
+    step = common.SHAPE_DEFS[shape]["step"]
+    n_text = S - n_patch
+    if step in ("train", "prefill"):
+        specs = {
+            "tokens": SDS((B, n_text), jnp.int32),
+            "patch_embeds": SDS((B, n_patch, cfg.d_model), jnp.bfloat16),
+            "positions_3d": SDS((B, S, 3), jnp.int32),
+        }
+        if step == "train":
+            specs["labels"] = SDS((B, S), jnp.int32)
+            specs["loss_mask"] = SDS((B, S), jnp.float32)
+        return specs
+    # decode
+    L_ = cfg.n_layers
+    kv = (L_, B, S, cfg.kv_heads, cfg.hd)
+    return {
+        "token": SDS((B,), jnp.int32),
+        "state": {
+            "kv": {"k": SDS(kv, jnp.bfloat16), "v": SDS(kv, jnp.bfloat16)},
+            "index": SDS((), jnp.int32),
+            "next_pos": SDS((B,), jnp.int32),
+        },
+    }

@@ -1,0 +1,83 @@
+"""seamless-m4t-medium — 12L enc + 12L dec, d_model=1024 16H d_ff=4096
+vocab=256206, speech frontend stubbed as precomputed frame embeddings
+[arXiv:2308.11596].
+
+Shape semantics: source length = seq_len // 4 (fbank frames after the
+conformer downsampler the stub replaces), target length = seq_len.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        kind="encdec",
+        n_layers=12,
+        n_encoder_layers=12,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab=256206,
+        gated_mlp=False,   # conformer/NLLB-style plain FFN
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium-smoke",
+        kind="encdec",
+        n_layers=2,
+        n_encoder_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=256,
+        param_dtype="float32",
+        activation_dtype="float32",
+        remat=False,
+    )
+
+
+def _src_len(seq_len: int) -> int:
+    return max(seq_len // 4, 8)
+
+
+def input_specs(shape: str, smoke: bool = False) -> dict:
+    cfg = smoke_config() if smoke else full_config()
+    d = common.SHAPE_DEFS[shape]
+    B, S = (2, min(d["seq_len"], 64)) if smoke else (d["global_batch"],
+                                                     d["seq_len"])
+    T = _src_len(S)
+    if d["step"] == "train":
+        return {
+            "src_embeds": SDS((B, T, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    if d["step"] == "prefill":
+        return {
+            "src_embeds": SDS((B, T, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((B, S), jnp.int32),
+        }
+    # decode: one token against self-attn cache of S + cross cache of T
+    L_ = cfg.n_layers
+    kv = (L_, B, S, cfg.kv_heads, cfg.hd)
+    cross = (L_, B, T, cfg.kv_heads, cfg.hd)
+    return {
+        "token": SDS((B,), jnp.int32),
+        "state": {
+            "kv": {"k": SDS(kv, jnp.bfloat16), "v": SDS(kv, jnp.bfloat16)},
+            "cross": {"k": SDS(cross, jnp.bfloat16),
+                      "v": SDS(cross, jnp.bfloat16)},
+            "index": SDS((), jnp.int32),
+        },
+    }

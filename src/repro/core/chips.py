@@ -1,0 +1,84 @@
+"""Hardware constants for the target platform (TPU v5e) and roofline math.
+
+The paper's platform is an RTX 4070 (29.15 TFLOP/s fp32, 504.2 GB/s, ridge
+point 59 FLOPs/B). Our target is TPU v5e with the constants mandated by the
+task spec: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops: dict[str, float]   # dtype -> FLOP/s
+    hbm_bw: float                  # B/s
+    hbm_bytes: float               # B
+    vmem_bytes: float              # B (per core)
+    ici_link_bw: float             # B/s per link (one direction)
+    ici_links: int                 # links per chip (2D torus: 4)
+    clock_hz: float
+    mxu_dim: int                   # systolic array edge
+    sublane: int                   # second-minor tiling granularity
+    lane: int                      # minor tiling granularity
+    idle_power_w: float
+    mxu_power_w: float             # max dynamic power of compute path
+    hbm_power_w: float             # max dynamic power of HBM path
+    tdp_w: float
+
+    def peak(self, dtype: str = "bf16") -> float:
+        return self.peak_flops[dtype]
+
+    def ridge_point(self, dtype: str = "bf16") -> float:
+        """FLOPs/byte at which compute time == memory time."""
+        return self.peak(dtype) / self.hbm_bw
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops={
+        "bf16": 197e12,
+        "int8": 394e12,
+        "f32": 197e12 / 4,  # fp32 runs through the MXU at 1/4 bf16 rate
+    },
+    hbm_bw=819e9,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+    ici_link_bw=50e9,
+    ici_links=4,
+    clock_hz=940e6,
+    mxu_dim=128,
+    sublane=8,
+    lane=128,
+    idle_power_w=60.0,
+    mxu_power_w=95.0,
+    hbm_power_w=45.0,
+    tdp_w=200.0,
+)
+
+# The paper's chip, kept for the Fig-1 comparison benchmark.
+RTX_4070 = ChipSpec(
+    name="rtx_4070",
+    peak_flops={"f32": 29.15e12, "bf16": 29.15e12},
+    hbm_bw=504.2e9,
+    hbm_bytes=12 * 2**30,
+    vmem_bytes=48 * 2**10 * 46,  # 48 KiB smem x 46 SMs (occupancy analogue only)
+    ici_link_bw=0.0,
+    ici_links=0,
+    clock_hz=1.92e9,
+    mxu_dim=16,
+    sublane=8,
+    lane=32,
+    idle_power_w=35.0,
+    mxu_power_w=130.0,
+    hbm_power_w=35.0,
+    tdp_w=200.0,
+)
+
+
+DTYPE_BYTES = {"bf16": 2, "f32": 4, "float32": 4, "bfloat16": 2, "int8": 1,
+               "f16": 2, "float16": 2, "s8": 1, "u8": 1, "s32": 4, "u32": 4,
+               "f64": 8, "pred": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8,
+               "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5}

@@ -1,0 +1,66 @@
+"""TPU power/energy model — the paper's energy axis, lifted to step level.
+
+Per-kernel energy comes from `hwsim` (power x runtime). This module adds the
+*framework-level* accounting: given a roofline report for a train/serve step,
+estimate per-chip power from duty cycles, then energy per step / per token,
+and the paper's ETA-style tradeoff metric (energy-delay product) used by the
+autotuner's `objective="energy"` / `"edp"` modes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.chips import TPU_V5E, ChipSpec
+from repro.core.roofline import RooflineReport
+
+
+@dataclasses.dataclass
+class EnergyReport:
+    name: str
+    n_chips: int
+    step_s: float
+    chip_power_w: float
+    system_power_w: float
+    energy_per_step_j: float
+    tokens_per_step: float
+    energy_per_token_j: float
+    edp: float                      # energy-delay product (J*s)
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def step_power_w(report: RooflineReport, chip: ChipSpec = TPU_V5E,
+                 ici_power_w: float = 12.0) -> float:
+    """Duty-cycle power model. At the overlap bound, each subsystem is busy
+    for its own term's fraction of the bound time."""
+    bound = max(report.bound_s, 1e-12)
+    duty_mxu = min(report.compute_s / bound, 1.0)
+    duty_hbm = min(report.memory_s / bound, 1.0)
+    duty_ici = min(report.collective_s / bound, 1.0)
+    p = (chip.idle_power_w
+         + chip.mxu_power_w * duty_mxu
+         + chip.hbm_power_w * duty_hbm
+         + ici_power_w * duty_ici)
+    return min(p, chip.tdp_w)
+
+
+def energy_report(report: RooflineReport, *, tokens_per_step: float,
+                  chip: ChipSpec = TPU_V5E,
+                  step_s: float | None = None) -> EnergyReport:
+    step = step_s if step_s is not None else report.bound_s
+    p_chip = step_power_w(report, chip)
+    p_sys = p_chip * report.n_chips
+    e_step = p_sys * step
+    return EnergyReport(
+        name=report.name,
+        n_chips=report.n_chips,
+        step_s=step,
+        chip_power_w=p_chip,
+        system_power_w=p_sys,
+        energy_per_step_j=e_step,
+        tokens_per_step=tokens_per_step,
+        energy_per_token_j=e_step / max(tokens_per_step, 1e-12),
+        edp=e_step * step,
+    )

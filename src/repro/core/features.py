@@ -1,0 +1,103 @@
+"""GEMM feature engineering — the paper's Algorithm 1 (PREPROCESSDATA +
+COMPUTEGEMMCHARS), extended with the TPU-static features the profiler can
+derive without running anything (grid size, VMEM working set, occupancy
+analogue, alignment waste)."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.chips import DTYPE_BYTES, TPU_V5E
+from repro.core.hwsim import VMEM_USABLE_FRACTION, GemmConfig
+
+# Columns fed to the models (order matters for the jitted predictor path).
+NUMERIC_FEATURES = [
+    "m", "n", "k",
+    "block_m", "block_n", "block_k",
+    "stages", "alpha", "beta", "dtype_bytes",
+    "mxn", "mxk", "nxk", "mxnxk",
+    "total_flops", "bytes_accessed", "arithmetic_intensity",
+    "grid_steps", "vmem_working_set", "max_inflight_buffers",
+    "alignment_waste", "layout_a_t", "layout_b_t",
+    # physics-informed features (beyond-paper; EXPERIMENTS.md §Perf-pred):
+    # naive roofline terms from *published* chip specs + tiling algebra.
+    # These are static (pre-execution); the learned model supplies the
+    # corrections (layout efficiency, VPU fallback, pipeline overlap, ...).
+    "refetch_bytes", "naive_compute_ms", "naive_memory_ms",
+    "padded_compute_ms", "naive_overhead_ms",
+]
+TARGETS = ["runtime_ms", "power_w", "energy_j", "tflops"]
+
+
+def config_features(cfg: GemmConfig) -> dict[str, float]:
+    """Static (pre-execution) features for one GEMM config."""
+    c = TPU_V5E
+    in_bytes = DTYPE_BYTES[cfg.dtype]
+    bm, bn, bk = cfg.block_m, cfg.block_n, cfg.block_k
+    grid_steps = (
+        math.ceil(cfg.m / bm) * math.ceil(cfg.n / bn) * math.ceil(cfg.k / bk)
+    )
+    single = (bm * bk + bk * bn) * in_bytes + bm * bn * 4
+    max_buffers = int(c.vmem_bytes * VMEM_USABLE_FRACTION // max(single, 1))
+    total_flops = 2.0 * cfg.m * cfg.n * cfg.k
+    bytes_accessed = in_bytes * (cfg.m * cfg.k + cfg.k * cfg.n) + 4.0 * cfg.m * cfg.n
+    mxu = c.mxu_dim
+    padded = (
+        grid_steps
+        * math.ceil(bm / mxu) * math.ceil(bn / mxu) * math.ceil(bk / mxu)
+        * (2 * mxu ** 3)
+    )
+    grid_m = math.ceil(cfg.m / bm)
+    grid_n = math.ceil(cfg.n / bn)
+    refetch_bytes = (
+        grid_n * cfg.m * cfg.k * in_bytes     # A re-read per N-tile
+        + grid_m * cfg.k * cfg.n * in_bytes   # B re-read per M-tile
+        + cfg.m * cfg.n * 4.0 * (2.0 if cfg.beta != 0.0 else 1.0)
+    )
+    peak = c.peak(cfg.dtype)
+    return {
+        "refetch_bytes": refetch_bytes,
+        "naive_compute_ms": total_flops / peak * 1e3,
+        "naive_memory_ms": refetch_bytes / c.hbm_bw * 1e3,
+        "padded_compute_ms": padded / peak * 1e3,
+        "naive_overhead_ms": grid_steps * 1e-7 * 1e3,
+        "m": float(cfg.m),
+        "n": float(cfg.n),
+        "k": float(cfg.k),
+        "block_m": float(bm),
+        "block_n": float(bn),
+        "block_k": float(bk),
+        "stages": float(cfg.stages),
+        "alpha": float(cfg.alpha),
+        "beta": float(cfg.beta),
+        "dtype_bytes": float(in_bytes),
+        "mxn": float(cfg.m * cfg.n),
+        "mxk": float(cfg.m * cfg.k),
+        "nxk": float(cfg.n * cfg.k),
+        "mxnxk": float(cfg.m) * cfg.n * cfg.k,
+        "total_flops": total_flops,
+        "bytes_accessed": bytes_accessed,
+        "arithmetic_intensity": total_flops / max(bytes_accessed, 1.0),
+        "grid_steps": float(grid_steps),
+        "vmem_working_set": float(single),
+        "max_inflight_buffers": float(max_buffers),
+        "alignment_waste": padded / max(total_flops, 1.0),
+        "layout_a_t": 1.0 if cfg.layout[0] == "t" else 0.0,
+        "layout_b_t": 1.0 if cfg.layout[1] == "t" else 0.0,
+    }
+
+
+def features_matrix(cfgs: list[GemmConfig]) -> np.ndarray:
+    """(n_cfgs, len(NUMERIC_FEATURES)) feature matrix (for jitted ranking)."""
+    rows = np.empty((len(cfgs), len(NUMERIC_FEATURES)))
+    for i, cfg in enumerate(cfgs):
+        f = config_features(cfg)
+        rows[i] = [f[k] for k in NUMERIC_FEATURES]
+    return rows
+
+
+def table_from_configs(cfgs: list[GemmConfig]) -> dict[str, np.ndarray]:
+    mat = features_matrix(cfgs)
+    return {k: mat[:, i] for i, k in enumerate(NUMERIC_FEATURES)}

@@ -1,0 +1,250 @@
+"""Calibrated analytical TPU timing/power simulator.
+
+This container has no TPU (or GPU), so — per the reproduction plan in
+DESIGN.md §2 — a physics-style analytical model of a TPU v5e core plays the
+role the RTX 4070 plays in the paper: it is *the measured hardware* that the
+profiling harness sweeps and the ML models learn to predict. The functional
+forms encode the paper's observed phenomena translated to TPU
+microarchitecture:
+
+  * MXU quantization: a (bm, bn, bk) block matmul consumes
+    ceil(bm/128)*ceil(bn/128)*ceil(bk/128) systolic passes — misaligned or
+    tiny tiles waste lanes exactly the way sub-warp blocks waste SPs in the
+    paper's tile=1/4 study.
+  * VMEM-limited concurrency (the paper's Table I SM-occupancy cliff):
+    double-buffered block working sets must fit in VMEM; when they don't,
+    the pipeline degrades to serial HBM<->compute, and `max_inflight_buffers`
+    (our occupancy analogue) drops to 1.
+  * Grid overhead: each grid step has a fixed sequencer cost, so tiny tiles
+    explode the grid (the paper's "block scheduler flooding" analogue).
+  * Roofline coupling: runtime = startup + max(compute, memory) when
+    pipelined, + grid overhead; power = idle + duty-cycle-weighted MXU and
+    HBM dynamic power, saturating toward TDP for large compute-bound GEMMs
+    (the paper's 80-100W base -> stepped saturation behaviour).
+
+Measurement noise (multiplicative lognormal on runtime, additive Gaussian on
+power, occasional thermal-drift samples) keeps the learning problem honest —
+the ML models see a noisy, non-deterministic "hardware", not a formula.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.chips import DTYPE_BYTES, TPU_V5E, ChipSpec
+
+# Fixed microarchitectural cost constants (calibration surface).
+GRID_STEP_OVERHEAD_S = 8.0e-8     # per grid-step sequencer cost
+KERNEL_STARTUP_S = 4.0e-6         # pallas_call launch + pipeline warmup
+DMA_ISSUE_OVERHEAD_S = 2.0e-8     # per-block DMA issue cost
+VMEM_USABLE_FRACTION = 0.75       # compiler scratch eats the rest
+LAYOUT_EFFICIENCY = {             # HBM efficiency per operand layout
+    "n": 1.0,                     # contiguous reads
+    "t": 0.62,                    # strided (transposed) reads
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmConfig:
+    """One GEMM measurement point — mirrors the paper's swept parameters."""
+
+    m: int
+    n: int
+    k: int
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 512
+    dtype: str = "bf16"            # input dtype; accumulation is fp32
+    layout: str = "nn"             # nn / nt / tn / tt
+    alpha: float = 1.0
+    beta: float = 0.0
+    stages: int = 2                # pipeline depth (double buffering = 2)
+
+    def key(self) -> tuple:
+        return dataclasses.astuple(self)
+
+
+@dataclasses.dataclass
+class GemmTelemetry:
+    """What the 'hardware' reports for one run (the profiler's row)."""
+
+    runtime_ms: float
+    power_w: float
+    energy_j: float
+    tflops: float
+    # ncu-style derived metrics
+    compute_time_ms: float
+    memory_time_ms: float
+    overhead_ms: float
+    mxu_utilization: float         # useful FLOPs / peak over runtime
+    hbm_utilization: float
+    vmem_working_set_bytes: int
+    max_inflight_buffers: int      # occupancy analogue (paper Table I)
+    pipelined: bool
+    grid_steps: int
+    arithmetic_intensity: float
+    bound: str                     # "compute" | "memory" | "overhead"
+    temperature_c: float
+    valid: bool                    # False => config uncompilable (VMEM OOM)
+
+
+class TpuGemmSimulator:
+    """Analytical timing/power model of a tiled GEMM on one TPU core."""
+
+    def __init__(self, chip: ChipSpec = TPU_V5E, noise: float = 0.03,
+                 seed: int | None = 0):
+        self.chip = chip
+        self.noise = noise
+        self._rng = np.random.default_rng(seed)
+        self._temp_c = 42.0  # slow thermal state, drifts with load
+
+    # ---------- deterministic core model ----------
+
+    def _analyze(self, cfg: GemmConfig) -> GemmTelemetry:
+        c = self.chip
+        in_bytes = DTYPE_BYTES[cfg.dtype]
+        acc_bytes = 4  # fp32 accumulators
+        bm, bn, bk = cfg.block_m, cfg.block_n, cfg.block_k
+
+        grid_m = math.ceil(cfg.m / bm)
+        grid_n = math.ceil(cfg.n / bn)
+        steps_k = math.ceil(cfg.k / bk)
+        grid_steps = grid_m * grid_n * steps_k
+
+        # --- VMEM working set & occupancy analogue ---
+        block_in_bytes = (bm * bk + bk * bn) * in_bytes
+        block_out_bytes = bm * bn * acc_bytes
+        single = block_in_bytes + block_out_bytes
+        usable = c.vmem_bytes * VMEM_USABLE_FRACTION
+        max_buffers = int(usable // max(single, 1))
+        if max_buffers < 1:
+            # Block does not fit in VMEM at all: uncompilable config.
+            return GemmTelemetry(
+                runtime_ms=float("nan"), power_w=float("nan"),
+                energy_j=float("nan"), tflops=0.0, compute_time_ms=0.0,
+                memory_time_ms=0.0, overhead_ms=0.0, mxu_utilization=0.0,
+                hbm_utilization=0.0, vmem_working_set_bytes=int(single),
+                max_inflight_buffers=0, pipelined=False,
+                grid_steps=grid_steps, arithmetic_intensity=0.0,
+                bound="invalid", temperature_c=self._temp_c, valid=False,
+            )
+        stages = min(cfg.stages, max_buffers)
+        pipelined = stages >= 2
+
+        # --- compute time: MXU systolic passes with quantization waste ---
+        mxu = c.mxu_dim
+        passes_per_step = (
+            math.ceil(bm / mxu) * math.ceil(bn / mxu) * math.ceil(bk / mxu)
+        )
+        pass_flops = 2 * mxu * mxu * mxu
+        padded_flops = grid_steps * passes_per_step * pass_flops
+        useful_flops = 2.0 * cfg.m * cfg.n * cfg.k
+        # sub-sublane blocks fall off the MXU fast path onto the VPU
+        vpu_penalty = 1.0
+        if bm < c.sublane or bn < c.sublane:
+            vpu_penalty = 24.0
+        compute_s = padded_flops / c.peak(cfg.dtype) * vpu_penalty
+
+        # --- memory time: HBM traffic with layout efficiency ---
+        lay_a = LAYOUT_EFFICIENCY[cfg.layout[0]]
+        lay_b = LAYOUT_EFFICIENCY[cfg.layout[1]]
+        a_traffic = grid_n * cfg.m * cfg.k * in_bytes  # A refetched per N-tile
+        b_traffic = grid_m * cfg.k * cfg.n * in_bytes  # B refetched per M-tile
+        c_traffic = cfg.m * cfg.n * acc_bytes
+        if cfg.beta != 0.0:
+            c_traffic *= 2  # read-modify-write
+        hbm_bytes = a_traffic / lay_a + b_traffic / lay_b + c_traffic
+        memory_s = hbm_bytes / c.hbm_bw
+
+        # --- fixed overheads ---
+        overhead_s = (
+            KERNEL_STARTUP_S
+            + grid_steps * GRID_STEP_OVERHEAD_S
+            + grid_steps * (2 + (cfg.beta != 0)) * DMA_ISSUE_OVERHEAD_S
+        )
+
+        inner_s = max(compute_s, memory_s) if pipelined else compute_s + memory_s
+        runtime_s = inner_s + overhead_s
+
+        actual_bytes = a_traffic + b_traffic + c_traffic
+        tflops = useful_flops / runtime_s / 1e12
+        mxu_util = useful_flops / (runtime_s * c.peak(cfg.dtype))
+        hbm_util = actual_bytes / (runtime_s * c.hbm_bw)
+        if overhead_s > inner_s:
+            bound = "overhead"
+        elif compute_s >= memory_s:
+            bound = "compute"
+        else:
+            bound = "memory"
+
+        # --- power: idle + duty-weighted dynamic terms, TDP-capped ---
+        duty_mxu = min(compute_s / runtime_s, 1.0) / max(vpu_penalty ** 0.5, 1.0)
+        duty_hbm = min(memory_s / runtime_s, 1.0)
+        dtype_power_scale = 1.0 if cfg.dtype == "bf16" else 0.82
+        power_w = (
+            c.idle_power_w
+            + c.mxu_power_w * duty_mxu * dtype_power_scale
+            + c.hbm_power_w * duty_hbm
+        )
+        power_w = min(power_w, c.tdp_w)
+
+        return GemmTelemetry(
+            runtime_ms=runtime_s * 1e3,
+            power_w=power_w,
+            energy_j=power_w * runtime_s,
+            tflops=tflops,
+            compute_time_ms=compute_s * 1e3,
+            memory_time_ms=memory_s * 1e3,
+            overhead_ms=overhead_s * 1e3,
+            mxu_utilization=mxu_util,
+            hbm_utilization=hbm_util,
+            vmem_working_set_bytes=int(single * stages),
+            max_inflight_buffers=max_buffers,
+            pipelined=pipelined,
+            grid_steps=grid_steps,
+            arithmetic_intensity=useful_flops / max(actual_bytes, 1),
+            bound=bound,
+            temperature_c=self._temp_c,
+            valid=True,
+        )
+
+    # ---------- public API ----------
+
+    def analyze(self, cfg: GemmConfig) -> GemmTelemetry:
+        """Noise-free analytical telemetry (the 'oracle' view)."""
+        return self._analyze(cfg)
+
+    def measure(self, cfg: GemmConfig) -> GemmTelemetry:
+        """One noisy 'hardware measurement' — what the profiler records."""
+        t = self._analyze(cfg)
+        if not t.valid:
+            return t
+        rng = self._rng
+        # thermal state follows load slowly
+        target_temp = 40.0 + 35.0 * (t.power_w / self.chip.tdp_w)
+        self._temp_c += 0.2 * (target_temp - self._temp_c) + rng.normal(0, 0.3)
+        runtime_ms = t.runtime_ms * float(np.exp(rng.normal(0.0, self.noise)))
+        # rare scheduler hiccup (long-tail), like a shared-machine blip
+        if rng.random() < 0.01:
+            runtime_ms *= 1.0 + abs(rng.normal(0.05, 0.05))
+        power_w = t.power_w + float(rng.normal(0.0, 1.5)) + 0.08 * (self._temp_c - 42.0)
+        power_w = float(np.clip(power_w, self.chip.idle_power_w * 0.9, self.chip.tdp_w))
+        energy_j = power_w * runtime_ms / 1e3
+        tflops = (2.0 * cfg.m * cfg.n * cfg.k) / (runtime_ms / 1e3) / 1e12
+        return dataclasses.replace(
+            t, runtime_ms=runtime_ms, power_w=power_w, energy_j=energy_j,
+            tflops=tflops, temperature_c=self._temp_c,
+        )
+
+    def occupancy_report(self, tiles: list[int], *, bk: int | None = None,
+                         dtype: str = "bf16") -> dict[int, int]:
+        """Paper Table I analogue: max in-flight VMEM buffers per tile size."""
+        out = {}
+        for t in tiles:
+            cfg = GemmConfig(m=4096, n=4096, k=4096, block_m=t, block_n=t,
+                             block_k=bk if bk is not None else t, dtype=dtype)
+            out[t] = self._analyze(cfg).max_inflight_buffers
+        return out

@@ -1,0 +1,53 @@
+"""From-scratch ML stack (no sklearn in this environment).
+
+Implements the paper's modelling pipeline:
+  StandardScaler -> MultiOutput(RandomForestRegressor(n_estimators=100, max_depth=6))
+plus the comparison models from Table VI (linear regression, gradient-boosted
+trees standing in for XGBoost, and a stacking ensemble).
+
+All estimators follow a minimal fit/predict protocol and operate on float64
+numpy arrays. Trees are histogram-based (quantile binning) so training the
+paper-scale dataset (~16k rows) takes seconds on one CPU core. Fitted forests
+can be exported to flat arrays for jit-compiled prediction inside JAX
+(see `jaxpredict.py`), which the autotuner uses.
+"""
+
+from repro.core.mlperf.tree import DecisionTreeRegressor, Binner
+from repro.core.mlperf.forest import RandomForestRegressor
+from repro.core.mlperf.gbdt import GradientBoostedTreesRegressor
+from repro.core.mlperf.linreg import LinearRegression, Ridge
+from repro.core.mlperf.stacking import StackingRegressor
+from repro.core.mlperf.pipeline import (
+    StandardScaler,
+    TabularPreprocessor,
+    Pipeline,
+    train_test_split,
+)
+from repro.core.mlperf.metrics import (
+    r2_score,
+    mse,
+    mae,
+    median_pct_error,
+    mean_pct_error,
+    regression_report,
+)
+
+__all__ = [
+    "DecisionTreeRegressor",
+    "Binner",
+    "RandomForestRegressor",
+    "GradientBoostedTreesRegressor",
+    "LinearRegression",
+    "Ridge",
+    "StackingRegressor",
+    "StandardScaler",
+    "TabularPreprocessor",
+    "Pipeline",
+    "train_test_split",
+    "r2_score",
+    "mse",
+    "mae",
+    "median_pct_error",
+    "mean_pct_error",
+    "regression_report",
+]

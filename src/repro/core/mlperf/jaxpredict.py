@@ -1,0 +1,67 @@
+"""Jit-compiled random-forest inference.
+
+The sklearn original can only predict in Python. Here the fitted forest is
+exported to flat arrays (`RandomForestRegressor.to_flat_arrays`) and traversed
+with a fixed-depth `lax.fori_loop`, so the performance predictor can run
+*inside* jitted code — e.g. ranking thousands of candidate GEMM block configs
+in one XLA call during autotuning.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def _forest_predict(feature, threshold, left, right, value, X, *, max_depth: int):
+    """feature/threshold/left/right: (T, M); value: (T, M, K); X: (N, F).
+    Returns (N, K) mean-over-trees prediction.
+    """
+
+    def one_tree(feat_t, thr_t, left_t, right_t, val_t, x):
+        # x: (F,). Descend max_depth steps; leaves self-loop via feature<0.
+        def step(_, node):
+            f = feat_t[node]
+            is_leaf = f < 0
+            fx = x[jnp.maximum(f, 0)]
+            nxt = jnp.where(fx <= thr_t[node], left_t[node], right_t[node])
+            return jnp.where(is_leaf, node, nxt)
+
+        node = jax.lax.fori_loop(0, max_depth + 1, step, jnp.int32(0))
+        return val_t[node]  # (K,)
+
+    # vmap over samples, then over trees
+    per_sample = jax.vmap(one_tree, in_axes=(None, None, None, None, None, 0))
+    per_tree = jax.vmap(per_sample, in_axes=(0, 0, 0, 0, 0, None))
+    preds = per_tree(feature, threshold, left, right, value, X)  # (T, N, K)
+    return preds.mean(axis=0)
+
+
+class JaxForestPredictor:
+    """Wraps a fitted mlperf RandomForestRegressor for jitted inference."""
+
+    def __init__(self, forest):
+        flat = forest.to_flat_arrays()
+        self.feature = jnp.asarray(flat["feature"])
+        self.threshold = jnp.asarray(flat["threshold"])
+        self.left = jnp.asarray(flat["left"])
+        self.right = jnp.asarray(flat["right"])
+        self.value = jnp.asarray(flat["value"])
+        self.max_depth = int(flat["max_depth"])
+        self.n_targets = int(self.value.shape[-1])
+
+    def __call__(self, X) -> jax.Array:
+        X = jnp.asarray(X, dtype=jnp.float32)
+        if X.ndim == 1:
+            X = X[None]
+        return _forest_predict(
+            self.feature, self.threshold, self.left, self.right, self.value,
+            X, max_depth=self.max_depth,
+        )
+
+    def predict(self, X) -> np.ndarray:
+        return np.asarray(self(X))

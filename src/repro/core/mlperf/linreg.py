@@ -1,0 +1,79 @@
+"""Ordinary least squares and ridge regression (multi-output).
+
+The paper's baseline model (Tables II/III report its coefficients for the
+tiled-matmul study, Table VI its R^2 on the CUTLASS dataset).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class LinearRegression:
+    def __init__(self, fit_intercept: bool = True):
+        self.fit_intercept = fit_intercept
+        self.coef_: np.ndarray | None = None      # (n_features, n_targets) or (n_features,)
+        self.intercept_: np.ndarray | float = 0.0
+
+    def fit(self, X, y, sample_weight=None):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        squeeze = y.ndim == 1
+        if squeeze:
+            y = y[:, None]
+        if sample_weight is not None:
+            sw = np.sqrt(np.asarray(sample_weight, dtype=np.float64))
+            X = X * sw[:, None]
+            y = y * sw[:, None]
+        if self.fit_intercept:
+            Xd = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        else:
+            Xd = X
+        beta, *_ = np.linalg.lstsq(Xd, y, rcond=None)
+        if self.fit_intercept:
+            self.coef_ = beta[:-1]
+            self.intercept_ = beta[-1]
+        else:
+            self.coef_ = beta
+            self.intercept_ = np.zeros(y.shape[1])
+        if squeeze:
+            self.coef_ = self.coef_[:, 0]
+            self.intercept_ = float(np.ravel(self.intercept_)[0])
+        self._squeeze = squeeze
+        return self
+
+    def predict(self, X) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        return X @ self.coef_ + self.intercept_
+
+
+class Ridge(LinearRegression):
+    def __init__(self, alpha: float = 1.0, fit_intercept: bool = True):
+        super().__init__(fit_intercept=fit_intercept)
+        self.alpha = alpha
+
+    def fit(self, X, y, sample_weight=None):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        squeeze = y.ndim == 1
+        if squeeze:
+            y = y[:, None]
+        if sample_weight is not None:
+            sw = np.sqrt(np.asarray(sample_weight, dtype=np.float64))
+            X = X * sw[:, None]
+            y = y * sw[:, None]
+        n, d = X.shape
+        if self.fit_intercept:
+            xm = X.mean(axis=0)
+            ym = y.mean(axis=0)
+            Xc, yc = X - xm, y - ym
+        else:
+            Xc, yc = X, y
+        A = Xc.T @ Xc + self.alpha * np.eye(d)
+        beta = np.linalg.solve(A, Xc.T @ yc)
+        self.coef_ = beta
+        self.intercept_ = ym - xm @ beta if self.fit_intercept else np.zeros(y.shape[1])
+        if squeeze:
+            self.coef_ = self.coef_[:, 0]
+            self.intercept_ = float(np.ravel(self.intercept_)[0])
+        return self

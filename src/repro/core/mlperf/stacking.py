@@ -1,0 +1,84 @@
+"""Stacking ensemble: out-of-fold base-model predictions -> ridge meta-learner.
+
+The paper's best model (Table VI, "Stacking Ensemble"): prediction =
+sum_i w_i * M_i(x) with learned weights. We learn the combination per target
+with a ridge meta-learner on K-fold out-of-fold predictions, which avoids the
+leakage a naive refit-on-train stacking would have.
+"""
+
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from repro.core.mlperf.linreg import Ridge
+
+
+class StackingRegressor:
+    def __init__(
+        self,
+        base_estimators: list,
+        meta_alpha: float = 1e-3,
+        n_folds: int = 5,
+        passthrough: bool = False,
+        random_state: int | None = 0,
+    ):
+        self.base_estimators = base_estimators
+        self.meta_alpha = meta_alpha
+        self.n_folds = n_folds
+        self.passthrough = passthrough
+        self.random_state = random_state
+        self.fitted_bases_: list = []
+        self.meta_: list[Ridge] = []
+        self.n_targets_: int | None = None
+
+    def _meta_features(self, preds: list[np.ndarray], X: np.ndarray) -> np.ndarray:
+        Z = np.concatenate([p.reshape(len(X), -1) for p in preds], axis=1)
+        if self.passthrough:
+            Z = np.concatenate([Z, X], axis=1)
+        return Z
+
+    def fit(self, X, y):
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        if y.ndim == 1:
+            y = y[:, None]
+        self.n_targets_ = y.shape[1]
+        n = len(X)
+        rng = np.random.default_rng(self.random_state)
+        fold = rng.integers(0, self.n_folds, size=n)
+
+        # out-of-fold predictions per base model
+        oof = [np.zeros((n, self.n_targets_)) for _ in self.base_estimators]
+        for k in range(self.n_folds):
+            tr, va = fold != k, fold == k
+            if va.sum() == 0 or tr.sum() == 0:
+                continue
+            for bi, proto in enumerate(self.base_estimators):
+                est = copy.deepcopy(proto)
+                est.fit(X[tr], y[tr])
+                p = est.predict(X[va])
+                oof[bi][va] = p.reshape(va.sum(), -1)
+
+        Z = self._meta_features(oof, X)
+        self.meta_ = []
+        for t in range(self.n_targets_):
+            m = Ridge(alpha=self.meta_alpha)
+            m.fit(Z, y[:, t])
+            self.meta_.append(m)
+
+        # refit bases on all data for inference
+        self.fitted_bases_ = []
+        for proto in self.base_estimators:
+            est = copy.deepcopy(proto)
+            est.fit(X, y)
+            self.fitted_bases_.append(est)
+        return self
+
+    def predict(self, X) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        preds = [est.predict(X).reshape(len(X), -1) for est in self.fitted_bases_]
+        Z = self._meta_features(preds, X)
+        out = np.stack([m.predict(Z) for m in self.meta_], axis=1)
+        return out[:, 0] if self.n_targets_ == 1 else out

@@ -1,0 +1,230 @@
+"""Multi-target performance predictor — the paper's Algorithm 2 pipeline.
+
+  Pipeline([('preprocessor', StandardScaler over numeric features),
+            ('regressor', MultiOutput(RandomForest(n_estimators=100,
+                                                   max_depth=6)))])
+
+predicting [runtime_ms, power_w, energy_j, tflops] simultaneously.
+`model=` selects the Table VI architecture: rf / gbdt / linreg / stacking.
+"""
+
+from __future__ import annotations
+
+import pickle
+
+import numpy as np
+
+from repro.core.features import NUMERIC_FEATURES, TARGETS
+from repro.core.mlperf import (
+    GradientBoostedTreesRegressor,
+    LinearRegression,
+    RandomForestRegressor,
+    StackingRegressor,
+    StandardScaler,
+    regression_report,
+)
+from repro.core.mlperf.jaxpredict import JaxForestPredictor
+
+
+def make_model(name: str, random_state: int = 0, fast: bool = False):
+    """Table VI model zoo. `fast` shrinks ensembles for unit tests."""
+    ne = 24 if fast else 100
+    if name == "rf":
+        return RandomForestRegressor(n_estimators=ne, max_depth=6,
+                                     random_state=random_state, n_jobs=-1)
+    if name == "rf_deep":  # beyond-paper: depth 12 (see EXPERIMENTS §Perf)
+        return RandomForestRegressor(n_estimators=ne, max_depth=12,
+                                     random_state=random_state, n_jobs=-1)
+    if name == "gbdt":
+        return GradientBoostedTreesRegressor(
+            n_estimators=60 if fast else 300, max_depth=5,
+            random_state=random_state)
+    if name == "linreg":
+        return LinearRegression()
+    if name == "stacking":
+        return StackingRegressor(
+            [
+                RandomForestRegressor(n_estimators=ne, max_depth=10,
+                                      random_state=random_state),
+                GradientBoostedTreesRegressor(
+                    n_estimators=60 if fast else 250, max_depth=5,
+                    random_state=random_state),
+                LinearRegression(),
+            ],
+            n_folds=4,
+        )
+    raise ValueError(f"unknown model {name!r}")
+
+
+class PerfPredictor:
+    """fit(table) / predict(table) over dict-of-columns GEMM tables.
+
+    Targets are learned in log-space for runtime/energy (they span 5+ orders
+    of magnitude; the paper's high mean-%-error on energy is exactly the
+    linear-space pathology) — `log_targets=False` reproduces the paper's
+    exact setup for the faithful baseline.
+    """
+
+    LOG_TARGETS = ("runtime_ms", "energy_j", "tflops")
+
+    def __init__(self, model: str = "rf", log_targets: bool = True,
+                 residual: bool = False, random_state: int = 0,
+                 fast: bool = False):
+        """residual=True predicts log(target / analytical_anchor) for the
+        log-scale targets — the anchor (a naive roofline estimate from
+        published chip specs) carries the 5-orders-of-magnitude dynamic
+        range and the forest learns bounded corrections. This is the
+        beyond-paper hybrid analytical+ML mode (EXPERIMENTS.md §Perf-pred);
+        residual=False is the paper-faithful direct-regression mode.
+        """
+        self.model_name = model
+        self.log_targets = log_targets
+        self.residual = residual
+        self.scaler = StandardScaler()
+        # Targets are standardized too: with a shared multi-output tree the
+        # split criterion sums variance across targets, so an unscaled target
+        # (power_w, var ~1e3) would monopolize every split.
+        self.y_scaler = StandardScaler()
+        self.model = make_model(model, random_state=random_state, fast=fast)
+        self.feature_names = list(NUMERIC_FEATURES)
+        self.target_names = list(TARGETS)
+        self._fitted = False
+
+    # ----- table <-> matrix -----
+    def _X(self, table: dict[str, np.ndarray]) -> np.ndarray:
+        cols = [np.asarray(table[k], dtype=np.float64)
+                for k in self.feature_names]
+        return np.stack(cols, axis=1)
+
+    def _anchors(self, table: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """Analytical anchors per log-target (naive roofline estimates)."""
+        rt = (np.maximum(np.asarray(table["naive_compute_ms"], np.float64),
+                         np.asarray(table["naive_memory_ms"], np.float64))
+              + np.asarray(table["naive_overhead_ms"], np.float64))
+        rt = np.maximum(rt, 1e-9)
+        flops = np.asarray(table["total_flops"], np.float64)
+        return {
+            "runtime_ms": rt,
+            "energy_j": rt / 1e3 * 130.0,           # nominal mid-load power
+            "tflops": flops / (rt / 1e3) / 1e12,
+        }
+
+    def _encode_y(self, Y: np.ndarray,
+                  table: dict[str, np.ndarray] | None = None) -> np.ndarray:
+        Y = Y.copy()
+        anchors = self._anchors(table) if (self.residual and table) else {}
+        if self.log_targets:
+            for i, t in enumerate(self.target_names):
+                if t in self.LOG_TARGETS:
+                    y = np.maximum(Y[:, i], 1e-12)
+                    if t in anchors:
+                        y = y / np.maximum(anchors[t], 1e-12)
+                    Y[:, i] = np.log(y)
+        return Y
+
+    def _decode_y(self, Y: np.ndarray,
+                  table: dict[str, np.ndarray] | None = None) -> np.ndarray:
+        Y = Y.copy()
+        anchors = self._anchors(table) if (self.residual and table) else {}
+        if self.log_targets:
+            for i, t in enumerate(self.target_names):
+                if t in self.LOG_TARGETS:
+                    y = np.exp(Y[:, i])
+                    if t in anchors:
+                        y = y * np.maximum(anchors[t], 1e-12)
+                    Y[:, i] = y
+        return Y
+
+    # ----- public API -----
+    def fit(self, table: dict[str, np.ndarray],
+            targets: np.ndarray | None = None) -> "PerfPredictor":
+        X = self._X(table)
+        if targets is None:
+            targets = np.stack(
+                [np.asarray(table[t], dtype=np.float64)
+                 for t in self.target_names], axis=1)
+        Xs = self.scaler.fit_transform(X)
+        self.model.fit(
+            Xs, self.y_scaler.fit_transform(self._encode_y(targets, table)))
+        self._fitted = True
+        return self
+
+    def predict(self, table: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        Y = self.predict_matrix(table)
+        return {t: Y[:, i] for i, t in enumerate(self.target_names)}
+
+    def predict_matrix(self, table: dict[str, np.ndarray]) -> np.ndarray:
+        assert self._fitted, "predictor not fitted"
+        X = self.scaler.transform(self._X(table))
+        Y = np.asarray(self.model.predict(X), dtype=np.float64)
+        if Y.ndim == 1:
+            Y = Y[:, None]
+        return self._decode_y(self.y_scaler.inverse_transform(Y), table)
+
+    def evaluate(self, table: dict[str, np.ndarray]) -> dict:
+        """Table IV: per-target R2/MSE/MAE/median%/mean% report."""
+        truth = np.stack(
+            [np.asarray(table[t], dtype=np.float64)
+             for t in self.target_names], axis=1)
+        pred = self.predict_matrix(table)
+        return regression_report(truth, pred, self.target_names)
+
+    # ----- jitted path (forest models only) -----
+    def jax_predictor(self):
+        """JaxForestPredictor over *scaled* features. Returns (fn, meta):
+        fn(X_raw (N,F) jnp) -> (N, T) decoded predictions via pure jax."""
+        if not isinstance(self.model, RandomForestRegressor):
+            raise TypeError("jitted prediction requires a forest model")
+        import jax.numpy as jnp
+
+        jp = JaxForestPredictor(self.model)
+        mean = jnp.asarray(self.scaler.mean_, dtype=jnp.float32)
+        scale = jnp.asarray(self.scaler.scale_, dtype=jnp.float32)
+        y_mean = jnp.asarray(self.y_scaler.mean_, dtype=jnp.float32)
+        y_scale = jnp.asarray(self.y_scaler.scale_, dtype=jnp.float32)
+        log_mask = jnp.asarray(
+            [1.0 if t in self.LOG_TARGETS else 0.0 for t in self.target_names],
+            dtype=jnp.float32)
+        i_nc = self.feature_names.index("naive_compute_ms")
+        i_nm = self.feature_names.index("naive_memory_ms")
+        i_no = self.feature_names.index("naive_overhead_ms")
+        i_fl = self.feature_names.index("total_flops")
+        residual = self.residual
+        t_idx = {t: i for i, t in enumerate(self.target_names)}
+
+        def fn(X_raw):
+            Xs = (X_raw - mean) / scale
+            Y = jp(Xs) * y_scale + y_mean
+            Y = jnp.where(log_mask > 0, jnp.exp(Y), Y)
+            if residual:
+                rt = (jnp.maximum(X_raw[:, i_nc], X_raw[:, i_nm])
+                      + X_raw[:, i_no])
+                rt = jnp.maximum(rt, 1e-9)
+                anchors = {
+                    "runtime_ms": rt,
+                    "energy_j": rt / 1e3 * 130.0,
+                    "tflops": X_raw[:, i_fl] / (rt / 1e3) / 1e12,
+                }
+                cols = []
+                for t in self.target_names:
+                    col = Y[:, t_idx[t]]
+                    if t in anchors:
+                        col = col * anchors[t]
+                    cols.append(col)
+                Y = jnp.stack(cols, axis=1)
+            return Y
+
+        return fn
+
+    # ----- persistence -----
+    def save(self, path: str) -> None:
+        with open(path, "wb") as f:
+            pickle.dump(self, f)
+
+    @staticmethod
+    def load(path: str) -> "PerfPredictor":
+        with open(path, "rb") as f:
+            obj = pickle.load(f)
+        if not isinstance(obj, PerfPredictor):
+            raise TypeError(f"{path} is not a PerfPredictor checkpoint")
+        return obj

@@ -1,0 +1,145 @@
+"""Profiling harness — the CUTLASS-profiler/ncu analogue.
+
+Systematically sweeps GEMM configurations (matrix dims x block configs x
+layouts x alpha/beta x dtype), "measures" each on the hardware substrate
+(`hwsim.TpuGemmSimulator`) and materializes the training table the paper
+collects (16,128 CUTLASS ops -> our default sweep is >= that).
+
+On a real TPU deployment the same harness runs with `measure_fn` swapped for
+a wall-clock runner around the Pallas kernel; everything downstream (feature
+building, model fitting, autotuning) is measurement-source-agnostic.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from collections.abc import Callable, Iterable
+
+import numpy as np
+
+from repro.core.features import NUMERIC_FEATURES, TARGETS, config_features
+from repro.core.hwsim import GemmConfig, GemmTelemetry, TpuGemmSimulator
+
+# Default sweep axes (the CUTLASS-profiler flag grid, TPU-quantized).
+DIM_CHOICES = (256, 512, 1024, 2048, 3072, 4096, 6144, 8192)
+BLOCK_M_CHOICES = (8, 64, 128, 256, 512)
+BLOCK_N_CHOICES = (128, 256, 512)
+BLOCK_K_CHOICES = (128, 512, 2048)
+LAYOUTS = ("nn", "nt", "tn", "tt")
+ALPHA_BETA = ((1.0, 0.0), (1.0, 1.0), (0.5, 0.5), (2.0, 0.0))
+DTYPES = ("bf16", "f32")
+
+
+def sweep_configs(
+    *,
+    dims: Iterable[int] = DIM_CHOICES,
+    block_m: Iterable[int] = BLOCK_M_CHOICES,
+    block_n: Iterable[int] = BLOCK_N_CHOICES,
+    block_k: Iterable[int] = BLOCK_K_CHOICES,
+    layouts: Iterable[str] = LAYOUTS,
+    alpha_beta: Iterable[tuple[float, float]] = ALPHA_BETA,
+    dtypes: Iterable[str] = DTYPES,
+    n_configs: int | None = None,
+    seed: int = 0,
+) -> list[GemmConfig]:
+    """Cartesian sweep, subsampled to `n_configs` if given.
+
+    Matrix dims are sampled as (m, n, k) triples from `dims` (the paper
+    sweeps m/n/k independently) rather than the full cube, to keep the
+    blocks x layouts x scalars cube as the dominant factor like CUTLASS'
+    kernel-variant grid.
+    """
+    rng = np.random.default_rng(seed)
+    dims = list(dims)
+    triples = [(m, n, k) for m in dims for n in dims for k in dims]
+    rng.shuffle(triples)
+    blocks = list(itertools.product(block_m, block_n, block_k))
+    cfgs: list[GemmConfig] = []
+    lay = list(layouts)
+    ab = list(alpha_beta)
+    dts = list(dtypes)
+    # round-robin dims against the full (block, layout, ab, dtype) grid
+    combo = list(itertools.product(blocks, lay, ab, dts))
+    i = 0
+    target = n_configs or (len(combo) * 24)
+    while len(cfgs) < target:
+        (bm, bn, bk), l, (a, b), dt = combo[i % len(combo)]
+        m, n, k = triples[i % len(triples)]
+        cfgs.append(GemmConfig(m=m, n=n, k=k, block_m=bm, block_n=bn,
+                               block_k=bk, dtype=dt, layout=l, alpha=a,
+                               beta=b))
+        i += 1
+    return cfgs
+
+
+def profile_configs(
+    cfgs: list[GemmConfig],
+    sim: TpuGemmSimulator | None = None,
+    *,
+    measure_fn: Callable[[GemmConfig], GemmTelemetry] | None = None,
+    drop_invalid: bool = True,
+    progress_every: int = 0,
+) -> dict[str, np.ndarray]:
+    """Run the sweep; return dict-of-columns (features + targets + extras)."""
+    sim = sim or TpuGemmSimulator(seed=0)
+    measure = measure_fn or sim.measure
+    rows: list[dict[str, float]] = []
+    t0 = time.time()
+    for i, cfg in enumerate(cfgs):
+        tel = measure(cfg)
+        if drop_invalid and not tel.valid:
+            continue
+        row = config_features(cfg)
+        row["layout"] = cfg.layout
+        row["dtype"] = cfg.dtype
+        row["runtime_ms"] = tel.runtime_ms
+        row["power_w"] = tel.power_w
+        row["energy_j"] = tel.energy_j
+        row["tflops"] = tel.tflops
+        row["mxu_utilization"] = tel.mxu_utilization
+        row["hbm_utilization"] = tel.hbm_utilization
+        row["temperature_c"] = tel.temperature_c
+        row["bound"] = tel.bound
+        rows.append(row)
+        if progress_every and (i + 1) % progress_every == 0:
+            print(f"profiled {i + 1}/{len(cfgs)} ({time.time() - t0:.1f}s)")
+    if not rows:
+        raise RuntimeError("no valid configurations in sweep")
+    table: dict[str, np.ndarray] = {}
+    for key in rows[0]:
+        vals = [r[key] for r in rows]
+        if isinstance(vals[0], str):
+            table[key] = np.array(vals, dtype=object)
+        else:
+            table[key] = np.array(vals, dtype=np.float64)
+    return table
+
+
+def collect_dataset(n_configs: int = 16128, seed: int = 0,
+                    sim: TpuGemmSimulator | None = None,
+                    progress_every: int = 0) -> dict[str, np.ndarray]:
+    """The paper's dataset: >=16,128 profiled GEMM operations."""
+    cfgs = sweep_configs(n_configs=n_configs, seed=seed)
+    return profile_configs(cfgs, sim or TpuGemmSimulator(seed=seed),
+                           progress_every=progress_every)
+
+
+def save_dataset(table: dict[str, np.ndarray], path: str) -> None:
+    np.savez_compressed(path, **{k: np.asarray(v) for k, v in table.items()})
+
+
+def load_dataset(path: str) -> dict[str, np.ndarray]:
+    with np.load(path, allow_pickle=True) as z:
+        return {k: z[k] for k in z.files}
+
+
+def feature_table(table: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Project the profiled table onto model-input columns."""
+    out = {k: table[k] for k in NUMERIC_FEATURES if k in table}
+    return out
+
+
+def target_matrix(table: dict[str, np.ndarray]) -> np.ndarray:
+    return np.stack([np.asarray(table[t], dtype=np.float64) for t in TARGETS],
+                    axis=1)

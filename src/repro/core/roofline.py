@@ -1,0 +1,240 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+    compute term    = HLO_FLOPs   / (chips x peak FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM B/s)
+    collective term = coll_bytes  / (chips x ICI link B/s)
+
+`cost_analysis()` supplies FLOPs and bytes. Collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text and apply per-op ring
+formulas to operand sizes (all-reduce moves ~2x operand bytes per chip on a
+ring; all-gather/reduce-scatter move (g-1)/g of the full tensor; all-to-all
+and collective-permute move the operand once).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.chips import DTYPE_BYTES, TPU_V5E, ChipSpec
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+(?:e\d+m\d+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_RG_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_RG_DIM_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n) * b
+
+
+def _line_operand_bytes(line: str) -> float:
+    """Sum of operand tensor sizes on an HLO instruction line.
+
+    HLO lines look like:
+      %all-reduce.5 = f32[128,512]{1,0} all-reduce(f32[128,512]{1,0} %p),
+    The first shape is the result; shapes after the opcode's '(' are operands.
+    """
+    lhs, _, rhs = line.partition("=")
+    if not rhs:
+        return 0.0
+    paren = rhs.find("(")
+    if paren < 0:
+        return 0.0
+    args = rhs[paren:]
+    total = 0.0
+    for m in _SHAPE_RE.finditer(args):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _RG_DIM_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _RG_RE.search(line)
+    if m and m.group(1).strip():
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    operand_bytes: dict[str, float]   # raw operand bytes by op kind
+    wire_bytes: dict[str, float]      # ring-model bytes per chip by op kind
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+
+def parse_collectives(hlo_text: str, n_chips: int) -> CollectiveStats:
+    counts = {k: 0 for k in _COLL_OPS}
+    operand = {k: 0.0 for k in _COLL_OPS}
+    wire = {k: 0.0 for k in _COLL_OPS}
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if "=" not in line:
+            continue
+        # opcode appears right after the result shape
+        op = None
+        for k in _COLL_OPS:
+            if re.search(rf"\b{k}(-start|-done)?\(", line):
+                op = k
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in line:
+            continue  # -done pairs with -start; count once
+        nbytes = _line_operand_bytes(line)
+        if nbytes == 0.0:
+            continue
+        g = _group_size(line, n_chips)
+        counts[op] += 1
+        operand[op] += nbytes
+        ring = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            wire[op] += 2.0 * nbytes * ring
+        elif op in ("all-gather", "reduce-scatter"):
+            # operand is per-shard for all-gather; result for reduce-scatter
+            wire[op] += nbytes * ring if op == "reduce-scatter" else nbytes * (g - 1)
+        elif op == "all-to-all":
+            wire[op] += nbytes * ring
+        else:  # collective-permute
+            wire[op] += nbytes
+    return CollectiveStats(counts=counts, operand_bytes=operand, wire_bytes=wire)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    n_chips: int
+    dtype: str
+    hlo_flops: float
+    hlo_bytes: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float = 0.0          # 6*N*D (or 6*N_active*D for MoE)
+    collectives: CollectiveStats | None = None
+    bytes_per_device: float = 0.0     # from memory_analysis
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time if the three terms fully overlap."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the overlap bound:
+        MODEL_FLOPS time / bound time."""
+        if self.bound_s <= 0:
+            return 0.0
+        chip = TPU_V5E
+        ideal_s = self.model_flops / (self.n_chips * chip.peak(self.dtype))
+        return ideal_s / self.bound_s
+
+    def as_row(self) -> dict:
+        return {
+            "name": self.name,
+            "chips": self.n_chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.hlo_flops,
+            "useful_frac": self.useful_flops_fraction,
+            "roofline_frac": self.roofline_fraction,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def roofline_from_artifacts(
+    *,
+    name: str,
+    cost: dict,
+    hlo_text: str,
+    n_chips: int,
+    model_flops: float = 0.0,
+    dtype: str = "bf16",
+    chip: ChipSpec = TPU_V5E,
+    bytes_per_device: float = 0.0,
+) -> RooflineReport:
+    """Build a report from `compiled.cost_analysis()` + HLO text.
+
+    cost_analysis flops/bytes on a host-device compile are *per-program*
+    (already partitioned when compiled under a mesh with n_chips programs).
+    """
+    flops = float(cost.get("flops", 0.0))
+    # sum all "bytes accessed*" keys (XLA splits by operand/output)
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    if nbytes == 0.0:
+        nbytes = sum(float(v) for k, v in cost.items()
+                     if k.startswith("bytes accessed"))
+    coll = parse_collectives(hlo_text, n_chips)
+    # cost_analysis is per-partition under SPMD: per-chip flops/bytes.
+    per_chip_flops = flops
+    per_chip_bytes = nbytes
+    per_chip_coll = coll.total_wire_bytes
+    return RooflineReport(
+        name=name,
+        n_chips=n_chips,
+        dtype=dtype,
+        hlo_flops=per_chip_flops * n_chips,
+        hlo_bytes=per_chip_bytes * n_chips,
+        collective_wire_bytes=per_chip_coll * n_chips,
+        compute_s=per_chip_flops / chip.peak(dtype),
+        memory_s=per_chip_bytes / chip.hbm_bw,
+        collective_s=per_chip_coll / chip.ici_link_bw,
+        model_flops=model_flops,
+        collectives=coll,
+        bytes_per_device=bytes_per_device,
+    )
+
+
+def format_report_table(reports: list[RooflineReport]) -> str:
+    hdr = (f"{'cell':<42} {'chips':>5} {'compute_s':>10} {'memory_s':>10} "
+           f"{'collect_s':>10} {'dominant':>10} {'useful%':>8} {'roofline%':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        lines.append(
+            f"{r.name:<42} {r.n_chips:>5} {r.compute_s:>10.4e} "
+            f"{r.memory_s:>10.4e} {r.collective_s:>10.4e} {r.dominant:>10} "
+            f"{100*r.useful_flops_fraction:>7.1f}% {100*r.roofline_fraction:>8.1f}%"
+        )
+    return "\n".join(lines)

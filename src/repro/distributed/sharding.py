@@ -1,0 +1,211 @@
+"""Logical-axis sharding: rules mapping tensor axes -> mesh axes.
+
+Models annotate activations with logical names (`shard_activation(x, "batch",
+"seq", "embed")`) and parameters get PartitionSpecs derived from their pytree
+path (`param_pspecs`). The translation is strategy-dependent:
+
+  megatron: TP over "model"; params replicated across "data"
+  fsdp:     TP over "model"; the non-TP param dim additionally sharded over
+            "data" (ZeRO-3-style), all-gathered on use by GSPMD
+
+Batch always shards over every data-parallel mesh axis ("pod" + "data" when
+multi-pod). GSPMD handles non-divisible dims by padding, so head counts that
+don't divide the 16-way model axis (e.g. 28 heads) remain legal.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import re
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def set_mesh_rules(mesh: Mesh | None, fsdp: bool = False,
+                   expert_axis: str = "model") -> None:
+    _STATE.mesh = mesh
+    _STATE.fsdp = fsdp
+    _STATE.expert_axis = expert_axis
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+def _logical_to_mesh(name: str | None, mesh: Mesh):
+    if name is None:
+        return None
+    if name == "batch":
+        ax = dp_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    if name == "model":
+        return "model" if "model" in mesh.axis_names else None
+    if name == "fsdp":
+        if getattr(_STATE, "fsdp", False) and "data" in mesh.axis_names:
+            return "data"
+        return None
+    if name == "seq_shard":  # sequence parallelism for long-context caches
+        return "data" if "data" in mesh.axis_names else None
+    if name == "seq_tp":     # Megatron-style SP: residual seq over TP axis
+        return "model" if "model" in mesh.axis_names else None
+    if name == "expert":     # EP axis: "model" (default) or "data"
+        ax = getattr(_STATE, "expert_axis", "model")
+        return ax if ax in mesh.axis_names else None
+    if name == "fsdp_or_tp":
+        # expert inner dim: fsdp over data under EP=TP; nothing under EP=DP
+        if getattr(_STATE, "expert_axis", "model") == "model":
+            return _logical_to_mesh("fsdp", mesh)
+        return None
+    if name == "tp_if_ep_data":
+        # expert d_ff dim: TP-sharded when experts moved to the data axis
+        if getattr(_STATE, "expert_axis", "model") == "data":
+            return "model" if "model" in mesh.axis_names else None
+        return None
+    return None
+
+
+def pspec(*names: str | None, mesh: Mesh | None = None) -> P:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return P()
+    return P(*[_logical_to_mesh(n, mesh) for n in names])
+
+
+def shard_activation(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint under the active mesh rules (no-op if none).
+    Axes whose mesh size does not divide the dim are dropped."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = names + (None,) * (x.ndim - len(names))
+    spec = sanitize_spec(pspec(*names, mesh=mesh), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partitioning: path-pattern -> logical axes for the *trailing*
+# dims (leading stacked-layer axes are unsharded). First match wins.
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    # embeddings / heads
+    ("*embed/table", ("model", "fsdp")),          # (vocab, d)
+    ("*head/w", ("fsdp", "model")),               # (d, vocab)
+    # attention (incl. stacked (L, ...) leaves — trailing dims matched)
+    ("*attn/wq", ("fsdp", "model")),
+    ("*attn/wk", ("fsdp", "model")),
+    ("*attn/wv", ("fsdp", "model")),
+    ("*attn/wo", ("model", "fsdp")),
+    ("*attn/b?", ("model",)),
+    # MLA projections
+    ("*attn/w_dkv", ("fsdp", None)),              # (d, kv_lora)
+    ("*attn/w_kpe", ("fsdp", None)),
+    ("*attn/w_uk", (None, "model")),              # (kv_lora, H*hd)
+    ("*attn/w_uv", (None, "model")),
+    ("*attn/w_dq", ("fsdp", None)),
+    ("*attn/w_uq", (None, "model")),
+    # dense MLP
+    ("*mlp/w_gate", ("fsdp", "model")),
+    ("*mlp/w_up", ("fsdp", "model")),
+    ("*mlp/w_down", ("model", "fsdp")),
+    # MoE experts: expert axis -> EP mesh axis; remaining dims -> TP/fsdp.
+    # expert_axis="model": classic EP=TP (weights stationary per TP shard,
+    #   inner dims fsdp-sharded over data when enabled);
+    # expert_axis="data":  EP over the data axis with TP on d_ff — kills the
+    #   per-layer FSDP weight all-gather for huge expert blocks (the
+    #   DeepSeek-V2 hillclimb, EXPERIMENTS.md §Perf).
+    ("*experts/w_gate", ("expert", "fsdp_or_tp", "tp_if_ep_data")),
+    ("*experts/w_up", ("expert", "fsdp_or_tp", "tp_if_ep_data")),
+    ("*experts/w_down", ("expert", "tp_if_ep_data", "fsdp_or_tp")),
+    ("*router/w", ("fsdp", None)),                 # (d, E)
+    ("*shared_mlp/w_gate", ("fsdp", "model")),
+    ("*shared_mlp/w_up", ("fsdp", "model")),
+    ("*shared_mlp/w_down", ("model", "fsdp")),
+    # SSM (mamba1/mamba2)
+    ("*ssm/in_proj", ("fsdp", "model")),           # (d, 2*di) / (d, proj)
+    ("*ssm/conv_w", ("model", None)),              # (channels, d_conv)
+    ("*ssm/conv_b", ("model",)),
+    ("*ssm/x_proj", ("model", None)),              # (di, dt_rank + 2*ds)
+    ("*ssm/dt_proj", (None, "model")),             # (dt_rank, di)
+    ("*ssm/dt_bias", ("model",)),
+    ("*ssm/A_log", ("model", None)),               # (di, ds) or (H,)
+    ("*ssm/D", ("model",)),
+    ("*ssm/out_proj", ("model", "fsdp")),          # (di, d)
+    ("*ssm/norm_scale", ("model",)),
+    # norms and everything else: replicated
+    ("*scale", (None,)),
+    ("*", ()),
+]
+
+
+def _match(path: str) -> tuple[str | None, ...]:
+    for pat, spec in PARAM_RULES:
+        if fnmatch.fnmatch(path, pat):
+            return spec
+    return ()
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the corresponding dim —
+    jit in_shardings demand exact divisibility (no GSPMD edge padding)."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for ax, dim in zip(axes, shape):
+        out.append(ax if (ax is not None and dim % axis_size(mesh, ax) == 0)
+                   else None)
+    return P(*out)
+
+
+def param_pspecs(params_tree, mesh: Mesh, fsdp: bool = False):
+    """PartitionSpec pytree matching `params_tree` (shapes or arrays)."""
+
+    def leaf_spec(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        logical = _match(_leaf_path_str(path))
+        ndim = len(shape)
+        logical = logical[:ndim]
+        # left-pad with None for stacked leading axes (layers)
+        pad = (None,) * (ndim - len(logical))
+        names = pad + tuple(logical)
+        set_mesh_rules(mesh, fsdp)
+        spec_axes = [_logical_to_mesh(n, mesh) for n in names]
+        return sanitize_spec(P(*spec_axes), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def param_shardings(params_tree, mesh: Mesh, fsdp: bool = False):
+    specs = param_pspecs(params_tree, mesh, fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

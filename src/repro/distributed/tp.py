@@ -1,0 +1,175 @@
+"""Explicit-collective tensor-parallel linear layers.
+
+Under plain SPMD, TP matmuls accumulate in fp32 and GSPMD inserts the
+partial-sum all-reduce at the dot output — *before* the bf16 cast — so every
+TP collective (forward and its AD transposes) moves fp32 bytes: 2x the wire
+traffic the math needs. The dry-run measured this as the dominant term on
+every dense train cell (EXPERIMENTS.md §Perf).
+
+These wrappers take manual control with shard_map + custom_vjp:
+
+  column_parallel:  y_loc = x @ w_loc          (w col-sharded over "model")
+      fwd: no collective;  bwd dx: psum over "model" in bf16.
+  row_parallel:     y = psum(x_loc @ w_loc)    (w row-sharded over "model")
+      fwd: psum (or psum_scatter under SP) in bf16;  bwd: NO collective
+      (the upstream cotangent is already replicated).
+
+Per-shard dots keep fp32 accumulation (preferred_element_type) — only the
+wire format changes. Weight grads stay sharded like the weights; the data-
+axis gradient reduction stays with SPMD (bf16 cotangents).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import current_mesh, dp_axes
+
+
+def _dp(mesh):
+    ax = dp_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+def _dot(x, w):
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def column_parallel(x: jax.Array, w: jax.Array, ctx: tuple) -> jax.Array:
+    """x: (..., d) replicated over model; w: (d, F) col-sharded on F.
+    Returns y: (..., F) col-sharded."""
+    return _col_fwd(x, w, ctx)[0]
+
+
+def _col_fwd(x, w, ctx):
+    mesh, = ctx
+    dp = _dp(mesh)
+
+    def local(xl, wl):
+        return _dot(xl, wl).astype(xl.dtype)
+
+    y = shard_map(local, mesh=mesh,
+                  in_specs=(P(dp), P(None, "model")),
+                  out_specs=P(dp, *([None] * (x.ndim - 2)), "model"),
+                  check_rep=False)(x, w)
+    return y, (x, w)
+
+
+def _col_bwd(ctx, res, g):
+    mesh, = ctx
+    x, w = res
+    dp = _dp(mesh)
+    dp_names = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+    lead = x.ndim - 1
+
+    def local(gl, wl, xl):
+        # dx: partial over the model axis; cast BEFORE the psum -> bf16 wire
+        dxl = jax.lax.dot_general(
+            gl, wl, (((gl.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+        dx = jax.lax.psum(dxl, "model")
+        gf = gl.reshape(-1, gl.shape[-1])
+        xf = xl.reshape(-1, xl.shape[-1])
+        dwl = jax.lax.dot_general(
+            xf, gf, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(w.dtype)
+        # data-axis gradient reduction (bf16 wire), explicit under shard_map
+        for ax in dp_names:
+            dwl = jax.lax.psum(dwl, ax)
+        return dx, dwl
+
+    dx, dw = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, *([None] * (lead - 1)), "model"),
+                  P(None, "model"), P(dp)),
+        out_specs=(P(dp), P(None, "model")),
+        check_rep=False)(g, w, x)
+    return dx, dw
+
+
+column_parallel.defvjp(_col_fwd, _col_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def row_parallel(x: jax.Array, w: jax.Array, ctx: tuple) -> jax.Array:
+    """x: (..., F) col-sharded on F over model; w: (F, d) row-sharded.
+    Returns y: (..., d) replicated over model (psum in bf16)."""
+    return _row_fwd(x, w, ctx)[0]
+
+
+def _row_fwd(x, w, ctx):
+    mesh, = ctx
+    dp = _dp(mesh)
+
+    def local(xl, wl):
+        yl = _dot(xl, wl).astype(xl.dtype)   # cast before the wire
+        return jax.lax.psum(yl, "model")
+
+    y = shard_map(local, mesh=mesh,
+                  in_specs=(P(dp, *([None] * (x.ndim - 2)), "model"),
+                            P("model", None)),
+                  out_specs=P(dp),
+                  check_rep=False)(x, w)
+    return y, (x, w)
+
+
+def _row_bwd(ctx, res, g):
+    mesh, = ctx
+    x, w = res
+    dp = _dp(mesh)
+    dp_names = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+
+    def local(gl, wl, xl):
+        # g is replicated over model: dx needs NO collective
+        dxl = jax.lax.dot_general(
+            gl, wl, (((gl.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+        gf = gl.reshape(-1, gl.shape[-1])
+        xf = xl.reshape(-1, xl.shape[-1])
+        dwl = jax.lax.dot_general(
+            xf, gf, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(w.dtype)
+        for ax in dp_names:
+            dwl = jax.lax.psum(dwl, ax)
+        return dxl, dwl
+
+    dx, dw = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp), P("model", None),
+                  P(dp, *([None] * (x.ndim - 2)), "model")),
+        out_specs=(P(dp, *([None] * (x.ndim - 2)), "model"),
+                   P("model", None)),
+        check_rep=False)(g, w, x)
+    return dx, dw
+
+
+row_parallel.defvjp(_row_fwd, _row_bwd)
+
+
+def tp_enabled(cfg) -> bool:
+    mesh = current_mesh()
+    return (getattr(cfg, "tp_collectives", "auto") == "explicit"
+            and mesh is not None and "model" in mesh.axis_names)
+
+
+def tp_column(x, w, cfg):
+    if tp_enabled(cfg) and w.shape[-1] % current_mesh().shape["model"] == 0:
+        return column_parallel(x, w, (current_mesh(),))
+    from repro.kernels import ops
+    return ops.matmul(x, w)
+
+
+def tp_row(x, w, cfg):
+    if tp_enabled(cfg) and w.shape[0] % current_mesh().shape["model"] == 0:
+        return row_parallel(x, w, (current_mesh(),))
+    from repro.kernels import ops
+    return ops.matmul(x, w)

@@ -1,0 +1,117 @@
+"""Public GEMM ops — the framework's single entry point for matmuls.
+
+Every matmul site in the model zoo calls `ops.matmul` / `ops.linear`. The op
+dispatches per backend:
+
+  * TPU: the Pallas tiled kernel with a block config chosen by the
+    performance-predictor autotuner (the paper's technique, applied at every
+    call site). Shapes are static at trace time, so tuning happens in Python
+    during tracing and is cached process-wide.
+  * CPU/GPU (tests, dry-run lowering): `lax.dot_general` — the Pallas kernel
+    is TPU-target-only and is validated separately in interpret mode.
+
+Set `force_mode("pallas_interpret")` in tests to route through the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiled_matmul import BlockConfig, DEFAULT_CONFIG, tiled_matmul
+
+_MODE: Literal["auto", "pallas", "pallas_interpret", "xla"] = "auto"
+
+
+def force_mode(mode: Literal["auto", "pallas", "pallas_interpret", "xla"]):
+    """Override dispatch (tests use 'pallas_interpret'; dry-run uses 'xla')."""
+    global _MODE
+    _MODE = mode
+
+
+def _resolve_mode() -> str:
+    if _MODE != "auto":
+        return _MODE
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.lru_cache(maxsize=None)
+def _tuned_config(m: int, n: int, k: int, dtype: str,
+                  objective: str) -> BlockConfig:
+    # Late import: autotuner depends on the trained predictor artifacts.
+    try:
+        from repro.core.autotuner import get_tuner
+
+        return get_tuner().best_config(m, n, k, dtype=dtype, objective=objective)
+    except Exception:
+        return DEFAULT_CONFIG
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    config: BlockConfig | None = None,
+    objective: str = "runtime",
+    transpose_b: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """out = a @ op(b) over the last axis of `a`; leading dims are batch."""
+    *lead, k = a.shape
+    if transpose_b:
+        n, kb = b.shape
+    else:
+        kb, n = b.shape
+    if kb != k:
+        raise ValueError(f"contraction mismatch {k} vs {kb}")
+    m = 1
+    for d in lead:
+        m *= d
+    mode = _resolve_mode()
+    out_dtype = out_dtype or a.dtype
+    if mode == "xla":
+        dn = (((1,), (1 if transpose_b else 0,)), ((), ()))
+        out = jax.lax.dot_general(
+            a.reshape(m, k), b, dn, preferred_element_type=jnp.float32
+        ).astype(out_dtype)
+    else:
+        cfg = config or _tuned_config(m, n, k, str(a.dtype), objective)
+        out = tiled_matmul(
+            a.reshape(m, k), b,
+            config=cfg,
+            transpose_b=transpose_b,
+            out_dtype=out_dtype,
+            interpret=(mode == "pallas_interpret"),
+        )
+    return out.reshape(*lead, n)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+           **kw) -> jax.Array:
+    """y = x @ w (+ b). w: (K, N)."""
+    y = matmul(x, w, **kw)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def gemm(a, b, c=None, *, alpha=1.0, beta=0.0, transpose_a=False,
+         transpose_b=False, config: BlockConfig | None = None,
+         out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """Full BLAS-3 surface (rank-2 only) — used by benchmarks/tests."""
+    mode = _resolve_mode()
+    use_interpret = (mode == "pallas_interpret") if interpret is None else interpret
+    if mode == "xla" and interpret is None:
+        from repro.kernels.ref import matmul_ref
+
+        return matmul_ref(a, b, c, transpose_a=transpose_a,
+                          transpose_b=transpose_b, alpha=alpha, beta=beta,
+                          out_dtype=out_dtype)
+    return tiled_matmul(
+        a, b, c, config=config or DEFAULT_CONFIG, transpose_a=transpose_a,
+        transpose_b=transpose_b, alpha=alpha, beta=beta, out_dtype=out_dtype,
+        interpret=use_interpret,
+    )

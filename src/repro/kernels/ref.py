@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array | None = None,
+    *,
+    transpose_a: bool = False,
+    transpose_b: bool = False,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    out_dtype=None,
+) -> jax.Array:
+    """C = alpha * op(A) @ op(B) + beta * C with fp32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    if transpose_a:
+        a = a.T
+    if transpose_b:
+        b = b.T
+    acc = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out = alpha * acc
+    if beta != 0.0:
+        if c is None:
+            raise ValueError("beta != 0 requires c")
+        out = out + beta * c.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def grouped_matmul_ref(
+    x: jax.Array,          # (T, K) tokens
+    w: jax.Array,          # (E, K, N) per-expert weights
+    group_ids: jax.Array,  # (T,) expert id per token
+    *,
+    out_dtype=None,
+) -> jax.Array:
+    """Per-token expert GEMM oracle: out[t] = x[t] @ w[group_ids[t]]."""
+    out_dtype = out_dtype or x.dtype
+    wg = w[group_ids]  # (T, K, N)
+    out = jnp.einsum("tk,tkn->tn", x.astype(jnp.float32),
+                     wg.astype(jnp.float32))
+    return out.astype(out_dtype)

@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialization. 512 host devices back both the
+# (16,16) single-pod and (2,16,16) multi-pod production meshes.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    SHAPE_DEFS,
+    all_cells,
+    get_config,
+    input_specs,
+    supported_cells,
+)
+from repro.core.hloanalyze import analyze_hlo  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    dp_axes,
+    param_shardings,
+    sanitize_spec,
+    set_mesh_rules,
+)
+from repro.kernels import ops  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.registry import get_model  # noqa: E402
+from repro.optim.adamw import AdamWConfig, init_opt_state, zero1_shardings  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def _dp(mesh, size: int):
+    """Data-parallel axes for a batch dim of `size` (replicate if indivisible)."""
+    ax = dp_axes(mesh)
+    total = 1
+    for a in ax:
+        total *= mesh.shape[a]
+    if size % total == 0:
+        return ax if len(ax) > 1 else ax[0]
+    return None
+
+
+def batch_shardings(arch: str, shape: str, mesh, specs,
+                    cfg=None, variant: str | None = None) -> dict:
+    """NamedSharding tree matching input_specs(arch, shape). Every spec is
+    sanitized against the actual dims (jit demands exact divisibility)."""
+    cfg = cfg or get_config(arch)
+    step = SHAPE_DEFS[shape]["step"]
+    B = (specs["token"].shape[0] if step == "decode"
+         else specs["tokens"].shape[0])
+    dp = _dp(mesh, B)
+    long_ctx = shape == "long_500k"
+    mdl = "model" if "model" in mesh.axis_names else None
+    tp = mesh.shape[mdl] if mdl else 1
+
+    def ns(sds, *spec):
+        return NamedSharding(mesh, sanitize_spec(P(*spec), sds.shape, mesh))
+
+    out = {}
+    for name, sds in specs.items():
+        if name == "state":
+            continue
+        nd = len(sds.shape)
+        out[name] = ns(sds, dp, *([None] * (nd - 1)))
+    if step != "decode":
+        return out
+
+    st = specs["state"]
+    sharded_state = {}
+    kind = cfg.kind
+
+    def kv_spec(sds):
+        """(L, B, S, KV, hd): batch over dp; TP lands on kv heads if they
+        divide, else on the *sequence* dim (flash-decode layout — head_dim
+        sharding makes SPMD re-gather the cache every layer, which the
+        dry-run exposed); long-context (B=1) cells use sequence parallelism
+        over 'data' instead of batch.
+
+        kv_batch* variants: batch-only sharding, seq unsharded — the
+        masked-select rewrite that sequence-sharded dus pays per decode step
+        disappears (EXPERIMENTS.md §Perf decode hillclimb)."""
+        L_, Bc, S_, KV, hd = sds.shape
+        if variant in ("kv_batch", "kv_batch_fp8"):
+            return ns(sds, None, dp, None, mdl if KV % tp == 0 else None,
+                      None)
+        if KV % tp == 0:
+            seq_ax, tp_axes = None, (mdl, None)
+        else:
+            seq_ax, tp_axes = mdl, (None, None)
+        if long_ctx:
+            return ns(sds, None, None, ("data",) if seq_ax is None
+                      else ("data", seq_ax), *tp_axes)
+        return ns(sds, None, dp, seq_ax, *tp_axes)
+
+    if kind in ("dense", "moe", "vlm"):
+        sharded_state["kv"] = {"k": kv_spec(st["kv"]["k"]),
+                               "v": kv_spec(st["kv"]["v"])}
+    elif kind == "mla_moe":
+        sharded_state["kv"] = {
+            "c_kv": ns(st["kv"]["c_kv"], None, dp, None, mdl),  # latent -> TP
+            "k_pe": ns(st["kv"]["k_pe"], None, dp, None, None),
+        }
+    elif kind == "mamba1":
+        sharded_state["kv"] = {
+            "conv": ns(st["kv"]["conv"], None, dp, None, mdl),
+            "ssm": ns(st["kv"]["ssm"], None, dp, mdl, None),
+        }
+    elif kind == "hybrid":
+        sharded_state["cache"] = {
+            "mamba": {
+                "conv": ns(st["cache"]["mamba"]["conv"],
+                           None, None, dp, None, mdl),
+                "ssm": ns(st["cache"]["mamba"]["ssm"],
+                          None, None, dp, mdl, None, None),
+            },
+            "attn": {
+                "k": (ns(st["cache"]["attn"]["k"], None, None, "data", mdl,
+                         None) if long_ctx else
+                      ns(st["cache"]["attn"]["k"], None, dp, None, mdl, None)),
+                "v": (ns(st["cache"]["attn"]["v"], None, None, "data", mdl,
+                         None) if long_ctx else
+                      ns(st["cache"]["attn"]["v"], None, dp, None, mdl, None)),
+            },
+        }
+    elif kind == "encdec":
+        sharded_state["kv"] = {"k": kv_spec(st["kv"]["k"]),
+                               "v": kv_spec(st["kv"]["v"])}
+        sharded_state["cross"] = {
+            "k": ns(st["cross"]["k"], None, dp, None, mdl, None),
+            "v": ns(st["cross"]["v"], None, dp, None, mdl, None),
+        }
+    if "next_pos" in st:
+        sharded_state["next_pos"] = ns(st["next_pos"], dp)
+    sharded_state["index"] = NamedSharding(mesh, P())
+    out["state"] = sharded_state
+    return out
+
+
+# --- perf-variant transforms (EXPERIMENTS.md §Perf hillclimbs) ---
+import dataclasses  # noqa: E402
+
+VARIANTS = {
+    None: lambda cfg: cfg,
+    "sp": lambda cfg: dataclasses.replace(cfg, sequence_parallel=True),
+    "ep_data": lambda cfg: dataclasses.replace(cfg, moe_expert_axis="data",
+                                               fsdp=False),
+    "kv_batch": lambda cfg: cfg,     # sharding-level change only (see below)
+    "kv_batch_fp8": lambda cfg: dataclasses.replace(
+        cfg, kv_cache_dtype="float8_e4m3fn"),
+    "kv_fp8": lambda cfg: dataclasses.replace(
+        cfg, kv_cache_dtype="float8_e4m3fn"),  # keeps default (seq) sharding
+    "sp_ep_data": lambda cfg: dataclasses.replace(
+        cfg, sequence_parallel=True, moe_expert_axis="data", fsdp=False),
+    "moe_smap": lambda cfg: dataclasses.replace(cfg, moe_impl="shard_map"),
+    "moe_smap_sp": lambda cfg: dataclasses.replace(
+        cfg, moe_impl="shard_map", sequence_parallel=True),
+    "tpx": lambda cfg: dataclasses.replace(cfg, tp_collectives="explicit"),
+    "tpx_sp": lambda cfg: dataclasses.replace(
+        cfg, tp_collectives="explicit", sequence_parallel=True),
+}
+
+
+def _apply_variant_to_specs(specs, variant):
+    """Adjust input specs for variants that change cache dtype."""
+    if variant not in ("kv_batch_fp8", "kv_fp8") or "state" not in specs:
+        return specs
+    f8 = jnp.float8_e4m3fn
+
+    def conv(s):
+        if hasattr(s, "dtype") and s.dtype == jnp.bfloat16:
+            return jax.ShapeDtypeStruct(s.shape, f8)
+        return s
+
+    out = dict(specs)
+    out["state"] = jax.tree.map(conv, specs["state"])
+    return out
+
+
+def build_cell(arch: str, shape: str, mesh, *, include_optimizer: bool = True,
+               variant: str | None = None):
+    """Returns (fn, example_args, in_shardings, donate, cfg, out_shardings)."""
+    cfg = VARIANTS[variant](get_config(arch))
+    model = get_model(cfg)
+    set_mesh_rules(mesh, fsdp=cfg.fsdp, expert_axis=cfg.moe_expert_axis)
+    specs = _apply_variant_to_specs(input_specs(arch, shape), variant)
+    step = SHAPE_DEFS[shape]["step"]
+
+    params_shape = jax.eval_shape(lambda k: model.init(k, cfg),
+                                  jax.random.key(0))
+    p_sh = param_shardings(params_shape, mesh, fsdp=cfg.fsdp)
+    b_sh = batch_shardings(arch, shape, mesh, specs, cfg=cfg, variant=variant)
+
+    if step == "train":
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        opt_sh = zero1_shardings(params_shape, p_sh, mesh)
+        rng_shape = jax.eval_shape(
+            lambda: jax.random.key_data(jax.random.key(0)))
+        state_shape = {"params": params_shape, "opt": opt_shape,
+                       "rng": rng_shape}
+        state_sh = {"params": p_sh, "opt": opt_sh,
+                    "rng": NamedSharding(mesh, P())}
+        if not include_optimizer:
+            state_shape.pop("opt")
+            state_sh.pop("opt")
+        train_step = make_train_step(model, cfg, AdamWConfig())
+        fn = train_step
+        args = (state_shape, specs)
+        in_sh = (state_sh, b_sh)
+        donate = (0,)
+        out_sh = (state_sh, None)
+    elif step == "prefill":
+        def fn(params, batch):
+            logits, state = model.prefill(params, batch, cfg)
+            return logits
+
+        args = (params_shape, {k: v for k, v in specs.items()})
+        in_sh = (p_sh, b_sh)
+        donate = ()
+        out_sh = None
+    else:  # decode
+        def fn(params, token, state):
+            return model.decode_step(params, token, state, cfg)
+
+        args = (params_shape, specs["token"], specs["state"])
+        in_sh = (p_sh, b_sh["token"], b_sh["state"])
+        donate = (2,)
+        # pin the output state to the input cache sharding: donation then
+        # reuses buffers and no round-trip reshard collectives appear
+        out_sh = (None, b_sh["state"])
+    return fn, args, in_sh, donate, cfg, out_sh
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             out_dir: str = ARTIFACTS, force: bool = False,
+             include_optimizer: bool = True,
+             variant: str | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    out_path = os.path.join(out_dir, mesh_name, f"{arch}_{shape}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    ops.force_mode("xla")  # Pallas kernels are TPU-target; dry-run lowers XLA
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, donate, cfg, out_sh = build_cell(
+        arch, shape, mesh, include_optimizer=include_optimizer,
+        variant=variant)
+
+    with mesh:
+        kw = {"out_shardings": out_sh} if out_sh is not None else {}
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate, **kw)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    n_chips = mesh.size
+    # Trip-count-aware analysis of the per-device SPMD program. XLA's own
+    # cost_analysis counts scan bodies once and charges every intermediate
+    # as HBM traffic — see core/hloanalyze.py.
+    hc = analyze_hlo(hlo, n_chips)
+    step_kind = SHAPE_DEFS[shape]["step"]
+    tokens = (SHAPE_DEFS[shape]["global_batch"]
+              * (SHAPE_DEFS[shape]["seq_len"] if step_kind != "decode" else 1))
+    n_active = cfg.n_active_params()
+    model_flops = (6 if step_kind == "train" else 2) * n_active * tokens
+
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "variant": variant,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "step": step_kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_chip": float(hc.flops),
+        "bytes_per_chip": float(hc.hbm_bytes),
+        "collective_wire_bytes_per_chip": float(hc.collective_bytes),
+        "collective_wire_bytes_by_op": hc.collective_by_op,
+        "while_trip_counts": hc.while_trips,
+        "xla_cost_analysis_flops_raw": float(cost.get("flops", 0.0)),
+        "xla_cost_analysis_bytes_raw": float(sum(
+            v for k, v in cost.items() if k.startswith("bytes accessed"))),
+        "model_flops": float(model_flops),
+        "tokens_per_step": tokens,
+        "memory_analysis": {
+            "argument_size_in_bytes": getattr(
+                mem, "argument_size_in_bytes", 0),
+            "output_size_in_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_in_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=ARTIFACTS)
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            try:
+                t0 = time.time()
+                r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                             force=args.force, variant=args.variant)
+                print(f"[ok] {tag}: flops/chip={r['flops_per_chip']:.3e} "
+                      f"coll/chip={r['collective_wire_bytes_per_chip']:.3e}B "
+                      f"args/dev={r['memory_analysis']['argument_size_in_bytes']/2**30:.2f}GiB "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(f"  {t}: {e}")
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

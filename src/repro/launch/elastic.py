@@ -1,0 +1,42 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+When nodes die, the scheduler restarts the job with whatever survives; this
+module picks the best (data, model) factorization for the new world size,
+rebuilds shardings, and restores the latest checkpoint onto the new mesh
+(CheckpointManager.restore already supports arbitrary re-placement because
+shards are saved host-side and re-placed via device_put).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.sharding import param_shardings, set_mesh_rules
+
+
+def best_mesh_for(n_devices: int, *, prefer_model: int = 16):
+    """Largest model-parallel degree <= prefer_model that divides the world,
+    remainder goes to data parallelism."""
+    model = 1
+    for m in range(min(prefer_model, n_devices), 0, -1):
+        if n_devices % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n_devices // model, model), ("data", "model"))
+
+
+def resume_elastic(ckpt_dir: str, model, cfg, *, prefer_model: int = 16):
+    """Returns (mesh, state, step) with state placed on the current world."""
+    n = len(jax.devices())
+    mesh = best_mesh_for(n, prefer_model=prefer_model)
+    set_mesh_rules(mesh, fsdp=cfg.fsdp, expert_axis=cfg.moe_expert_axis)
+    params_shape = jax.eval_shape(lambda k: model.init(k, cfg),
+                                  jax.random.key(0))
+    p_sh = param_shardings(params_shape, mesh, fsdp=cfg.fsdp)
+    mgr = CheckpointManager(ckpt_dir)
+    step = mgr.latest_step()
+    if step is None:
+        return mesh, None, 0
+    state, _ = mgr.restore(step, shardings={"params": p_sh})
+    return mesh, state, step

@@ -1,0 +1,212 @@
+"""Encoder-decoder transformer (Seamless-M4T medium backbone).
+
+Per the task spec the modality frontend is a STUB: `src_embeds` arrive as
+precomputed speech-frame embeddings (B, T_src, d_model). The text decoder is
+a standard causal transformer with cross-attention into the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------- blocks ----------------
+
+def enc_block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg),
+        "mlp": L.swiglu_init(k2, cfg),
+    }
+
+
+def enc_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn, _ = L.attention_apply(p["attn"], h, cfg, positions=positions,
+                                causal=False)
+    x = x + attn
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.swiglu_apply(p["mlp"], h)
+    return shard_activation(x, "batch", None, None)
+
+
+def dec_block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg),
+        "self_attn": L.attention_init(k1, cfg),
+        "ln_x": L.rmsnorm_init(cfg.d_model, cfg),
+        "cross_attn": L.attention_init(k2, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg),
+        "mlp": L.swiglu_init(k3, cfg),
+    }
+
+
+def _cross_kv(p: Params, memory: jax.Array, cfg: ModelConfig):
+    B, T, _ = memory.shape
+    KV, hd = cfg.kv_heads, cfg.hd
+    k = ops.matmul(memory, p["wk"]).reshape(B, T, KV, hd)
+    v = ops.matmul(memory, p["wv"]).reshape(B, T, KV, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(KV, hd).astype(k.dtype)
+        v = v + p["bv"].reshape(KV, hd).astype(v.dtype)
+    return {"k": k, "v": v}
+
+
+def _cross_attend(p: Params, x: jax.Array, ckv: dict, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = ops.matmul(x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = q.reshape(B, S, H, hd)
+    out = L._sdpa(q, ckv["k"], ckv["v"], causal=False)
+    return ops.matmul(out.reshape(B, S, H * hd), p["wo"])
+
+
+def dec_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
+                    cross_kv: dict, cache: dict | None = None,
+                    cache_index=None):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn, new_cache = L.attention_apply(
+        p["self_attn"], h, cfg, positions=positions, kv_cache=cache,
+        cache_index=cache_index)
+    x = x + attn
+    h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + _cross_attend(p["cross_attn"], h, cross_kv, cfg)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.swiglu_apply(p["mlp"], h)
+    return shard_activation(x, "batch", None, None), new_cache
+
+
+# ---------------- model ----------------
+
+def encdec_init(key, cfg: ModelConfig) -> Params:
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": {"table": L.embed_init(ke, cfg.vocab, cfg.d_model, cfg)},
+        "encoder": jax.vmap(lambda k: enc_block_init(k, cfg))(enc_keys),
+        "enc_ln_f": L.rmsnorm_init(cfg.d_model, cfg),
+        "decoder": jax.vmap(lambda k: dec_block_init(k, cfg))(dec_keys),
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg),
+        "head": {"w": L.dense_init(kh, cfg.d_model, cfg.vocab, cfg)},
+    }
+
+
+def encode(params: Params, src_embeds: jax.Array, cfg: ModelConfig):
+    B, T, _ = src_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    x = shard_activation(src_embeds.astype(jnp.dtype(cfg.activation_dtype)),
+                         "batch", None, None)
+
+    def body(h, blk):
+        return enc_block_apply(blk, h, cfg, positions=positions), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return L.rmsnorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def _decode_stack(params: Params, x: jax.Array, memory: jax.Array | None,
+                  cfg: ModelConfig, *, positions, cross_cache=None,
+                  cache=None, cache_index=None):
+    """If `memory` given, compute per-layer cross-KV on the fly (training);
+    otherwise use precomputed `cross_cache` (decode)."""
+
+    def body(h, xs):
+        if cache is None:
+            blk = xs
+            ckv = _cross_kv(blk["cross_attn"], memory, cfg)
+            h, _ = dec_block_apply(blk, h, cfg, positions=positions,
+                                   cross_kv=ckv)
+            return h, None
+        blk, ckv, layer_cache = xs
+        h, new_cache = dec_block_apply(blk, h, cfg, positions=positions,
+                                       cross_kv=ckv, cache=layer_cache,
+                                       cache_index=cache_index)
+        return h, new_cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cache is None:
+        x, _ = jax.lax.scan(body_fn, x, params["decoder"])
+        return x, None
+    x, new_cache = jax.lax.scan(body_fn, x,
+                                (params["decoder"], cross_cache, cache))
+    return x, new_cache
+
+
+def encdec_loss(params: Params, batch: dict, cfg: ModelConfig):
+    """batch: src_embeds (B,T,d), tokens (B,S), labels (B,S)."""
+    memory = encode(params, batch["src_embeds"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"]["table"][tokens].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, _ = _decode_stack(params, x, memory, cfg, positions=positions)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = ops.matmul(x, params["head"]["w"], out_dtype=jnp.float32)
+    loss, metrics = L.cross_entropy(logits, batch["labels"],
+                                    batch.get("loss_mask"))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def encdec_prefill(params: Params, batch: dict, cfg: ModelConfig,
+                   max_len: int | None = None):
+    """Encode source + prefill decoder self-attn cache; precompute cross-KV."""
+    memory = encode(params, batch["src_embeds"], cfg)
+    # per-layer cross KV, stacked (L, B, T, KV, hd)
+    cross = jax.vmap(
+        lambda blk: _cross_kv(blk["cross_attn"], memory, cfg)
+    )(params["decoder"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cache = batch.get("cache")
+    if cache is None:
+        cache = {
+            "k": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_heads, cfg.hd),
+                           jnp.bfloat16),
+            "v": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_heads, cfg.hd),
+                           jnp.bfloat16),
+        }
+    x = params["embed"]["table"][tokens].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, cache = _decode_stack(params, x, None, cfg, positions=positions,
+                             cross_cache=cross, cache=cache,
+                             cache_index=jnp.int32(0))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = ops.matmul(x[:, -1:], params["head"]["w"], out_dtype=jnp.float32)
+    return logits[:, 0], {"kv": cache, "cross": cross, "index": jnp.int32(S)}
+
+
+def encdec_decode_step(params: Params, token: jax.Array, state: dict,
+                       cfg: ModelConfig):
+    B = token.shape[0]
+    idx = state["index"]
+    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    x = params["embed"]["table"][token[:, None]].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, cache = _decode_stack(params, x, None, cfg, positions=positions,
+                             cross_cache=state["cross"], cache=state["kv"],
+                             cache_index=idx)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = ops.matmul(x, params["head"]["w"], out_dtype=jnp.float32)
+    return logits[:, 0], {"kv": cache, "cross": state["cross"],
+                          "index": idx + 1}

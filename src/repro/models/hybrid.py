@@ -1,0 +1,150 @@
+"""Zamba2-style hybrid: Mamba2 backbone + shared attention blocks.
+
+`n_layers` Mamba2 blocks in groups of `attn_every`; after each group one
+*shared* attention+MLP block runs — a single parameter set reused at every
+application (Zamba2's parameter-efficiency trick). Each application still has
+its own KV cache (states differ even though weights are shared).
+
+Layout: mamba blocks stacked (n_groups, attn_every, ...) and driven by a
+nested scan; the shared block's KV caches are stacked (n_groups, ...).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.transformer import dense_block_apply, dense_block_init
+
+Params = dict[str, Any]
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def hybrid_init(key, cfg: ModelConfig) -> Params:
+    ke, km, ka, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.n_layers)
+    blocks = jax.vmap(lambda k: ssm.mamba2_block_init(k, cfg))(layer_keys)
+    # reshape to (groups, attn_every, ...)
+    g, e = n_groups(cfg), cfg.attn_every
+    blocks = jax.tree.map(lambda x: x.reshape(g, e, *x.shape[1:]), blocks)
+    params: Params = {
+        "embed": {"table": L.embed_init(ke, cfg.vocab, cfg.d_model, cfg)},
+        "blocks": blocks,
+        "shared_attn": dense_block_init(ka, cfg),
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(kh, cfg.d_model, cfg.vocab, cfg)}
+    return params
+
+
+def _hybrid_backbone(params: Params, x: jax.Array, cfg: ModelConfig, *,
+                     positions, cache: dict | None = None, cache_index=None):
+    """cache: {"mamba": leaves (G, E, B, ...), "attn": {"k","v"} (G, B, ...)}"""
+    shared = params["shared_attn"]
+
+    def group_body(carry, inp):
+        h = carry
+        if cache is None:
+            mamba_grp = inp
+            def inner(hh, blk):
+                hh, _, _ = ssm.mamba2_block_apply(blk, hh, cfg,
+                                                  positions=positions)
+                return hh, None
+            h, _ = jax.lax.scan(inner, h, mamba_grp)
+            h, _, _ = dense_block_apply(shared, h, cfg, positions=positions)
+            return h, None
+        mamba_grp, mamba_cache_grp, attn_cache = inp
+        def inner(hh, xs):
+            blk, c = xs
+            hh, nc, _ = ssm.mamba2_block_apply(blk, hh, cfg,
+                                               positions=positions, cache=c,
+                                               cache_index=cache_index)
+            return hh, nc
+        h, new_mamba = jax.lax.scan(inner, h, (mamba_grp, mamba_cache_grp))
+        h, new_attn, _ = dense_block_apply(shared, h, cfg, positions=positions,
+                                           cache=attn_cache,
+                                           cache_index=cache_index)
+        return h, (new_mamba, new_attn)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+    if cache is None:
+        x, _ = jax.lax.scan(group_body, x, params["blocks"])
+        return x, None
+    x, (new_mamba, new_attn) = jax.lax.scan(
+        group_body, x, (params["blocks"], cache["mamba"], cache["attn"]))
+    return x, {"mamba": new_mamba, "attn": new_attn}
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      kv_dtype=jnp.bfloat16) -> dict:
+    g, e = n_groups(cfg), cfg.attn_every
+    mamba = ssm.init_mamba2_cache(cfg, batch, n_layers=cfg.n_layers)
+    mamba = jax.tree.map(lambda x: x.reshape(g, e, *x.shape[1:]), mamba)
+    attn = {
+        "k": jnp.zeros((g, batch, max_len, cfg.kv_heads, cfg.hd), kv_dtype),
+        "v": jnp.zeros((g, batch, max_len, cfg.kv_heads, cfg.hd), kv_dtype),
+    }
+    return {"mamba": mamba, "attn": attn}
+
+
+def hybrid_loss(params: Params, batch: dict, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"]["table"][tokens].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, _ = _hybrid_backbone(params, x, cfg, positions=positions)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        from repro.kernels import ops
+        logits = ops.matmul(x, params["embed"]["table"], transpose_b=True,
+                            out_dtype=jnp.float32)
+    else:
+        from repro.kernels import ops
+        logits = ops.matmul(x, params["head"]["w"], out_dtype=jnp.float32)
+    loss, metrics = L.cross_entropy(logits, batch["labels"],
+                                    batch.get("loss_mask"))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def hybrid_prefill(params: Params, batch: dict, cfg: ModelConfig,
+                   max_len: int | None = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cache = batch.get("cache") or init_hybrid_cache(cfg, B, max_len or S)
+    x = params["embed"]["table"][tokens].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, cache = _hybrid_backbone(params, x, cfg, positions=positions,
+                                cache=cache, cache_index=jnp.int32(0))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    from repro.kernels import ops
+    logits = ops.matmul(x[:, -1:], params["head"]["w"], out_dtype=jnp.float32)
+    return logits[:, 0], {"cache": cache, "index": jnp.int32(S)}
+
+
+def hybrid_decode_step(params: Params, token: jax.Array, state: dict,
+                       cfg: ModelConfig):
+    B = token.shape[0]
+    idx = state["index"]
+    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    x = params["embed"]["table"][token[:, None]].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, cache = _hybrid_backbone(params, x, cfg, positions=positions,
+                                cache=state["cache"], cache_index=idx)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    from repro.kernels import ops
+    logits = ops.matmul(x, params["head"]["w"], out_dtype=jnp.float32)
+    return logits[:, 0], {"cache": cache, "index": idx + 1}

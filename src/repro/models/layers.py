@@ -1,0 +1,288 @@
+"""Shared neural building blocks (pure JAX, bf16 activations, fp32 math).
+
+Every matmul routes through `repro.kernels.ops.matmul`, so the paper's
+predictor-tuned Pallas GEMM is the compute path on TPU and XLA dot elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _dt(config: ModelConfig):
+    return jnp.dtype(config.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, config: ModelConfig,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(
+        _dt(config))
+
+
+def embed_init(key, vocab: int, d: int, config: ModelConfig) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(
+        _dt(config))
+
+
+# ---------------- norms ----------------
+
+def rmsnorm_init(d: int, config: ModelConfig) -> Params:
+    return {"scale": jnp.ones((d,), _dt(config))}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------- rotary embeddings ----------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (B, S, 3) = (t, h, w) ids.
+
+    The hd/2 frequency channels are partitioned into (t, h, w) sections;
+    each section rotates by its own position stream.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])  # (hd/2,) in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),                   # (B, S, 3)
+        jnp.broadcast_to(sec[None, None, :], positions.shape[:2] + sec.shape),
+        axis=-1,
+    )                                                    # (B, S, hd/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- attention ----------------
+
+def attention_init(key, config: ModelConfig, d_model: int | None = None
+                   ) -> Params:
+    d = d_model or config.d_model
+    hd, H, KV = config.hd, config.n_heads, config.kv_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, H * hd, config),
+        "wk": dense_init(ks[1], d, KV * hd, config),
+        "wv": dense_init(ks[2], d, KV * hd, config),
+        "wo": dense_init(ks[3], H * hd, d, config, scale=1.0 / math.sqrt(H * hd)),
+    }
+    if config.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), _dt(config))
+        p["bk"] = jnp.zeros((KV * hd,), _dt(config))
+        p["bv"] = jnp.zeros((KV * hd,), _dt(config))
+    return p
+
+
+Q_CHUNK = 1024  # query-block size for memory-bounded exact attention
+
+
+def _sdpa_block(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                q_offset: jax.Array | int = 0,
+                kv_len: jax.Array | None = None) -> jax.Array:
+    """One query block. q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).
+
+    Matmuls stay in the input dtype (bf16 on TPU -> MXU) with fp32
+    accumulation; softmax in fp32.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    mask = None
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos                              # (Sq, Sk)
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < kv_len         # (1, Sk)
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", w.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+          q_offset: jax.Array | int = 0,
+          kv_len: jax.Array | None = None) -> jax.Array:
+    """Exact attention, query-chunked so peak score memory is
+    O(Q_CHUNK x Sk) instead of O(Sq x Sk) — required for the 32k/500k cells.
+    """
+    B, Sq, H, hd = q.shape
+    if Sq <= Q_CHUNK or Sq % Q_CHUNK != 0:
+        return _sdpa_block(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_len=kv_len)
+    nb = Sq // Q_CHUNK
+    qb = q.reshape(B, nb, Q_CHUNK, H, hd).swapaxes(0, 1)  # (nb, B, qc, H, hd)
+
+    def body(_, xs):
+        blk, i = xs
+        off = q_offset + i * Q_CHUNK
+        o = _sdpa_block(blk, k, v, causal=causal, q_offset=off, kv_len=kv_len)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nb)))
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,
+    config: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    kv_cache: dict | None = None,
+    cache_index: jax.Array | None = None,
+    xa: jax.Array | None = None,          # cross-attention memory
+) -> tuple[jax.Array, dict | None]:
+    """Standard (GQA) attention with optional KV cache and cross-attention."""
+    B, S, d = x.shape
+    H, KV, hd = config.n_heads, config.kv_heads, config.hd
+    from repro.distributed.tp import tp_column, tp_row
+
+    src = xa if xa is not None else x
+    q = tp_column(x, p["wq"], config)
+    k = tp_column(src, p["wk"], config)
+    v = tp_column(src, p["wv"], config)
+    if config.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, src.shape[1], KV, hd)
+    v = v.reshape(B, src.shape[1], KV, hd)
+    if xa is None:  # self-attention gets RoPE
+        if config.mrope:
+            q = apply_mrope(q, positions, config.rope_theta,
+                            config.mrope_sections)
+            k = apply_mrope(k, positions, config.rope_theta,
+                            config.mrope_sections)
+        else:
+            q = apply_rope(q, positions, config.rope_theta)
+            k = apply_rope(k, positions, config.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and xa is None:
+        # decode: write new k/v at cache_index, attend over the prefix
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        # quantized caches (e.g. fp8) convert at read; on TPU the convert
+        # fuses into the attention loads
+        ck_c = ck if ck.dtype == q.dtype else ck.astype(q.dtype)
+        cv_c = cv if cv.dtype == q.dtype else cv.astype(q.dtype)
+        out = _sdpa(q, ck_c, cv_c, causal=True, q_offset=cache_index,
+                    kv_len=cache_index + S)
+    elif kv_cache is not None:  # cached cross-attention (enc-dec decode)
+        out = _sdpa(q, kv_cache["k"], kv_cache["v"], causal=False)
+        new_cache = kv_cache
+    else:
+        out = _sdpa(q, k, v, causal=causal and xa is None)
+    y = tp_row(out.reshape(B, S, H * hd), p["wo"], config)
+    return y, new_cache
+
+
+# ---------------- MLPs ----------------
+
+def swiglu_init(key, config: ModelConfig, d_ff: int | None = None,
+                d_model: int | None = None) -> Params:
+    """Gated (SwiGLU) or plain (GELU) FFN depending on config.gated_mlp."""
+    d = d_model or config.d_model
+    f = d_ff or config.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, d, f, config),
+        "w_down": dense_init(k3, f, d, config, scale=1.0 / math.sqrt(f)),
+    }
+    if config.gated_mlp:
+        p["w_gate"] = dense_init(k1, d, f, config)
+    return p
+
+
+def swiglu_apply(p: Params, x: jax.Array,
+                 config: ModelConfig | None = None) -> jax.Array:
+    if config is not None and config.tp_collectives == "explicit":
+        from repro.distributed.tp import tp_column, tp_row
+
+        u = tp_column(x, p["w_up"], config)
+        if "w_gate" in p:
+            g = tp_column(x, p["w_gate"], config)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        else:
+            h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+        return tp_row(h, p["w_down"], config)
+    u = ops.matmul(x, p["w_up"])
+    if "w_gate" in p:
+        g = ops.matmul(x, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return ops.matmul(h, p["w_down"])
+
+
+# ---------------- losses ----------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None,
+                  z_loss: float = 1e-4) -> tuple[jax.Array, dict]:
+    """Token-level CE with optional z-loss, fp32 softmax."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    zl = z_loss * lse ** 2
+    per_tok = nll + zl
+    if mask is None:
+        mask = jnp.ones_like(per_tok)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    acc = ((jnp.argmax(lf, -1) == labels).astype(jnp.float32) * mask).sum() / denom
+    return loss, {"nll": (nll * mask).sum() / denom, "accuracy": acc}

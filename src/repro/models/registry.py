@@ -1,0 +1,138 @@
+"""Uniform model API over all families.
+
+    model = get_model(cfg)
+    params = model.init(key, cfg)
+    loss, metrics = model.loss(params, batch, cfg)          # train forward
+    logits, state = model.prefill(params, batch, cfg)       # serving
+    logits, state = model.decode_step(params, token, state, cfg)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, moe, ssm, vlm
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable | None = None   # (cfg, batch, max_len) -> cache
+
+
+# ---- per-family wiring ----
+
+def _dense_api() -> ModelApi:
+    return ModelApi(
+        init=lambda key, cfg: tfm.lm_init(key, cfg, tfm.dense_block_init),
+        loss=lambda p, b, cfg: tfm.lm_loss(p, b, cfg, tfm.dense_block_apply),
+        prefill=lambda p, b, cfg, **kw: tfm.lm_prefill(
+            p, b, cfg, tfm.dense_block_apply, **kw),
+        decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
+            p, t, s, cfg, tfm.dense_block_apply),
+        init_cache=lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml),
+    )
+
+
+def _moe_api() -> ModelApi:
+    return ModelApi(
+        init=lambda key, cfg: tfm.lm_init(key, cfg, moe.moe_block_init),
+        loss=lambda p, b, cfg: tfm.lm_loss(p, b, cfg, moe.moe_block_apply),
+        prefill=lambda p, b, cfg, **kw: tfm.lm_prefill(
+            p, b, cfg, moe.moe_block_apply, **kw),
+        decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
+            p, t, s, cfg, moe.moe_block_apply),
+        init_cache=lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml),
+    )
+
+
+def _with_cache(batch: dict, cfg: ModelConfig, init_cache, max_len=None):
+    if "cache" in batch and batch["cache"] is not None:
+        return batch
+    b = dict(batch)
+    bs = b["tokens"].shape[0]
+    ml = max_len or b["tokens"].shape[1]
+    b["cache"] = init_cache(cfg, bs, ml)
+    return b
+
+
+def _mla_moe_api() -> ModelApi:
+    ic = lambda cfg, b, ml: moe.init_mla_cache(cfg, b, ml)
+    return ModelApi(
+        init=lambda key, cfg: tfm.lm_init(key, cfg, moe.mla_moe_block_init),
+        loss=lambda p, b, cfg: tfm.lm_loss(p, b, cfg, moe.mla_moe_block_apply),
+        prefill=lambda p, b, cfg, max_len=None: tfm.lm_prefill(
+            p, _with_cache(b, cfg, ic, max_len), cfg, moe.mla_moe_block_apply),
+        decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
+            p, t, s, cfg, moe.mla_moe_block_apply),
+        init_cache=ic,
+    )
+
+
+def _mamba1_api() -> ModelApi:
+    ic = lambda cfg, b, ml: ssm.init_mamba1_cache(cfg, b)
+    return ModelApi(
+        init=lambda key, cfg: tfm.lm_init(key, cfg, ssm.mamba1_block_init),
+        loss=lambda p, b, cfg: tfm.lm_loss(p, b, cfg, ssm.mamba1_block_apply),
+        prefill=lambda p, b, cfg, max_len=None: tfm.lm_prefill(
+            p, _with_cache(b, cfg, ic, max_len), cfg, ssm.mamba1_block_apply),
+        decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
+            p, t, s, cfg, ssm.mamba1_block_apply),
+        init_cache=ic,
+    )
+
+
+def _hybrid_api() -> ModelApi:
+    return ModelApi(
+        init=hybrid.hybrid_init,
+        loss=hybrid.hybrid_loss,
+        prefill=hybrid.hybrid_prefill,
+        decode_step=hybrid.hybrid_decode_step,
+        init_cache=lambda cfg, b, ml: hybrid.init_hybrid_cache(cfg, b, ml),
+    )
+
+
+def _encdec_api() -> ModelApi:
+    return ModelApi(
+        init=encdec.encdec_init,
+        loss=encdec.encdec_loss,
+        prefill=encdec.encdec_prefill,
+        decode_step=encdec.encdec_decode_step,
+    )
+
+
+def _vlm_api() -> ModelApi:
+    return ModelApi(
+        init=vlm.vlm_init,
+        loss=vlm.vlm_loss,
+        prefill=vlm.vlm_prefill,
+        decode_step=vlm.vlm_decode_step,
+        init_cache=lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml),
+    )
+
+
+_FAMILIES: dict[str, Callable[[], ModelApi]] = {
+    "dense": _dense_api,
+    "moe": _moe_api,
+    "mla_moe": _mla_moe_api,
+    "mamba1": _mamba1_api,
+    "hybrid": _hybrid_api,
+    "encdec": _encdec_api,
+    "vlm": _vlm_api,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.kind not in _FAMILIES:
+        raise KeyError(f"unknown model kind {cfg.kind!r}")
+    return _FAMILIES[cfg.kind]()

@@ -1,0 +1,208 @@
+"""Decoder-only transformer scaffolding (dense blocks; scan over layers).
+
+Generic over the block functions so MoE/VLM/hybrid families reuse the same
+embedding / scan / head / cache plumbing. Layers are stacked along a leading
+axis and driven by `lax.scan` to keep the HLO size O(1) in depth (critical
+for the 512-device dry-run compiles).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+# ---------------- dense block ----------------
+
+
+def dense_block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg),
+        "mlp": L.swiglu_init(k2, cfg),
+    }
+
+
+def residual_spec(cfg: ModelConfig, x: jax.Array) -> tuple:
+    """Sharding names for the residual stream. With sequence parallelism the
+    seq dim additionally shards over the TP axis between blocks (Megatron
+    SP): the surrounding all-reduces become reduce-scatter + all-gather
+    (half the wire bytes) and norms/residual math run on 1/TP of the
+    activations."""
+    if cfg.sequence_parallel and x.ndim >= 3 and x.shape[1] > 1:
+        return ("batch", "seq_tp", None)
+    return ("batch", None, None)
+
+
+def dense_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                      positions: jax.Array, cache: dict | None = None,
+                      cache_index=None):
+    """Uniform block API across families: returns (x, cache, aux_loss).
+
+    With sequence parallelism the canonical Megatron-SP structure applies:
+    the residual stream and norms stay seq-sharded over TP; activations are
+    all-gathered only at the qkv/gate matmul inputs, and the wo/w_down
+    partial sums are constrained seq-sharded *before* the residual add so
+    XLA lowers them as reduce-scatter (half the all-reduce wire bytes)."""
+    sp = cfg.sequence_parallel and x.ndim == 3 and x.shape[1] > 1
+    rs = residual_spec(cfg, x)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if sp:
+        h = shard_activation(h, "batch", None, None)   # all-gather point
+    attn_out, new_cache = L.attention_apply(
+        p["attn"], h, cfg, positions=positions, kv_cache=cache,
+        cache_index=cache_index)
+    if sp:
+        attn_out = shard_activation(attn_out, *rs)     # reduce-scatter point
+    x = x + attn_out
+    x = shard_activation(x, *rs)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if sp:
+        h = shard_activation(h, "batch", None, None)   # all-gather point
+    mlp_out = L.swiglu_apply(p["mlp"], h, cfg)
+    if sp:
+        mlp_out = shard_activation(mlp_out, *rs)       # reduce-scatter point
+    x = x + mlp_out
+    x = shard_activation(x, *rs)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------- generic LM over any block ----------------
+
+
+def lm_init(key, cfg: ModelConfig,
+            block_init: Callable = dense_block_init) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    blocks = jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+    params: Params = {
+        "embed": {"table": L.embed_init(ke, cfg.vocab, cfg.d_model, cfg)},
+        "blocks": blocks,
+        "ln_f": L.rmsnorm_init(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L.dense_init(kh, cfg.d_model, cfg.vocab, cfg)}
+    return params
+
+
+def _embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"]["table"][tokens]
+    return shard_activation(x.astype(jnp.dtype(cfg.activation_dtype)),
+                            "batch", None, None)
+
+
+def _unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return ops.matmul(x, params["embed"]["table"], transpose_b=True,
+                          out_dtype=jnp.float32)
+    return ops.matmul(x, params["head"]["w"], out_dtype=jnp.float32)
+
+
+def _scan_blocks(params: Params, x: jax.Array, cfg: ModelConfig,
+                 block_apply: Callable, *, positions, cache=None,
+                 cache_index=None):
+    """Run stacked blocks via lax.scan; threads per-layer cache if given.
+
+    Returns (x, new_caches, total_aux_loss)."""
+
+    def body(carry, inp):
+        h, aux_acc = carry
+        if cache is None:
+            blk = inp
+            h, _, aux = block_apply(blk, h, cfg, positions=positions)
+            return (h, aux_acc + aux), None
+        blk, layer_cache = inp
+        h, new_cache, aux = block_apply(blk, h, cfg, positions=positions,
+                                        cache=layer_cache,
+                                        cache_index=cache_index)
+        return (h, aux_acc + aux), new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = params["blocks"] if cache is None else (params["blocks"], cache)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, caches, aux
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            block_apply: Callable = dense_block_apply) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed(params, tokens, cfg)
+    x, _, aux = _scan_blocks(params, x, cfg, block_apply, positions=positions)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    loss, metrics = L.cross_entropy(logits, batch["labels"],
+                                    batch.get("loss_mask"))
+    loss = loss + aux
+    metrics["aux_loss"] = aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------- serving (prefill / decode) ----------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
+               block_apply: Callable = dense_block_apply,
+               max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Full-sequence forward filling the KV cache; returns last logits."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cache = batch.get("cache")
+    if cache is None:
+        cache = init_kv_cache(cfg, B, max_len)
+    # constrain only the batch dim; per-family inner-dim shardings are set by
+    # the launcher's explicit in_shardings (see launch/dryrun.py)
+    cache = jax.tree.map(lambda c: shard_activation(c, None, "batch"), cache)
+    x = _embed(params, tokens, cfg)
+    x, cache, _ = _scan_blocks(params, x, cfg, block_apply,
+                               positions=positions, cache=cache,
+                               cache_index=jnp.int32(0))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)
+    return logits[:, 0], {"kv": cache, "index": jnp.int32(S)}
+
+
+def lm_decode_step(params: Params, token: jax.Array, state: dict,
+                   cfg: ModelConfig,
+                   block_apply: Callable = dense_block_apply
+                   ) -> tuple[jax.Array, dict]:
+    """One-token decode. token: (B,) int32. state: {"kv", "index"}."""
+    B = token.shape[0]
+    idx = state["index"]
+    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    x = _embed(params, token[:, None], cfg)
+    x, cache, _ = _scan_blocks(params, x, cfg, block_apply,
+                               positions=positions, cache=state["kv"],
+                               cache_index=idx)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    return logits[:, 0], {"kv": cache, "index": idx + 1}

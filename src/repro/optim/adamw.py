@@ -1,0 +1,140 @@
+"""AdamW with mixed-precision master weights and distributed-friendly layout.
+
+Params may live in bf16; the optimizer keeps fp32 master copies + moments.
+Under the production mesh the moments/master inherit the param sharding
+*plus* ZeRO-1 sharding over the data axis where the leading dim allows
+(see `zero1_shardings`), which is what keeps 236B-param configs within HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def init_opt_state(params: Params) -> dict:
+    # copy=True: fp32 params must not alias their master weights, or a
+    # donated train-state would donate the same buffer twice
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params: Params, grads: Params, opt_state: dict,
+                  cfg: AdamWConfig) -> tuple[Params, dict, dict]:
+    """One AdamW step. grads are fp32 (already all-reduced by SPMD)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_ma = jax.tree.leaves(opt_state["master"])
+    treedef = jax.tree.structure(grads)
+    new = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = jax.tree.unflatten(treedef, [x[0] for x in new])
+    new_v = jax.tree.unflatten(treedef, [x[1] for x in new])
+    new_master = jax.tree.unflatten(treedef, [x[2] for x in new])
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), new_master,
+                              params)
+    metrics = {"grad_norm": gnorm, "lr": lr, "clip_scale": scale}
+    return new_params, {
+        "step": step, "master": new_master, "m": new_m, "v": new_v,
+    }, metrics
+
+
+def zero1_shardings(params_shape, param_shardings, mesh):
+    """ZeRO-1: shard optimizer moments further over the data axis on the
+    first unsharded dim whose size the data axis divides (best-effort; falls
+    back to the param sharding otherwise). Keeps the 3x fp32 optimizer state
+    from being replicated across data parallelism."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if "data" not in mesh.axis_names:
+        return {
+            "step": NamedSharding(mesh, P()),
+            "master": param_shardings,
+            "m": param_shardings,
+            "v": param_shardings,
+        }
+    dsize = mesh.shape["data"]
+
+    def shard_more(shape_leaf, ns):
+        shape = getattr(shape_leaf, "shape", ())
+        spec = list(ns.spec) + [None] * (len(shape) - len(ns.spec))
+        used = set()
+        for s in spec:
+            if isinstance(s, tuple):
+                used.update(s)
+            elif s is not None:
+                used.add(s)
+        if "data" in used:
+            return ns
+        for i, dim in enumerate(shape):
+            if spec[i] is None and dim % dsize == 0 and dim > 0:
+                spec[i] = "data"
+                return NamedSharding(ns.mesh, P(*spec))
+        return ns
+
+    zs = jax.tree.map(shard_more, params_shape, param_shardings,
+                      is_leaf=lambda x: hasattr(x, "shape"))
+    return {
+        "step": NamedSharding(mesh, P()),
+        "master": zs,
+        "m": zs,
+        "v": zs,
+    }

@@ -1,0 +1,113 @@
+"""Batched serving engine: continuous-batching-lite over fixed decode slots.
+
+Requests enter a queue; the engine packs up to `max_batch` prompts per
+prefill wave, then decodes all active slots in lockstep (one jitted decode
+step per token). Finished sequences (EOS or budget) free their slot for the
+next wave — the static-shape analogue of continuous batching that serves
+TPU-style compiled steps well.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray          # generated ids
+    prompt_len: int
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, model, params, cfg: ModelConfig, *,
+                 max_batch: int = 8, max_len: int = 512,
+                 greedy: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.greedy = greedy
+        self.queue: deque[Request] = deque()
+        self._rng = np.random.default_rng(seed)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, t, s: model.decode_step(p, t, s, cfg))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.greedy:
+            return logits.argmax(-1).astype(np.int32)
+        z = logits - logits.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(len(q), p=q) for q in p],
+                        dtype=np.int32)
+
+    def run_wave(self) -> list[Result]:
+        """Serve one wave: take up to max_batch queued requests, prefill
+        (padded to a common length), decode until all finish."""
+        if not self.queue:
+            return []
+        batch_reqs = [self.queue.popleft()
+                      for _ in range(min(self.max_batch, len(self.queue)))]
+        B = len(batch_reqs)
+        S = max(len(r.prompt) for r in batch_reqs)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(batch_reqs):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        logits = np.asarray(logits, np.float32)
+
+        budget = max(r.max_new_tokens for r in batch_reqs)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        steps = 0
+        cur = self._sample(logits)
+        for i in range(B):
+            out[i].append(int(cur[i]))
+        while steps < budget - 1 and not done.all():
+            logits, state = self._decode(self.params, jnp.asarray(cur), state)
+            logits = np.asarray(logits, np.float32)
+            cur = self._sample(logits)
+            steps += 1
+            for i, r in enumerate(batch_reqs):
+                if done[i]:
+                    continue
+                tok = int(cur[i])
+                out[i].append(tok)
+                if (r.eos_id is not None and tok == r.eos_id) or (
+                        len(out[i]) >= r.max_new_tokens):
+                    done[i] = True
+        return [
+            Result(uid=r.uid, tokens=np.array(out[i], np.int32),
+                   prompt_len=len(r.prompt), steps=len(out[i]))
+            for i, r in enumerate(batch_reqs)
+        ]
+
+    def run_until_empty(self) -> list[Result]:
+        results = []
+        while self.queue:
+            results.extend(self.run_wave())
+        return results

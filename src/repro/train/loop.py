@@ -1,0 +1,104 @@
+"""The training loop: step fn + data + checkpoints + fault tolerance.
+
+Single-host-runnable (this container) but written for multi-host: all
+host-side coordination is factored through host_id/n_hosts, and every
+restart path (preemption, crash, elastic re-mesh) resumes bit-exact from
+(checkpoint, data pipeline state, rng).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataLoader
+from repro.train.ft import PreemptionHandler, StepTimer, StragglerDetector
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 100
+    log_every: int = 10
+    keep_ckpts: int = 3
+
+
+def run_train_loop(
+    *,
+    train_step: Callable,
+    state: dict,
+    loader: DataLoader,
+    ckpt: CheckpointManager,
+    loop_cfg: LoopConfig,
+    start_step: int = 0,
+    host_id: int = 0,
+    n_hosts: int = 1,
+    log_fn: Callable[[str], None] = print,
+    install_signal_handlers: bool = True,
+) -> tuple[dict, dict]:
+    """Returns (final_state, summary)."""
+    timer = StepTimer()
+    stragglers = StragglerDetector(n_hosts)
+    preempt = PreemptionHandler(install=install_signal_handlers)
+    losses = []
+    step = start_step
+    flagged_hosts: list[int] = []
+
+    while step < loop_cfg.total_steps:
+        batch = loader.next()
+        timer.start()
+        state, metrics = train_step(state, batch)
+        # block on the loss so step time includes device work
+        loss = float(jax.device_get(metrics["loss"]))
+        dt = timer.stop()
+        losses.append(loss)
+        stragglers.record(host_id, dt)
+        flagged_hosts = stragglers.update_flags()
+        step += 1
+
+        if step % loop_cfg.log_every == 0:
+            log_fn(f"step {step:6d} loss {loss:.4f} "
+                   f"({dt * 1e3:.0f} ms/step)"
+                   + (f" STRAGGLERS={flagged_hosts}" if flagged_hosts else ""))
+        if step % loop_cfg.ckpt_every == 0:
+            ckpt.save(step, state, data_state=loader.checkpoint())
+        if preempt.preempted:
+            log_fn(f"preempted at step {step}; saving final checkpoint")
+            ckpt.save(step, state, data_state=loader.checkpoint(),
+                      blocking=True)
+            break
+
+    ckpt.wait()
+    summary = {
+        "final_step": step,
+        "final_loss": losses[-1] if losses else float("nan"),
+        "mean_step_time_s": timer.mean,
+        "loss_curve": np.array(losses),
+        "stragglers": flagged_hosts,
+        "preempted": preempt.preempted,
+    }
+    preempt.restore()
+    return state, summary
+
+
+def resume_or_init(
+    *,
+    ckpt: CheckpointManager,
+    init_fn: Callable[[], dict],
+    loader: DataLoader,
+    shardings=None,
+) -> tuple[dict, int]:
+    """Restart-safe state construction: restore the latest checkpoint if one
+    exists (placing arrays on the current mesh), else initialize fresh."""
+    latest = ckpt.latest_step()
+    if latest is None:
+        return init_fn(), 0
+    state, data_state = ckpt.restore(latest, shardings=shardings)
+    if data_state is not None:
+        loader.restore(data_state)
+    return state, latest

@@ -1,0 +1,94 @@
+"""pjit train/serve step builders.
+
+`make_train_step(model, cfg, opt_cfg)` returns a pure (state, batch) ->
+(state, metrics) function with donated state, microbatch gradient
+accumulation (scan), and bf16 gradient all-reduce (params are bf16, so SPMD
+reduces cotangents in bf16 — half the DP wire bytes of fp32).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+State = dict[str, Any]
+
+
+def init_train_state(key, model, cfg: ModelConfig) -> State:
+    params = model.init(key, cfg)
+    return {
+        "params": params,
+        "opt": init_opt_state(params),
+        "rng": jax.random.key_data(jax.random.key(0)),
+    }
+
+
+def make_train_step(model, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, cfg)
+        return loss, metrics
+
+    def train_step(state: State, batch: dict) -> tuple[State, dict]:
+        params = state["params"]
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # gradient accumulation over leading micro-splits
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), ms = jax.lax.scan(acc_body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        new_state = {"params": new_params, "opt": new_opt,
+                     "rng": state["rng"]}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch, cfg)
+        return metrics
+
+    return eval_step
+
+
+def make_serve_steps(model, cfg: ModelConfig):
+    """(prefill_fn, decode_fn) suitable for jit/pjit."""
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, cfg)
+
+    def decode(params, token, state):
+        return model.decode_step(params, token, state, cfg)
+
+    return prefill, decode

@@ -1,0 +1,60 @@
+"""Elastic restart: save on one mesh shape, restore on another."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code, devices):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_save_8dev_restore_4dev(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    _run(f"""
+        import jax
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.configs import get_config
+        from repro.distributed.sharding import param_shardings, set_mesh_rules
+        from repro.launch.elastic import best_mesh_for
+        from repro.models.registry import get_model
+
+        cfg = get_config("qwen2-7b", smoke=True)
+        model = get_model(cfg)
+        mesh = best_mesh_for(8, prefer_model=4)
+        set_mesh_rules(mesh, fsdp=False)
+        params = model.init(jax.random.key(0), cfg)
+        params = jax.device_put(params, param_shardings(params, mesh))
+        CheckpointManager({ckpt!r}).save(7, {{"params": params}},
+                                         blocking=True)
+        print("SAVED", dict(mesh.shape))
+    """, devices=8)
+    out = _run(f"""
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.launch.elastic import resume_elastic
+        from repro.models.registry import get_model
+        from repro.data.pipeline import smoke_batch
+
+        cfg, batch = smoke_batch("qwen2-7b", "train_4k")
+        model = get_model(cfg)
+        mesh, state, step = resume_elastic({ckpt!r}, model, cfg,
+                                           prefer_model=2)
+        assert step == 7, step
+        with mesh:
+            loss, _ = jax.jit(lambda p, b: model.loss(p, b, cfg))(
+                state["params"], batch)
+        assert np.isfinite(float(loss))
+        print("RESTORED", dict(mesh.shape), float(loss))
+    """, devices=4)
+    assert "RESTORED" in out

@@ -1,0 +1,156 @@
+"""Tests for the trip-count-aware HLO cost analyzer — validated against
+real compiled programs with hand-computable costs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hloanalyze import analyze_hlo, parse_hlo
+
+L, B, D = 8, 16, 64
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+@pytest.fixture(scope="module")
+def scan_matmul_text():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    return _compile_text(f, jnp.ones((B, D)), jnp.ones((L, D, D)))
+
+
+class TestFlops:
+    def test_scan_flops_exact(self, scan_matmul_text):
+        cost = analyze_hlo(scan_matmul_text, 1)
+        assert cost.flops == pytest.approx(L * 2 * B * D * D, rel=1e-6)
+
+    def test_trip_count_parsed(self, scan_matmul_text):
+        cost = analyze_hlo(scan_matmul_text, 1)
+        assert L in cost.while_trips.values()
+
+    def test_nested_scan_multiplies(self):
+        def g(x, ws):
+            def outer(c, w):
+                def inner(cc, _):
+                    return cc @ w, None
+                cc, _ = jax.lax.scan(inner, c, None, length=4)
+                return cc, None
+            y, _ = jax.lax.scan(outer, x, ws)
+            return y.sum()
+
+        text = _compile_text(g, jnp.ones((B, D)), jnp.ones((L, D, D)))
+        cost = analyze_hlo(text, 1)
+        assert cost.flops == pytest.approx(4 * L * 2 * B * D * D, rel=1e-6)
+
+    def test_grad_with_remat_counts_recompute(self):
+        def h(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            body = jax.checkpoint(body)
+            y, _ = jax.lax.scan(body, x, ws)
+            return (y ** 2).sum()
+
+        text = _compile_text(jax.grad(h), jnp.ones((L, D, D)),
+                             jnp.ones((B, D)))
+        cost = analyze_hlo(text, 1)
+        # fwd dot + recomputed dot + 2 backward dots per layer = 4 dots/layer
+        assert cost.flops == pytest.approx(4 * L * 2 * B * D * D, rel=1e-6)
+
+    def test_unrolled_matches_scanned(self):
+        """Ground truth cross-check: unrolled python-loop model (no while
+        loops, trivially countable) must match the scanned version."""
+        ws = jnp.ones((L, D, D))
+        x = jnp.ones((B, D))
+
+        def unrolled(x, ws):
+            for i in range(L):
+                x = x @ ws[i]
+            return x.sum()
+
+        def scanned(x, ws):
+            def body(c, w):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y.sum()
+
+        c_u = analyze_hlo(_compile_text(unrolled, x, ws), 1)
+        c_s = analyze_hlo(_compile_text(scanned, x, ws), 1)
+        assert c_u.flops == pytest.approx(c_s.flops, rel=1e-6)
+
+
+class TestBytes:
+    def test_bytes_bounded(self, scan_matmul_text):
+        cost = analyze_hlo(scan_matmul_text, 1)
+        # at least: weights read once (L*D*D*4) + carry read/write per step
+        floor = L * D * D * 4
+        ceil = 20 * floor
+        assert floor <= cost.hbm_bytes <= ceil
+
+    def test_kv_cache_dus_not_charged_full(self):
+        """Scan that dus-updates one slice of a big carried buffer must not
+        charge the full buffer per iteration."""
+        S, n = 1024, 16
+
+        def f(cache, xs):
+            def body(c, i):
+                c = jax.lax.dynamic_update_slice(c, xs[i][None], (i, 0))
+                return c, c[i].sum()
+            c, ys = jax.lax.scan(body, cache, jnp.arange(n))
+            return ys.sum()
+
+        text = _compile_text(f, jnp.zeros((n, S)), jnp.ones((n, S)))
+        cost = analyze_hlo(text, 1)
+        full_per_iter = n * S * 4 * n
+        assert cost.hbm_bytes < 0.5 * full_per_iter
+
+
+class TestCollectives:
+    def test_psum_inside_scan_scaled(self):
+        mesh = jax.make_mesh((1,), ("x",))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # collectives need >1 device to appear; just validate parser on text
+        hlo = """
+HloModule m
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128] get-tuple-element(%p), index=1
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128]) tuple(%ip, %ar)
+}
+%cond (p: (s32[], f32[128])) -> pred[] {
+  %p2 = (s32[], f32[128]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128]{0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[128]) tuple(%c0, %a)
+  %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+        cost = analyze_hlo(hlo, 4)
+        operand = 128 * 4
+        assert cost.collective_bytes == pytest.approx(
+            10 * 2 * operand * 3 / 4)
+        assert cost.while_trips.get("body") == 10
+
+
+class TestParser:
+    def test_parses_computations(self, scan_matmul_text):
+        comps, symtab = parse_hlo(scan_matmul_text)
+        assert any(c.is_entry for c in comps.values())
+        assert len(comps) > 2
+        assert symtab  # symbol table populated

@@ -1,0 +1,123 @@
+"""Tests for the analytical TPU GEMM simulator (the measurement substrate).
+
+These assert the paper's qualitative phenomena hold in our TPU adaptation:
+tiny tiles are pathological, there is an optimal mid-size tile, occupancy
+falls off a VMEM cliff for huge tiles, power rises with utilization and is
+TDP-capped, transposed layouts cost memory time.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.chips import TPU_V5E
+from repro.core.hwsim import GemmConfig, TpuGemmSimulator
+
+
+@pytest.fixture
+def sim():
+    return TpuGemmSimulator(seed=0)
+
+
+def _rt(sim, **kw):
+    return sim.analyze(GemmConfig(**kw)).runtime_ms
+
+
+class TestRuntimeModel:
+    def test_runtime_grows_with_problem_size(self, sim):
+        sizes = [512, 1024, 2048, 4096]
+        times = [_rt(sim, m=s, n=s, k=s) for s in sizes]
+        assert all(b > a for a, b in zip(times, times[1:]))
+
+    def test_tiny_tile_pathological(self, sim):
+        """Paper Figs 2-4: tile=1 is orders of magnitude slower. Our tile=8
+        analogue (VPU fallback + grid flood) must be >=50x slower than 256."""
+        slow = _rt(sim, m=2048, n=2048, k=2048, block_m=8, block_n=8, block_k=8)
+        fast = _rt(sim, m=2048, n=2048, k=2048, block_m=256, block_n=256, block_k=256)
+        assert slow > 50 * fast
+
+    def test_plateau_after_moderate_tiles(self, sim):
+        """Paper: runtime plateaus past tile 16; here once compute-bound
+        (>=512 blocks for a 4096^3 GEMM)."""
+        t512 = _rt(sim, m=4096, n=4096, k=4096, block_m=512, block_n=512, block_k=512)
+        t1024 = _rt(sim, m=4096, n=4096, k=4096, block_m=1024, block_n=1024, block_k=512)
+        assert abs(t1024 - t512) / t512 < 0.35
+
+    def test_misaligned_block_wastes_mxu(self, sim):
+        aligned = sim.analyze(GemmConfig(4096, 4096, 4096, 128, 128, 512))
+        misaligned = sim.analyze(GemmConfig(4096, 4096, 4096, 100, 100, 500))
+        assert misaligned.compute_time_ms > 1.5 * aligned.compute_time_ms
+
+    def test_transposed_layout_increases_memory_time(self, sim):
+        nn = sim.analyze(GemmConfig(4096, 4096, 4096, 256, 256, 512, layout="nn"))
+        tt = sim.analyze(GemmConfig(4096, 4096, 4096, 256, 256, 512, layout="tt"))
+        assert tt.memory_time_ms > nn.memory_time_ms * 1.3
+
+    def test_beta_adds_output_traffic(self, sim):
+        b0 = sim.analyze(GemmConfig(2048, 2048, 256, 256, 256, 256, beta=0.0))
+        b1 = sim.analyze(GemmConfig(2048, 2048, 256, 256, 256, 256, beta=1.0))
+        assert b1.memory_time_ms > b0.memory_time_ms
+
+    def test_fp32_slower_than_bf16(self, sim):
+        bf = _rt(sim, m=4096, n=4096, k=4096, dtype="bf16")
+        f32 = _rt(sim, m=4096, n=4096, k=4096, dtype="f32")
+        assert f32 > 1.5 * bf
+
+
+class TestOccupancy:
+    def test_vmem_cliff(self, sim):
+        """Table I analogue: buffers collapse as block working set grows."""
+        occ = sim.occupancy_report([128, 512, 1024, 2048])
+        vals = [occ[t] for t in [128, 512, 1024, 2048]]
+        assert all(a >= b for a, b in zip(vals, vals[1:]))
+        assert occ[2048] <= 4
+        assert occ[128] > 50
+
+    def test_oversized_block_invalid(self, sim):
+        t = sim.analyze(GemmConfig(8192, 8192, 8192, 4096, 4096, 4096))
+        assert not t.valid
+        assert t.max_inflight_buffers == 0
+
+    def test_non_pipelined_when_single_buffer(self, sim):
+        t = sim.analyze(GemmConfig(8192, 8192, 8192, 2048, 2048, 2048))
+        if t.valid and t.max_inflight_buffers < 2:
+            assert not t.pipelined
+
+
+class TestPowerModel:
+    def test_power_within_physical_range(self, sim):
+        for s in [256, 1024, 4096]:
+            t = sim.analyze(GemmConfig(s, s, s))
+            assert TPU_V5E.idle_power_w * 0.9 <= t.power_w <= TPU_V5E.tdp_w
+
+    def test_large_compute_bound_gemm_draws_more_power(self, sim):
+        small = sim.analyze(GemmConfig(256, 256, 256))
+        big = sim.analyze(GemmConfig(8192, 8192, 8192, 256, 256, 512))
+        assert big.power_w > small.power_w + 20
+
+    def test_energy_is_power_times_time(self, sim):
+        t = sim.analyze(GemmConfig(2048, 2048, 2048))
+        assert t.energy_j == pytest.approx(t.power_w * t.runtime_ms / 1e3, rel=1e-9)
+
+
+class TestMeasurementNoise:
+    def test_measurements_noisy_but_unbiased(self):
+        sim = TpuGemmSimulator(seed=1, noise=0.03)
+        cfg = GemmConfig(2048, 2048, 2048)
+        truth = sim.analyze(cfg).runtime_ms
+        xs = np.array([sim.measure(cfg).runtime_ms for _ in range(200)])
+        assert xs.std() > 0
+        assert abs(np.median(xs) - truth) / truth < 0.02
+
+    def test_invalid_config_measures_nan(self):
+        sim = TpuGemmSimulator(seed=0)
+        t = sim.measure(GemmConfig(8192, 8192, 8192, 4096, 4096, 4096))
+        assert not t.valid and math.isnan(t.runtime_ms)
+
+    def test_temperature_rises_under_load(self):
+        sim = TpuGemmSimulator(seed=0)
+        t0 = sim.measure(GemmConfig(8192, 8192, 8192, 256, 256, 512)).temperature_c
+        for _ in range(50):
+            last = sim.measure(GemmConfig(8192, 8192, 8192, 256, 256, 512))
+        assert last.temperature_c > t0

@@ -1,0 +1,219 @@
+"""Unit tests for the from-scratch ML stack (trees/forest/gbdt/stacking)."""
+
+import numpy as np
+import pytest
+
+from repro.core.mlperf import (
+    Binner,
+    DecisionTreeRegressor,
+    GradientBoostedTreesRegressor,
+    LinearRegression,
+    Pipeline,
+    RandomForestRegressor,
+    Ridge,
+    StackingRegressor,
+    StandardScaler,
+    TabularPreprocessor,
+    mae,
+    mean_pct_error,
+    median_pct_error,
+    mse,
+    r2_score,
+    train_test_split,
+)
+from repro.core.mlperf.jaxpredict import JaxForestPredictor
+from repro.core.mlperf.metrics import correlation_matrix, pearson_corr
+from repro.core.mlperf.pipeline import compute_gemm_characteristics
+
+
+def _toy(n=800, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-2, 2, size=(n, 4))
+    y = np.sin(X[:, 0] * 2) + X[:, 1] ** 2 - X[:, 2] * X[:, 3]
+    y = y + 0.05 * rng.normal(size=n)
+    return X, y
+
+
+class TestMetrics:
+    def test_r2_perfect(self):
+        y = np.arange(10.0)
+        assert r2_score(y, y) == pytest.approx(1.0)
+
+    def test_r2_mean_predictor_zero(self):
+        y = np.arange(10.0)
+        assert r2_score(y, np.full_like(y, y.mean())) == pytest.approx(0.0)
+
+    def test_mse_mae(self):
+        y = np.array([1.0, 2.0])
+        p = np.array([2.0, 0.0])
+        assert mse(y, p) == pytest.approx(2.5)
+        assert mae(y, p) == pytest.approx(1.5)
+
+    def test_pct_errors(self):
+        y = np.array([10.0, 100.0])
+        p = np.array([11.0, 150.0])
+        assert median_pct_error(y, p) == pytest.approx(30.0)
+        assert mean_pct_error(y, p) == pytest.approx(30.0)
+
+    def test_pearson(self):
+        a = np.arange(100.0)
+        assert pearson_corr(a, 3 * a + 1) == pytest.approx(1.0)
+        assert pearson_corr(a, -a) == pytest.approx(-1.0)
+
+    def test_correlation_matrix_shape(self):
+        t = {"a": np.arange(10.0), "b": np.arange(10.0)[::-1], "c": np.ones(10)}
+        m = correlation_matrix(t, ["a", "b"], ["a", "c"])
+        assert m.shape == (2, 2)
+        assert m[0, 0] == pytest.approx(1.0)
+
+
+class TestBinner:
+    def test_roundtrip_monotone(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(500, 3))
+        b = Binner(64).fit(X)
+        Xb = b.transform(X)
+        assert Xb.dtype == np.uint8
+        # binned order preserves raw order per column
+        for j in range(3):
+            order = np.argsort(X[:, j])
+            assert (np.diff(Xb[order, j].astype(int)) >= 0).all()
+
+    def test_missing_goes_to_reserved_bin(self):
+        X = np.array([[1.0], [np.nan], [2.0]])
+        b = Binner(8).fit(X)
+        Xb = b.transform(X)
+        assert Xb[1, 0] == 255
+
+
+class TestTree:
+    def test_fits_step_function(self):
+        X = np.linspace(0, 1, 200)[:, None]
+        y = (X[:, 0] > 0.5).astype(float)
+        t = DecisionTreeRegressor(max_depth=2).fit(X, y)
+        assert r2_score(y, t.predict(X)) > 0.99
+
+    def test_multioutput(self):
+        X, y = _toy()
+        Y = np.stack([y, -2 * y], axis=1)
+        t = DecisionTreeRegressor(max_depth=12).fit(X, Y)
+        p = t.predict(X)
+        assert p.shape == Y.shape
+        assert r2_score(Y, p) > 0.8
+
+    def test_feature_importance_finds_relevant(self):
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(500, 5))
+        y = 10 * X[:, 2] + 0.01 * rng.normal(size=500)
+        t = DecisionTreeRegressor(max_depth=4).fit(X, y)
+        assert np.argmax(t.feature_importances_) == 2
+
+    def test_sample_weight_zero_rows_ignored(self):
+        X = np.array([[0.0], [1.0], [2.0], [3.0]])
+        y = np.array([0.0, 0.0, 100.0, 0.0])
+        w = np.array([1.0, 1.0, 1.0, 0.0])
+        t = DecisionTreeRegressor(max_depth=3).fit(X, y, sample_weight=w)
+        # row 3 has zero weight: prediction there should follow row 2's leaf
+        assert t.predict(np.array([[3.0]]))[0] == pytest.approx(100.0)
+
+
+class TestForest:
+    def test_beats_linreg_on_nonlinear(self):
+        X, y = _toy()
+        Xtr, Xte, ytr, yte = train_test_split(X, y, random_state=0)
+        f = RandomForestRegressor(n_estimators=30, max_depth=8, random_state=0).fit(Xtr, ytr)
+        l = LinearRegression().fit(Xtr, ytr)
+        assert r2_score(yte, f.predict(Xte)) > r2_score(yte, l.predict(Xte)) + 0.2
+
+    def test_multioutput_shape(self):
+        X, y = _toy(300)
+        Y = np.stack([y, y + 1], axis=1)
+        f = RandomForestRegressor(n_estimators=5, max_depth=4, random_state=0).fit(X, Y)
+        assert f.predict(X).shape == (300, 2)
+
+    def test_deterministic_given_seed(self):
+        X, y = _toy(200)
+        p1 = RandomForestRegressor(n_estimators=5, random_state=42).fit(X, y).predict(X)
+        p2 = RandomForestRegressor(n_estimators=5, random_state=42).fit(X, y).predict(X)
+        np.testing.assert_allclose(p1, p2)
+
+    def test_jax_predict_matches_numpy(self):
+        X, y = _toy(300)
+        Y = np.stack([y, 2 * y], axis=1)
+        f = RandomForestRegressor(n_estimators=8, max_depth=6, random_state=0).fit(X, Y)
+        jp = JaxForestPredictor(f)
+        np.testing.assert_allclose(jp.predict(X), f.predict(X), rtol=1e-4, atol=1e-4)
+
+
+class TestGBDT:
+    def test_improves_with_rounds(self):
+        X, y = _toy()
+        Xtr, Xte, ytr, yte = train_test_split(X, y, random_state=0)
+        g = GradientBoostedTreesRegressor(n_estimators=150, max_depth=4, random_state=0)
+        g.fit(Xtr, ytr)
+        scores = g.staged_score_path(Xte, yte, lambda a, b: r2_score(a, b))
+        assert scores[-1] > scores[4]
+        assert scores[-1] > 0.8
+
+
+class TestStacking:
+    def test_stacking_at_least_matches_best_base(self):
+        X, y = _toy(600)
+        Xtr, Xte, ytr, yte = train_test_split(X, y, random_state=1)
+        bases = [
+            RandomForestRegressor(n_estimators=20, max_depth=6, random_state=0),
+            GradientBoostedTreesRegressor(n_estimators=40, max_depth=3, random_state=0),
+            LinearRegression(),
+        ]
+        s = StackingRegressor(bases, n_folds=4).fit(Xtr, ytr)
+        r2_s = r2_score(yte, s.predict(Xte))
+        best_base = max(
+            r2_score(yte, b.fit(Xtr, ytr).predict(Xte)) for b in bases
+        )
+        assert r2_s > best_base - 0.05  # within noise of / better than best base
+
+
+class TestPipeline:
+    def test_scaler_roundtrip(self):
+        X = np.random.default_rng(0).normal(5, 3, size=(100, 4))
+        s = StandardScaler()
+        Xs = s.fit_transform(X)
+        assert np.allclose(Xs.mean(axis=0), 0, atol=1e-9)
+        assert np.allclose(Xs.std(axis=0), 1, atol=1e-9)
+        np.testing.assert_allclose(s.inverse_transform(Xs), X)
+
+    def test_preprocessor_impute_clip_onehot(self):
+        table = {
+            "m": np.array([1.0, np.nan, 100.0, 2.0]),
+            "layout": np.array(["nn", "nt", "nn", "tt"]),
+        }
+        tp = TabularPreprocessor(clip_quantiles=(0.0, 0.75))
+        X = tp.fit_transform(table)
+        names = tp.feature_names_
+        assert "m" in names and "layout=nn" in names
+        mcol = X[:, names.index("m")]
+        assert np.isfinite(mcol).all()
+        assert mcol.max() <= np.nanquantile(table["m"], 0.75) + 1e-9
+
+    def test_gemm_characteristics(self):
+        t = compute_gemm_characteristics({"m": [2], "n": [3], "k": [4]})
+        assert t["total_flops"][0] == 48
+        assert t["bytes_accessed"][0] == 4 * (8 + 12 + 6)
+
+    def test_pipeline_end_to_end(self):
+        rng = np.random.default_rng(0)
+        table = {"m": rng.uniform(1, 10, 200), "n": rng.uniform(1, 10, 200)}
+        y = table["m"] * table["n"]
+        pipe = Pipeline(
+            TabularPreprocessor(),
+            RandomForestRegressor(n_estimators=20, max_depth=6, random_state=0),
+        )
+        pipe.fit(table, y)
+        assert r2_score(y, pipe.predict(table)) > 0.8
+
+    def test_train_test_split_dict(self):
+        table = {"a": np.arange(10)}
+        y = np.arange(10.0)
+        ttr, tte, ytr, yte = train_test_split(table, y, test_size=0.3, random_state=0)
+        assert len(ttr["a"]) == 7 and len(tte["a"]) == 3
+        assert set(ttr["a"]) | set(tte["a"]) == set(range(10))

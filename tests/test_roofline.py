@@ -1,0 +1,121 @@
+"""Tests for roofline term derivation and HLO collective parsing."""
+
+import pytest
+
+from repro.core.chips import TPU_V5E
+from repro.core.energy import energy_report, step_power_w
+from repro.core.roofline import (
+    RooflineReport,
+    format_report_table,
+    parse_collectives,
+    roofline_from_artifacts,
+)
+
+HLO = """
+HloModule jit_step, entry_computation_layout={...}
+
+ENTRY %main (p0: f32[1024,512]) -> f32[1024,512] {
+  %p0 = f32[1024,512]{1,0} parameter(0)
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[1024,512]{1,0} %p0.c), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[256,512]{1,0} reduce-scatter(f32[1024,512]{1,0} %all-reduce.1), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[1024,512]{1,0} collective-permute(f32[1024,512]{1,0} %p0), source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[1024,512]{1,0} all-to-all(f32[1024,512]{1,0} %p0), replica_groups={{0,1,2,3}}
+  ROOT %r = f32[1024,512]{1,0} add(f32[1024,512]{1,0} %all-reduce.1, f32[1024,512]{1,0} %cp)
+}
+"""
+
+
+class TestCollectiveParsing:
+    def test_counts(self):
+        st = parse_collectives(HLO, n_chips=8)
+        assert st.counts["all-reduce"] == 1
+        assert st.counts["all-gather"] == 1
+        assert st.counts["reduce-scatter"] == 1
+        assert st.counts["collective-permute"] == 1
+        assert st.counts["all-to-all"] == 1
+
+    def test_all_reduce_ring_bytes(self):
+        st = parse_collectives(HLO, n_chips=8)
+        operand = 1024 * 512 * 4
+        assert st.operand_bytes["all-reduce"] == operand
+        assert st.wire_bytes["all-reduce"] == pytest.approx(2 * operand * 3 / 4)
+
+    def test_all_gather_uses_group_dims(self):
+        st = parse_collectives(HLO, n_chips=8)
+        operand = 1024 * 512 * 2  # bf16
+        # replica_groups=[2,4] -> group size 4 -> (g-1) x operand
+        assert st.wire_bytes["all-gather"] == pytest.approx(operand * 3)
+
+    def test_permute_moves_operand_once(self):
+        st = parse_collectives(HLO, n_chips=8)
+        assert st.wire_bytes["collective-permute"] == 1024 * 512 * 4
+
+    def test_no_collectives(self):
+        st = parse_collectives("ENTRY %m { ROOT %x = f32[2]{0} add(...) }", 4)
+        assert st.total_wire_bytes == 0
+
+
+class TestRooflineReport:
+    def _report(self):
+        cost = {"flops": 1e12, "bytes accessed": 1e9}
+        return roofline_from_artifacts(
+            name="test", cost=cost, hlo_text=HLO, n_chips=256,
+            model_flops=0.8e12 * 256, dtype="bf16",
+        )
+
+    def test_terms_formulae(self):
+        r = self._report()
+        assert r.compute_s == pytest.approx(1e12 / TPU_V5E.peak("bf16"))
+        assert r.memory_s == pytest.approx(1e9 / TPU_V5E.hbm_bw)
+        assert r.collective_s > 0
+
+    def test_dominant_and_bound(self):
+        r = self._report()
+        assert r.dominant in ("compute", "memory", "collective")
+        assert r.bound_s == max(r.compute_s, r.memory_s, r.collective_s)
+        assert r.serial_s == pytest.approx(r.compute_s + r.memory_s + r.collective_s)
+
+    def test_useful_fraction(self):
+        r = self._report()
+        assert r.useful_flops_fraction == pytest.approx(0.8)
+
+    def test_roofline_fraction_bounded(self):
+        r = self._report()
+        assert 0 < r.roofline_fraction <= 1.0 + 1e-9
+
+    def test_table_format(self):
+        r = self._report()
+        txt = format_report_table([r])
+        assert "test" in txt and "dominant" in txt
+
+    def test_bytes_accessed_fallback_keys(self):
+        cost = {"flops": 1e12, "bytes accessed operand 0 {}": 5e8,
+                "bytes accessed output {}": 5e8}
+        r = roofline_from_artifacts(name="x", cost=cost, hlo_text="", n_chips=1)
+        assert r.memory_s == pytest.approx(1e9 / TPU_V5E.hbm_bw)
+
+
+class TestEnergyModel:
+    def _r(self, c=1e-3, m=5e-4, coll=2e-4):
+        return RooflineReport(
+            name="e", n_chips=256, dtype="bf16", hlo_flops=1, hlo_bytes=1,
+            collective_wire_bytes=1, compute_s=c, memory_s=m, collective_s=coll,
+            model_flops=1,
+        )
+
+    def test_power_range(self):
+        p = step_power_w(self._r())
+        assert TPU_V5E.idle_power_w < p <= TPU_V5E.tdp_w
+
+    def test_compute_bound_draws_more_than_idleish(self):
+        busy = step_power_w(self._r(c=1e-3, m=1e-3, coll=1e-3))
+        light = step_power_w(self._r(c=1e-3, m=1e-5, coll=1e-5))
+        assert busy > light
+
+    def test_energy_report_scaling(self):
+        er = energy_report(self._r(), tokens_per_step=1e6)
+        assert er.system_power_w == pytest.approx(er.chip_power_w * 256)
+        assert er.energy_per_token_j == pytest.approx(
+            er.energy_per_step_j / 1e6)
+        assert er.edp == pytest.approx(er.energy_per_step_j * er.step_s)

@@ -1,0 +1,266 @@
+"""Distributed-runtime tests: optimizer, checkpoint/restart, fault tolerance,
+data pipeline determinism, serving engine, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import (
+    DataConfig,
+    DataLoader,
+    SyntheticLMDataset,
+    smoke_batch,
+)
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state, lr_at
+from repro.serving.engine import Request, ServingEngine
+from repro.train.ft import StragglerDetector, StepTimer
+from repro.train.loop import LoopConfig, resume_or_init, run_train_loop
+from repro.train.step import init_train_state, make_train_step
+
+
+class TestAdamW:
+    def _setup(self):
+        params = {"w": jnp.ones((4, 4), jnp.float32),
+                  "b": jnp.zeros((4,), jnp.float32)}
+        grads = {"w": jnp.full((4, 4), 0.5), "b": jnp.ones((4,))}
+        return params, grads, init_opt_state(params)
+
+    def test_step_moves_params_against_grad(self):
+        params, grads, opt = self._setup()
+        cfg = AdamWConfig(lr=0.1, warmup_steps=0, weight_decay=0.0)
+        new_params, new_opt, metrics = apply_updates(params, grads, opt, cfg)
+        assert (np.asarray(new_params["w"]) < 1.0).all()
+        assert int(new_opt["step"]) == 1
+        assert metrics["grad_norm"] > 0
+
+    def test_grad_clip(self):
+        params, grads, opt = self._setup()
+        grads = jax.tree.map(lambda g: g * 1e6, grads)
+        cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0)
+        _, _, metrics = apply_updates(params, grads, opt, cfg)
+        assert float(metrics["clip_scale"]) < 1e-4
+
+    def test_lr_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                          min_lr_ratio=0.1)
+        lrs = [float(lr_at(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+        assert lrs[1] == pytest.approx(0.5)           # mid-warmup
+        assert lrs[2] == pytest.approx(1.0, abs=0.01) # peak
+        assert lrs[4] == pytest.approx(0.1, abs=0.01) # floor
+        assert lrs[3] < lrs[2]
+
+    def test_master_weights_fp32_with_bf16_params(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+        opt = init_opt_state(params)
+        assert opt["master"]["w"].dtype == jnp.float32
+        grads = {"w": jnp.full((4, 4), 0.125, jnp.bfloat16)}
+        new_params, new_opt, _ = apply_updates(
+            params, grads, opt, AdamWConfig(warmup_steps=0))
+        assert new_params["w"].dtype == jnp.bfloat16
+        assert new_opt["master"]["w"].dtype == jnp.float32
+
+
+class TestCheckpoint:
+    def _state(self, x=1.0):
+        return {"params": {"w": jnp.full((3, 3), x)},
+                "opt": {"step": jnp.int32(7)}}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(10, self._state(2.5), data_state={"step": 10},
+                 blocking=True)
+        state, ds = mgr.restore()
+        assert float(state["params"]["w"][0, 0]) == 2.5
+        assert ds["step"] == 10
+        assert mgr.latest_step() == 10
+
+    def test_async_save_then_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self._state(), blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_gc_keeps_newest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, self._state(float(s)), blocking=True)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_restore_specific_step(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=5)
+        for s in [1, 2]:
+            mgr.save(s, self._state(float(s)), blocking=True)
+        state, _ = mgr.restore(step=1)
+        assert float(state["params"]["w"][0, 0]) == 1.0
+
+    def test_atomic_no_partial_on_missing(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            mgr.restore()
+
+
+class TestFaultTolerance:
+    def test_straggler_flagging(self):
+        det = StragglerDetector(n_hosts=4)
+        for step in range(10):
+            for h in range(4):
+                det.record(h, 1.0 if h != 2 else 3.0)
+            flags = det.update_flags()
+        assert flags == [2]
+
+    def test_no_flags_when_uniform(self):
+        det = StragglerDetector(n_hosts=4)
+        for step in range(10):
+            for h in range(4):
+                det.record(h, 1.0 + 0.01 * h)
+            flags = det.update_flags()
+        assert flags == []
+
+    def test_recovered_straggler_unflagged(self):
+        det = StragglerDetector(n_hosts=2)
+        for _ in range(6):
+            det.record(0, 1.0)
+            det.record(1, 5.0)
+            det.update_flags()
+        for _ in range(30):
+            det.record(0, 1.0)
+            det.record(1, 1.0)
+            flags = det.update_flags()
+        assert flags == []
+
+    def test_step_timer_discards_warmup(self):
+        t = StepTimer(warmup=1)
+        for _ in range(3):
+            t.start()
+            t.stop()
+        assert len(t.times) == 2
+
+
+class TestDataPipeline:
+    def test_deterministic_across_restarts(self):
+        ds = SyntheticLMDataset(DataConfig(seq_len=16, global_batch=4,
+                                           vocab=100, seed=3))
+        a = ds.batch_at(5)
+        b = ds.batch_at(5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_host_sharding_partitions_batch(self):
+        ds = SyntheticLMDataset(DataConfig(seq_len=8, global_batch=8,
+                                           vocab=50))
+        h0 = ds.batch_at(0, host_id=0, n_hosts=2)
+        h1 = ds.batch_at(0, host_id=1, n_hosts=2)
+        assert h0["tokens"].shape == (4, 8)
+        assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+    def test_loader_resume(self):
+        ds = SyntheticLMDataset(DataConfig(seq_len=8, global_batch=2,
+                                           vocab=50))
+        l1 = DataLoader(ds)
+        for _ in range(3):
+            l1.next()
+        ckpt = l1.checkpoint()
+        b_next = l1.next()
+        l2 = DataLoader(ds)
+        l2.restore(ckpt)
+        np.testing.assert_array_equal(l2.next()["tokens"], b_next["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        ds = SyntheticLMDataset(DataConfig(seq_len=8, global_batch=2,
+                                           vocab=50))
+        b = ds.batch_at(0)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+class TestTrainLoopEndToEnd:
+    def test_loss_decreases_and_resumes(self, tmp_path):
+        cfg = get_config("qwen2-7b", smoke=True)
+        model = get_model(cfg)
+        ds = SyntheticLMDataset(DataConfig(seq_len=32, global_batch=4,
+                                           vocab=cfg.vocab, seed=0))
+        loader = DataLoader(ds)
+        step_fn = jax.jit(make_train_step(
+            model, cfg, AdamWConfig(lr=1e-3, warmup_steps=5,
+                                    decay_steps=100)))
+        ckpt = CheckpointManager(str(tmp_path))
+        state = init_train_state(jax.random.key(0), model, cfg)
+        state, summary = run_train_loop(
+            train_step=step_fn, state=state, loader=loader, ckpt=ckpt,
+            loop_cfg=LoopConfig(total_steps=30, ckpt_every=10, log_every=100),
+            log_fn=lambda s: None, install_signal_handlers=False)
+        curve = summary["loss_curve"]
+        assert curve[-5:].mean() < curve[:5].mean(), "loss did not decrease"
+
+        # restart from checkpoint: should resume at step 30
+        loader2 = DataLoader(ds)
+        state2, start = resume_or_init(
+            ckpt=ckpt, init_fn=lambda: init_train_state(
+                jax.random.key(0), model, cfg), loader=loader2)
+        assert start == 30
+        assert loader2.state.step == 30
+        np.testing.assert_allclose(
+            np.asarray(state2["params"]["ln_f"]["scale"], np.float32),
+            np.asarray(state["params"]["ln_f"]["scale"], np.float32),
+            rtol=1e-6)
+
+
+class TestServingEngine:
+    def test_greedy_generation_deterministic(self):
+        cfg = get_config("qwen2-7b", smoke=True)
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64)
+        rng = np.random.default_rng(0)
+        for uid in range(3):
+            eng.submit(Request(uid=uid,
+                               prompt=rng.integers(0, cfg.vocab, 8),
+                               max_new_tokens=5))
+        results = eng.run_until_empty()
+        assert len(results) == 3
+        assert all(len(r.tokens) == 5 for r in results)
+        # same prompts again -> identical generations (greedy)
+        for uid in range(3):
+            rng2 = np.random.default_rng(0)
+            pass
+        eng2 = ServingEngine(model, params, cfg, max_batch=2, max_len=64)
+        rng = np.random.default_rng(0)
+        for uid in range(3):
+            eng2.submit(Request(uid=uid,
+                                prompt=rng.integers(0, cfg.vocab, 8),
+                                max_new_tokens=5))
+        results2 = eng2.run_until_empty()
+        for a, b in zip(results, results2):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_wave_packing_respects_max_batch(self):
+        cfg = get_config("qwen2-7b", smoke=True)
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32)
+        for uid in range(5):
+            eng.submit(Request(uid=uid, prompt=np.arange(4), max_new_tokens=2))
+        first_wave = eng.run_wave()
+        assert len(first_wave) == 2
+        assert len(eng.queue) == 3
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        from repro.distributed.compress import _quantize
+
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(256,)),
+                        jnp.float32)
+        q, scale = _quantize(x, jax.random.key(0))
+        err = np.abs(np.asarray(q, np.float32) * float(scale) - np.asarray(x))
+        assert err.max() <= float(scale) * 1.01  # within one quant step
+
+    def test_wire_bytes_saved(self):
+        from repro.distributed.compress import wire_bytes_saved
+
+        grads = {"w": jnp.zeros((1000,))}
+        assert wire_bytes_saved(grads, bits=8, from_bits=16) == 1000

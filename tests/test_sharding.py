@@ -1,0 +1,168 @@
+"""Sharding rules + distributed lowering tests.
+
+These run in a subprocess with 16 virtual host devices so the main test
+process keeps its single-device view (per the task spec, only the dry-run
+may force a device count).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_sub(code: str, devices: int = 16) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestParamRules:
+    def test_rules_and_divisibility(self):
+        stdout = _run_sub("""
+            import jax, json
+            from jax.sharding import PartitionSpec as P
+            from repro.distributed.sharding import param_pspecs, sanitize_spec
+            from repro.models.registry import get_model
+            from repro.configs import get_config
+
+            mesh = jax.make_mesh((4, 4), ("data", "model"))
+            cfg = get_config("qwen2-7b", smoke=True)
+            model = get_model(cfg)
+            shapes = jax.eval_shape(lambda k: model.init(k, cfg),
+                                    jax.random.key(0))
+            specs = param_pspecs(shapes, mesh, fsdp=True)
+            # attention wq: (L, d, H*hd) -> (None, data, model)
+            wq = specs["blocks"]["attn"]["wq"]
+            print("WQ", list(wq))
+            # every spec dim must divide
+            def check(path, sds, spec):
+                for ax, dim in zip(list(spec), sds.shape):
+                    if ax is None: continue
+                    n = mesh.shape[ax] if isinstance(ax, str) else 0
+                    assert dim % n == 0, (path, sds.shape, spec)
+            jax.tree.map(check,
+                jax.tree_util.tree_map_with_path(lambda p, x: str(p), shapes),
+                shapes, specs,
+                is_leaf=lambda x: isinstance(x, P))
+            print("SANITIZE", list(sanitize_spec(P("model"), (6,), mesh)))
+            print("OK")
+        """)
+        assert "OK" in stdout
+        assert "WQ [None, 'data', 'model']" in stdout
+        assert "SANITIZE [None]" in stdout  # 6 % 4 != 0 -> dropped
+
+    def test_moe_expert_parallel_rule(self):
+        stdout = _run_sub("""
+            import jax
+            from repro.distributed.sharding import param_pspecs
+            from repro.models.registry import get_model
+            from repro.configs import get_config
+            mesh = jax.make_mesh((4, 4), ("data", "model"))
+            cfg = get_config("olmoe-1b-7b", smoke=True)
+            model = get_model(cfg)
+            shapes = jax.eval_shape(lambda k: model.init(k, cfg),
+                                    jax.random.key(0))
+            specs = param_pspecs(shapes, mesh, fsdp=False)
+            wg = specs["blocks"]["moe"]["experts"]["w_gate"]
+            print("EXPERTS", list(wg))
+        """)
+        # (L, E, d, f): experts axis -> model (EP)
+        assert "EXPERTS [None, 'model', None, None]" in stdout
+
+
+class TestDistributedTrainStep:
+    def test_tp_dp_train_step_runs_and_matches_single_device(self):
+        stdout = _run_sub("""
+            import jax, numpy as np
+            import jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed.sharding import (param_shardings,
+                                                    set_mesh_rules)
+            from repro.models.registry import get_model
+            from repro.configs import get_config
+            from repro.data.pipeline import smoke_batch
+
+            cfg, batch = smoke_batch("qwen2-7b", "train_4k")
+            model = get_model(cfg)
+            params = model.init(jax.random.key(0), cfg)
+            loss_single, _ = model.loss(params, batch, cfg)
+
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            set_mesh_rules(mesh, fsdp=False)
+            p_sh = param_shardings(params, mesh)
+            params_d = jax.device_put(params, p_sh)
+            b_sh = {k: NamedSharding(mesh, P("data"))
+                    for k in batch}
+            batch_d = jax.device_put(batch, b_sh)
+            with mesh:
+                loss_dist, _ = jax.jit(
+                    lambda p, b: model.loss(p, b, cfg))(params_d, batch_d)
+            print("SINGLE", float(loss_single), "DIST", float(loss_dist))
+            assert abs(float(loss_single) - float(loss_dist)) < 1e-3
+            print("OK")
+        """, devices=4)
+        assert "OK" in stdout
+
+
+class TestDryrunArtifacts:
+    """Integration check over the committed dry-run results."""
+
+    ART = os.path.join(REPO, "artifacts", "dryrun")
+
+    def _cells(self, mesh):
+        """Baseline cells only ("__variant" files are §Perf experiments,
+        including deliberately-refuted configurations)."""
+        d = os.path.join(self.ART, mesh)
+        if not os.path.isdir(d):
+            pytest.skip("dry-run artifacts not generated yet")
+        return [json.load(open(os.path.join(d, f)))
+                for f in os.listdir(d)
+                if f.endswith(".json") and "__" not in f]
+
+    def test_single_pod_all_cells_present(self):
+        cells = self._cells("pod16x16")
+        assert len(cells) == 32  # 10 archs x 3 shapes + 2 long_500k
+
+    def test_multi_pod_all_cells_present(self):
+        cells = self._cells("pod2x16x16")
+        assert len(cells) == 32
+        assert all(c["n_chips"] == 512 for c in cells)
+
+    def test_memory_fits_hbm(self):
+        for c in self._cells("pod16x16"):
+            args_gib = c["memory_analysis"]["argument_size_in_bytes"] / 2**30
+            assert args_gib < 16.0, (c["arch"], c["shape"], args_gib)
+
+    def test_flops_physical(self):
+        """Corrected HLO flops >= ~MODEL_FLOPS and bounded above.
+
+        Train/prefill: within [0.8x, 20x] of 6ND/2ND (the >1 slack is real:
+        remat recompute, MoE capacity padding + the baseline SPMD dispatch
+        replication quantified in EXPERIMENTS §Perf). Decode cells: 2N·B
+        ignores cache-length-dependent attention/MLA-decompress FLOPs, so
+        only positivity + a loose ceiling is asserted."""
+        for c in self._cells("pod16x16"):
+            total = c["flops_per_chip"] * c["n_chips"]
+            assert total > 0, (c["arch"], c["shape"])
+            ratio = total / c["model_flops"]
+            if c["step"] in ("train", "prefill"):
+                assert 0.8 < ratio < 20, (c["arch"], c["shape"], ratio)
+            else:
+                assert ratio < 5000, (c["arch"], c["shape"], ratio)
+
+    def test_train_cells_have_collectives(self):
+        for c in self._cells("pod16x16"):
+            if c["step"] == "train":
+                assert c["collective_wire_bytes_per_chip"] > 0, (
+                    c["arch"], "train step must all-reduce gradients")
