@@ -11,7 +11,8 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks.common import dump, get_dataset, paper_split, row, timeit
+from benchmarks.common import (default_chip, dump, get_dataset, paper_split,
+                               row, timeit)
 from repro.core.autotuner import GemmAutotuner
 from repro.core.features import NUMERIC_FEATURES
 from repro.core.hwsim import TpuGemmSimulator
@@ -29,8 +30,9 @@ SHAPES = [
 def run() -> list[dict]:
     table = get_dataset()
     tr, _ = paper_split(table, train_n=4000)
-    pred = PerfPredictor(model="rf", residual=True, fast=True).fit(tr)
-    tuner = GemmAutotuner(pred, TpuGemmSimulator(seed=7))
+    pred = PerfPredictor(model="rf", residual=True, fast=True,
+                         chip=default_chip()).fit(tr)
+    tuner = GemmAutotuner(pred, TpuGemmSimulator(chip=default_chip(), seed=7))
 
     reports_rt = [tuner.tune_report(*s) for s in SHAPES]
     reports_en = [tuner.tune_report(*s, objective="energy") for s in SHAPES]

@@ -1,11 +1,12 @@
 """Paper Figs 2-5 + Table I: tiled-matmul runtime/power vs matrix size per
-tile size, and the occupancy (VMEM buffer) cliff."""
+tile size, and the occupancy (VMEM buffer) cliff. The whole tile x size grid
+is evaluated in one `analyze_batch` call."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import dump, row, timeit
+from benchmarks.common import default_chip, dump, row, timeit
 from repro.core.hwsim import GemmConfig, TpuGemmSimulator
 
 # TPU tile analogues of the paper's CUDA tiles 1..32 (square blocks; the
@@ -15,19 +16,17 @@ SIZES = (256, 512, 1024, 2048, 4096, 8192)
 
 
 def run() -> list[dict]:
-    sim = TpuGemmSimulator(seed=0)
-    runtime = {}
-    power = {}
-    for t in TILES:
-        rts, pws = [], []
-        for s in SIZES:
-            cfg = GemmConfig(m=s, n=s, k=s, block_m=t, block_n=t,
-                             block_k=min(t, 512))
-            tel = sim.analyze(cfg)
-            rts.append(tel.runtime_ms if tel.valid else float("nan"))
-            pws.append(tel.power_w if tel.valid else float("nan"))
-        runtime[t] = rts
-        power[t] = pws
+    sim = TpuGemmSimulator(chip=default_chip(), seed=0)
+    grid = [GemmConfig(m=s, n=s, k=s, block_m=t, block_n=t,
+                       block_k=min(t, 512))
+            for t in TILES for s in SIZES]
+    tel = sim.analyze_batch(grid)
+    rt = np.where(tel["valid"], tel["runtime_ms"], np.nan)
+    pw = np.where(tel["valid"], tel["power_w"], np.nan)
+    runtime = {t: list(rt[i * len(SIZES):(i + 1) * len(SIZES)])
+               for i, t in enumerate(TILES)}
+    power = {t: list(pw[i * len(SIZES):(i + 1) * len(SIZES)])
+             for i, t in enumerate(TILES)}
 
     occupancy = sim.occupancy_report(list(TILES))
 
@@ -39,8 +38,9 @@ def run() -> list[dict]:
     worst_tile = max(valid, key=valid.get)
     speedup = valid[worst_tile] / valid[best_tile]
 
-    us = timeit(lambda: sim.analyze(GemmConfig(4096, 4096, 4096)), n=50)
+    us = timeit(lambda: sim.analyze_batch(grid), n=20)
     dump("tile_sweep", {
+        "chip": sim.chip.name,
         "sizes": list(SIZES),
         "runtime_ms": {str(k): v for k, v in runtime.items()},
         "power_w": {str(k): v for k, v in power.items()},
@@ -49,8 +49,9 @@ def run() -> list[dict]:
         "speedup_best_vs_worst": speedup,
     })
     return [
-        row("tile_sweep.analyze", us,
-            f"best_tile@4096={best_tile};speedup_vs_worst={speedup:.1f}x"),
+        row("tile_sweep.analyze_batch", us,
+            f"{len(grid)}cfgs/call;best_tile@4096={best_tile};"
+            f"speedup_vs_worst={speedup:.1f}x"),
         row("tile_sweep.occupancy_cliff", us,
             "occupancy=" + ",".join(f"{t}:{occupancy[t]}" for t in TILES)),
     ]

@@ -3,6 +3,11 @@
 Every bench module exposes `run() -> list[dict]` with keys
 {name, us_per_call, derived}; `benchmarks.run` aggregates to CSV and dumps
 detailed JSON to artifacts/bench/.
+
+`BENCH_N_CONFIGS` (env var, also settable via `benchmarks/run.py
+--n-configs`) shrinks the profiled dataset for smoke runs — CI sweeps 64
+configs instead of the paper's 16,128. `BENCH_CHIP` selects the measurement
+substrate (default tpu_v5e); datasets are cached per chip.
 """
 
 from __future__ import annotations
@@ -15,9 +20,24 @@ import numpy as np
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 BENCH_ART = os.path.join(ART, "bench")
-DATASET_PATH = os.path.join(ART, "gemm_dataset.npz")
 
 os.makedirs(BENCH_ART, exist_ok=True)
+
+
+def default_n_configs() -> int:
+    return int(os.environ.get("BENCH_N_CONFIGS", 16128))
+
+
+def default_chip() -> str:
+    return os.environ.get("BENCH_CHIP", "tpu_v5e")
+
+
+def dataset_path(chip: str | None = None) -> str:
+    from repro.core.chips import get_chip
+
+    chip = get_chip(chip or default_chip()).name  # canonicalize aliases
+    suffix = "" if chip == "tpu_v5e" else f"_{chip}"  # legacy cache name
+    return os.path.join(ART, f"gemm_dataset{suffix}.npz")
 
 
 def timeit(fn, *args, n: int = 5, warmup: int = 1) -> float:
@@ -30,23 +50,34 @@ def timeit(fn, *args, n: int = 5, warmup: int = 1) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def get_dataset(n_configs: int = 16128, seed: int = 0):
-    """The paper-scale profiled dataset, cached on disk."""
+def get_dataset(n_configs: int | None = None, seed: int = 0,
+                chip: str | None = None):
+    """The paper-scale profiled dataset, cached on disk (per chip)."""
     from repro.core.profiler import collect_dataset, load_dataset, save_dataset
 
-    if os.path.exists(DATASET_PATH):
-        table = load_dataset(DATASET_PATH)
+    n_configs = n_configs or default_n_configs()
+    chip = chip or default_chip()
+    path = dataset_path(chip)
+    if os.path.exists(path):
+        table = load_dataset(path)
         if len(table["runtime_ms"]) >= n_configs * 0.9:
             return table
-    table = collect_dataset(n_configs=n_configs, seed=seed)
-    os.makedirs(os.path.dirname(DATASET_PATH), exist_ok=True)
-    save_dataset(table, DATASET_PATH)
+    table = collect_dataset(n_configs=n_configs, seed=seed, chip=chip)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    save_dataset(table, path)
     return table
 
 
 def paper_split(table, train_n: int = 2076, test_n: int = 519, seed: int = 0):
-    """The paper's split: 2,076 train / 519 test rows of the 16,128."""
+    """The paper's split: 2,076 train / 519 test rows of the 16,128.
+
+    Smoke-size tables (fewer rows than train_n + test_n) fall back to a
+    proportional 80/20 split so tiny CI sweeps still exercise every bench.
+    """
     n = len(table["runtime_ms"])
+    if n < train_n + test_n:
+        train_n = max(1, int(n * 0.8))
+        test_n = max(1, n - train_n)
     rng = np.random.default_rng(seed)
     perm = rng.permutation(n)
     tr_idx, te_idx = perm[:train_n], perm[train_n:train_n + test_n]
@@ -62,3 +93,7 @@ def dump(name: str, payload) -> None:
 
 def row(name: str, us: float, derived: str) -> dict:
     return {"name": name, "us_per_call": us, "derived": derived}
+
+
+# retained for callers that imported the old constant
+DATASET_PATH = dataset_path("tpu_v5e")

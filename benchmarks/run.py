@@ -2,13 +2,22 @@
 
 Prints ``name,us_per_call,derived`` CSV; detailed JSON lands in
 artifacts/bench/.
+
+Usage:
+  PYTHONPATH=src python benchmarks/run.py                    # full scale
+  PYTHONPATH=src python benchmarks/run.py --n-configs 64     # CI smoke
+  PYTHONPATH=src python benchmarks/run.py --chip rtx4070     # paper's chip
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
+# allow `python benchmarks/run.py` from anywhere (repo root on sys.path)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 BENCHES = [
     "bench_roofline",        # Fig 1 + §Roofline cell table
@@ -23,12 +32,28 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--n-configs", type=int, default=None,
+                        help="profiled sweep size (default 16128; use a "
+                             "small value like 64 for a smoke run)")
+    parser.add_argument("--chip", type=str, default=None,
+                        help="measurement substrate (tpu_v5e, rtx4070)")
+    parser.add_argument("--only", type=str, default=None,
+                        help="comma-separated bench module subset")
+    args = parser.parse_args(argv)
+    # bench modules pick these up through benchmarks.common defaults
+    if args.n_configs is not None:
+        os.environ["BENCH_N_CONFIGS"] = str(args.n_configs)
+    if args.chip is not None:
+        os.environ["BENCH_CHIP"] = args.chip
+
     import importlib
 
+    benches = args.only.split(",") if args.only else BENCHES
     print("name,us_per_call,derived")
     failed = []
-    for name in BENCHES:
+    for name in benches:
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             for r in mod.run():

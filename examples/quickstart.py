@@ -24,7 +24,12 @@ from repro.kernels.tiled_matmul import BlockConfig, tiled_matmul
 def main():
     print("== 1. profile GEMM configs on the TPU-v5e substrate ==")
     table = collect_dataset(n_configs=3000, seed=0)
-    print(f"   profiled {len(table['runtime_ms'])} valid configs")
+    print(f"   profiled {len(table['runtime_ms'])} valid configs "
+          "(batched measure_batch sweep)")
+    ada = collect_dataset(n_configs=500, seed=0, chip="rtx4070")
+    print(f"   cross-chip check: rtx4070 median runtime "
+          f"{float(np.median(ada['runtime_ms'])):.2f} ms vs v5e "
+          f"{float(np.median(table['runtime_ms'])):.2f} ms")
 
     print("== 2./3. fit + evaluate the multi-output predictor ==")
     tr, te = train_test_split(table, test_size=0.2, random_state=0)

@@ -7,7 +7,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 
 import argparse
-import os
 
 import jax
 

@@ -6,9 +6,16 @@ verify the top-k against the measurement substrate, and cache the winner.
 Objectives mirror the paper's findings: "runtime" (3.2x speedup claim),
 "energy"/"power" (22% power-reduction claim), "edp" (energy-delay product).
 
-`get_tuner()` is the process-wide singleton consulted by `kernels.ops.matmul`
-at trace time. On first use it loads (or trains and persists) the predictor
-artifact under artifacts/.
+Everything is chip-aware: the tuner's candidate filter, feature builder, and
+verification all run against the chip backing its simulator, and predictor
+artifacts plus tuner caches are keyed per chip so "tpu_v5e" and "rtx4070"
+tuners coexist. Candidate validity and top-k verification go through the
+batched substrate (`analyze_batch` / `measure_batch`) — no per-config
+measurement loop.
+
+`get_tuner(chip=...)` is the per-chip process-wide singleton consulted by
+`kernels.ops.matmul` at trace time. On first use it loads (or trains and
+persists) the predictor artifact under artifacts/.
 """
 
 from __future__ import annotations
@@ -20,7 +27,8 @@ import threading
 
 import numpy as np
 
-from repro.core.features import NUMERIC_FEATURES, config_features
+from repro.core.chips import TPU_V5E, ChipSpec, get_chip
+from repro.core.features import table_from_configs
 from repro.core.hwsim import GemmConfig, TpuGemmSimulator
 from repro.core.predictor import PerfPredictor
 from repro.kernels.tiled_matmul import BlockConfig
@@ -46,9 +54,12 @@ class GemmAutotuner:
         sim: TpuGemmSimulator | None = None,
         verify_top_k: int = 3,
         cache_path: str | None = None,
+        chip: ChipSpec | str | None = None,
     ):
         self.predictor = predictor
-        self.sim = sim or TpuGemmSimulator(seed=0)
+        self.sim = sim or TpuGemmSimulator(
+            chip=chip if chip is not None else TPU_V5E, seed=0)
+        self.chip = self.sim.chip
         self.verify_top_k = verify_top_k
         self.cache_path = cache_path
         self._cache: dict[str, tuple[int, int, int]] = {}
@@ -64,21 +75,17 @@ class GemmAutotuner:
         bm_cap = _roundup(m, 8)
         bn_cap = _roundup(n, 128)
         bk_cap = _roundup(k, 128)
-        out = []
-        for bm in _BM:
-            if bm > bm_cap * 2:
-                continue
-            for bn in _BN:
-                if bn > bn_cap * 2:
-                    continue
-                for bk in _BK:
-                    if bk > bk_cap * 2:
-                        continue
-                    cfg = GemmConfig(m=m, n=n, k=k, block_m=bm, block_n=bn,
-                                     block_k=bk, dtype=dtype)
-                    if self.sim.analyze(cfg).valid:
-                        out.append(cfg)
-        return out
+        cand = [
+            GemmConfig(m=m, n=n, k=k, block_m=bm, block_n=bn, block_k=bk,
+                       dtype=dtype)
+            for bm in _BM if bm <= bm_cap * 2
+            for bn in _BN if bn <= bn_cap * 2
+            for bk in _BK if bk <= bk_cap * 2
+        ]
+        if not cand:
+            return []
+        valid = self.sim.analyze_batch(cand)["valid"]
+        return [cfg for cfg, ok in zip(cand, valid) if ok]
 
     # ---------- scoring ----------
     @staticmethod
@@ -94,8 +101,7 @@ class GemmAutotuner:
 
     def rank(self, cfgs: list[GemmConfig], objective: str = "runtime"
              ) -> np.ndarray:
-        feats = [config_features(c) for c in cfgs]
-        table = {k: np.array([f[k] for f in feats]) for k in NUMERIC_FEATURES}
+        table = table_from_configs(cfgs, chip=self.chip)
         pred = self.predictor.predict(table)
         return np.argsort(self._objective_scores(pred, objective))
 
@@ -112,15 +118,11 @@ class GemmAutotuner:
         order = self.rank(cfgs, objective)
         top = [cfgs[i] for i in order[: self.verify_top_k]]
         # verify against the measurement substrate (wall clock on real HW)
-        def measured(c: GemmConfig) -> float:
-            t = self.sim.measure(c)
-            return {
-                "runtime": t.runtime_ms,
-                "energy": t.energy_j,
-                "power": t.power_w,
-                "edp": t.energy_j * t.runtime_ms,
-            }[objective]
-        winner = min(top, key=measured)
+        tel = self.sim.measure_batch(top)
+        scores = self._objective_scores(
+            {t: tel[t] for t in ("runtime_ms", "power_w", "energy_j")},
+            objective)
+        winner = top[int(np.argmin(scores))]
         best = (winner.block_m, winner.block_n, winner.block_k)
         with self._lock:
             self._cache[key] = best
@@ -145,6 +147,7 @@ class GemmAutotuner:
         tt = self.sim.analyze(best_cfg)
         return {
             "m": m, "n": n, "k": k, "dtype": dtype, "objective": objective,
+            "chip": self.chip.name,
             "baseline": BASELINE.as_tuple(),
             "best": best.as_tuple(),
             "baseline_runtime_ms": tb.runtime_ms,
@@ -159,17 +162,19 @@ class GemmAutotuner:
         }
 
 
-# ---------- process-wide tuner ----------
-_GLOBAL: GemmAutotuner | None = None
+# ---------- process-wide per-chip tuners ----------
+_GLOBAL: dict[str, GemmAutotuner] = {}
 _GLOBAL_LOCK = threading.Lock()
 
 
 def build_default_predictor(artifacts_dir: str = DEFAULT_ARTIFACTS_DIR,
                             n_train: int = 4000,
-                            force_retrain: bool = False) -> PerfPredictor:
-    """Load the persisted predictor or train one on a fresh profile sweep."""
+                            force_retrain: bool = False,
+                            chip: ChipSpec | str = TPU_V5E) -> PerfPredictor:
+    """Load the persisted per-chip predictor or train one on a fresh sweep."""
+    chip = get_chip(chip)
     os.makedirs(artifacts_dir, exist_ok=True)
-    path = os.path.join(artifacts_dir, "perf_predictor.pkl")
+    path = os.path.join(artifacts_dir, f"perf_predictor_{chip.name}.pkl")
     if os.path.exists(path) and not force_retrain:
         try:
             return PerfPredictor.load(path)
@@ -177,25 +182,39 @@ def build_default_predictor(artifacts_dir: str = DEFAULT_ARTIFACTS_DIR,
             pass
     from repro.core.profiler import collect_dataset
 
-    table = collect_dataset(n_configs=n_train, seed=0)
-    pred = PerfPredictor(model="rf", residual=True, fast=True).fit(table)
+    table = collect_dataset(n_configs=n_train, seed=0, chip=chip)
+    pred = PerfPredictor(model="rf", residual=True, fast=True,
+                         chip=chip.name).fit(table)
     pred.save(path)
     return pred
 
 
-def get_tuner(artifacts_dir: str = DEFAULT_ARTIFACTS_DIR) -> GemmAutotuner:
-    global _GLOBAL
+def get_tuner(artifacts_dir: str = DEFAULT_ARTIFACTS_DIR,
+              chip: ChipSpec | str = TPU_V5E) -> GemmAutotuner:
+    chip = get_chip(chip)
     with _GLOBAL_LOCK:
-        if _GLOBAL is None:
-            predictor = build_default_predictor(artifacts_dir)
-            _GLOBAL = GemmAutotuner(
+        tuner = _GLOBAL.get(chip.name)
+        if tuner is None:
+            predictor = build_default_predictor(artifacts_dir, chip=chip)
+            tuner = GemmAutotuner(
                 predictor,
-                cache_path=os.path.join(artifacts_dir, "tuner_cache.json"),
+                chip=chip,
+                cache_path=os.path.join(
+                    artifacts_dir, f"tuner_cache_{chip.name}.json"),
             )
-        return _GLOBAL
+            _GLOBAL[chip.name] = tuner
+        return tuner
 
 
-def set_tuner(tuner: GemmAutotuner | None) -> None:
+def set_tuner(tuner: GemmAutotuner | None,
+              chip: ChipSpec | str | None = None) -> None:
+    """Install (or clear, with tuner=None and chip=None) global tuners."""
     global _GLOBAL
     with _GLOBAL_LOCK:
-        _GLOBAL = tuner
+        if tuner is None and chip is None:
+            _GLOBAL = {}
+        elif tuner is None:
+            _GLOBAL.pop(get_chip(chip).name, None)
+        else:
+            _GLOBAL[get_chip(chip).name if chip is not None
+                    else tuner.chip.name] = tuner

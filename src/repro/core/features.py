@@ -1,16 +1,29 @@
 """GEMM feature engineering — the paper's Algorithm 1 (PREPROCESSDATA +
 COMPUTEGEMMCHARS), extended with the TPU-static features the profiler can
 derive without running anything (grid size, VMEM working set, occupancy
-analogue, alignment waste)."""
+analogue, alignment waste).
+
+`config_features_batch` is the native path: it evaluates every feature as a
+NumPy column over a whole config list at once and returns the dict-of-columns
+table that the profiler/predictor consume directly. The scalar
+`config_features` is a batch-of-one wrapper kept for convenience. Both take a
+`chip` (ChipSpec or registry name) because the roofline-informed features —
+naive compute/memory time, occupancy, alignment waste — are chip-dependent.
+"""
 
 from __future__ import annotations
 
-import math
+from collections.abc import Sequence
 
 import numpy as np
 
-from repro.core.chips import DTYPE_BYTES, TPU_V5E
-from repro.core.hwsim import VMEM_USABLE_FRACTION, GemmConfig
+from repro.core.chips import TPU_V5E, ChipSpec, get_chip
+from repro.core.hwsim import (
+    VMEM_USABLE_FRACTION,
+    GemmConfig,
+    chip_peak_array,
+    config_arrays,
+)
 
 # Columns fed to the models (order matters for the jitted predictor path).
 NUMERIC_FEATURES = [
@@ -31,73 +44,93 @@ NUMERIC_FEATURES = [
 TARGETS = ["runtime_ms", "power_w", "energy_j", "tflops"]
 
 
-def config_features(cfg: GemmConfig) -> dict[str, float]:
-    """Static (pre-execution) features for one GEMM config."""
-    c = TPU_V5E
-    in_bytes = DTYPE_BYTES[cfg.dtype]
-    bm, bn, bk = cfg.block_m, cfg.block_n, cfg.block_k
-    grid_steps = (
-        math.ceil(cfg.m / bm) * math.ceil(cfg.n / bn) * math.ceil(cfg.k / bk)
-    )
+def _ceil_div(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return -(-a // b)
+
+
+def config_features_batch(
+    cfgs: Sequence[GemmConfig],
+    chip: ChipSpec | str = TPU_V5E,
+    arrays: dict[str, np.ndarray] | None = None,
+) -> dict[str, np.ndarray]:
+    """Static (pre-execution) feature columns for a batch of GEMM configs."""
+    c = get_chip(chip)
+    arr = arrays if arrays is not None else config_arrays(cfgs)
+    m, n, k = arr["m"], arr["n"], arr["k"]
+    bm, bn, bk = arr["block_m"], arr["block_n"], arr["block_k"]
+    in_bytes = arr["dtype_bytes"]
+
+    grid_m = _ceil_div(m, bm)
+    grid_n = _ceil_div(n, bn)
+    grid_steps = grid_m * grid_n * _ceil_div(k, bk)
     single = (bm * bk + bk * bn) * in_bytes + bm * bn * 4
-    max_buffers = int(c.vmem_bytes * VMEM_USABLE_FRACTION // max(single, 1))
-    total_flops = 2.0 * cfg.m * cfg.n * cfg.k
-    bytes_accessed = in_bytes * (cfg.m * cfg.k + cfg.k * cfg.n) + 4.0 * cfg.m * cfg.n
+    max_buffers = (c.vmem_bytes * VMEM_USABLE_FRACTION
+                   // np.maximum(single, 1)).astype(np.int64)
+    total_flops = 2.0 * m * n * k
+    bytes_accessed = in_bytes * (m * k + k * n) + 4.0 * m * n
     mxu = c.mxu_dim
     padded = (
         grid_steps
-        * math.ceil(bm / mxu) * math.ceil(bn / mxu) * math.ceil(bk / mxu)
+        * _ceil_div(bm, mxu) * _ceil_div(bn, mxu) * _ceil_div(bk, mxu)
         * (2 * mxu ** 3)
     )
-    grid_m = math.ceil(cfg.m / bm)
-    grid_n = math.ceil(cfg.n / bn)
+    beta = arr["beta"]
     refetch_bytes = (
-        grid_n * cfg.m * cfg.k * in_bytes     # A re-read per N-tile
-        + grid_m * cfg.k * cfg.n * in_bytes   # B re-read per M-tile
-        + cfg.m * cfg.n * 4.0 * (2.0 if cfg.beta != 0.0 else 1.0)
+        grid_n * m * k * in_bytes     # A re-read per N-tile
+        + grid_m * k * n * in_bytes   # B re-read per M-tile
+        + m * n * 4.0 * np.where(beta != 0.0, 2.0, 1.0)
     )
-    peak = c.peak(cfg.dtype)
+    peak = chip_peak_array(c, arr["dtype"])
+    layout = arr["layout"]
+    f64 = np.float64
     return {
-        "refetch_bytes": refetch_bytes,
+        "refetch_bytes": refetch_bytes.astype(f64),
         "naive_compute_ms": total_flops / peak * 1e3,
         "naive_memory_ms": refetch_bytes / c.hbm_bw * 1e3,
         "padded_compute_ms": padded / peak * 1e3,
         "naive_overhead_ms": grid_steps * 1e-7 * 1e3,
-        "m": float(cfg.m),
-        "n": float(cfg.n),
-        "k": float(cfg.k),
-        "block_m": float(bm),
-        "block_n": float(bn),
-        "block_k": float(bk),
-        "stages": float(cfg.stages),
-        "alpha": float(cfg.alpha),
-        "beta": float(cfg.beta),
-        "dtype_bytes": float(in_bytes),
-        "mxn": float(cfg.m * cfg.n),
-        "mxk": float(cfg.m * cfg.k),
-        "nxk": float(cfg.n * cfg.k),
-        "mxnxk": float(cfg.m) * cfg.n * cfg.k,
+        "m": m.astype(f64),
+        "n": n.astype(f64),
+        "k": k.astype(f64),
+        "block_m": bm.astype(f64),
+        "block_n": bn.astype(f64),
+        "block_k": bk.astype(f64),
+        "stages": arr["stages"].astype(f64),
+        "alpha": arr["alpha"].astype(f64),
+        "beta": beta.astype(f64),
+        "dtype_bytes": in_bytes.astype(f64),
+        "mxn": (m * n).astype(f64),
+        "mxk": (m * k).astype(f64),
+        "nxk": (n * k).astype(f64),
+        "mxnxk": m.astype(f64) * n * k,
         "total_flops": total_flops,
         "bytes_accessed": bytes_accessed,
-        "arithmetic_intensity": total_flops / max(bytes_accessed, 1.0),
-        "grid_steps": float(grid_steps),
-        "vmem_working_set": float(single),
-        "max_inflight_buffers": float(max_buffers),
-        "alignment_waste": padded / max(total_flops, 1.0),
-        "layout_a_t": 1.0 if cfg.layout[0] == "t" else 0.0,
-        "layout_b_t": 1.0 if cfg.layout[1] == "t" else 0.0,
+        "arithmetic_intensity": total_flops / np.maximum(bytes_accessed, 1.0),
+        "grid_steps": grid_steps.astype(f64),
+        "vmem_working_set": single.astype(f64),
+        "max_inflight_buffers": max_buffers.astype(f64),
+        "alignment_waste": padded / np.maximum(total_flops, 1.0),
+        "layout_a_t": np.array([1.0 if s[0] == "t" else 0.0 for s in layout]),
+        "layout_b_t": np.array([1.0 if s[1] == "t" else 0.0 for s in layout]),
     }
 
 
-def features_matrix(cfgs: list[GemmConfig]) -> np.ndarray:
+def config_features(cfg: GemmConfig,
+                    chip: ChipSpec | str = TPU_V5E) -> dict[str, float]:
+    """Static features for one GEMM config (batch-of-one wrapper)."""
+    cols = config_features_batch([cfg], chip=chip)
+    return {key: float(col[0]) for key, col in cols.items()}
+
+
+def features_matrix(cfgs: Sequence[GemmConfig],
+                    chip: ChipSpec | str = TPU_V5E) -> np.ndarray:
     """(n_cfgs, len(NUMERIC_FEATURES)) feature matrix (for jitted ranking)."""
-    rows = np.empty((len(cfgs), len(NUMERIC_FEATURES)))
-    for i, cfg in enumerate(cfgs):
-        f = config_features(cfg)
-        rows[i] = [f[k] for k in NUMERIC_FEATURES]
-    return rows
+    cols = config_features_batch(cfgs, chip=chip)
+    return np.stack([cols[k] for k in NUMERIC_FEATURES], axis=1)
 
 
-def table_from_configs(cfgs: list[GemmConfig]) -> dict[str, np.ndarray]:
-    mat = features_matrix(cfgs)
-    return {k: mat[:, i] for i, k in enumerate(NUMERIC_FEATURES)}
+def table_from_configs(cfgs: Sequence[GemmConfig],
+                       chip: ChipSpec | str = TPU_V5E
+                       ) -> dict[str, np.ndarray]:
+    cols = config_features_batch(cfgs, chip=chip)
+    return {k: cols[k] for k in NUMERIC_FEATURES}

@@ -433,7 +433,6 @@ def analyze_hlo(text: str, n_chips: int) -> HloCost:
                 cby[op] = cby.get(op, 0.0) + wire
             by += _instr_bytes(ins, symtab, comps)
             if ins.opcode == "while":
-                m = _CALL_ATTR.findall(ins.attrs + ins.args)
                 body = cond = None
                 bm = re.search(r"body=%?([\w.\-]+)", ins.line)
                 cm = re.search(r"condition=%?([\w.\-]+)", ins.line)

@@ -69,7 +69,7 @@ class PerfPredictor:
 
     def __init__(self, model: str = "rf", log_targets: bool = True,
                  residual: bool = False, random_state: int = 0,
-                 fast: bool = False):
+                 fast: bool = False, chip: str | None = None):
         """residual=True predicts log(target / analytical_anchor) for the
         log-scale targets — the anchor (a naive roofline estimate from
         published chip specs) carries the 5-orders-of-magnitude dynamic
@@ -78,6 +78,7 @@ class PerfPredictor:
         residual=False is the paper-faithful direct-regression mode.
         """
         self.model_name = model
+        self.chip_name = chip  # substrate the training table came from
         self.log_targets = log_targets
         self.residual = residual
         self.scaler = StandardScaler()

@@ -5,8 +5,14 @@ layouts x alpha/beta x dtype), "measures" each on the hardware substrate
 (`hwsim.TpuGemmSimulator`) and materializes the training table the paper
 collects (16,128 CUTLASS ops -> our default sweep is >= that).
 
+The hot path is fully batched: configs are converted to a struct-of-arrays
+once, telemetry comes from `TpuGemmSimulator.measure_batch`, and features
+from `config_features_batch` — no per-config Python loop. The substrate is
+selectable per chip (`collect_dataset(chip="rtx4070")`).
+
 On a real TPU deployment the same harness runs with `measure_fn` swapped for
-a wall-clock runner around the Pallas kernel; everything downstream (feature
+a wall-clock runner around the Pallas kernel (a per-config callable, since
+real hardware measures one launch at a time); everything downstream (feature
 building, model fitting, autotuning) is measurement-source-agnostic.
 """
 
@@ -18,8 +24,19 @@ from collections.abc import Callable, Iterable
 
 import numpy as np
 
-from repro.core.features import NUMERIC_FEATURES, TARGETS, config_features
-from repro.core.hwsim import GemmConfig, GemmTelemetry, TpuGemmSimulator
+from repro.core.chips import TPU_V5E, ChipSpec
+from repro.core.features import (
+    NUMERIC_FEATURES,
+    TARGETS,
+    config_features,
+    config_features_batch,
+)
+from repro.core.hwsim import (
+    GemmConfig,
+    GemmTelemetry,
+    TpuGemmSimulator,
+    config_arrays,
+)
 
 # Default sweep axes (the CUTLASS-profiler flag grid, TPU-quantized).
 DIM_CHOICES = (256, 512, 1024, 2048, 3072, 4096, 6144, 8192)
@@ -29,6 +46,14 @@ BLOCK_K_CHOICES = (128, 512, 2048)
 LAYOUTS = ("nn", "nt", "tn", "tt")
 ALPHA_BETA = ((1.0, 0.0), (1.0, 1.0), (0.5, 0.5), (2.0, 0.0))
 DTYPES = ("bf16", "f32")
+
+# Telemetry columns copied into the profiled table alongside the features.
+_TELEMETRY_KEEP = ("runtime_ms", "power_w", "energy_j", "tflops",
+                   "mxu_utilization", "hbm_utilization", "temperature_c",
+                   "bound")
+# Batch chunk size: fixed (never derived from progress_every) so the RNG
+# draw order — hence the dataset — is independent of progress printing.
+_CHUNK = 8192
 
 
 def sweep_configs(
@@ -73,6 +98,20 @@ def sweep_configs(
     return cfgs
 
 
+def _batch_table(cfgs: list[GemmConfig], sim: TpuGemmSimulator
+                 ) -> dict[str, np.ndarray]:
+    """Features + measured telemetry for one chunk, as dict-of-columns."""
+    arrays = config_arrays(cfgs)
+    table = config_features_batch(cfgs, chip=sim.chip, arrays=arrays)
+    table["layout"] = arrays["layout"]
+    table["dtype"] = arrays["dtype"]
+    tel = sim.measure_batch(cfgs, arrays=arrays)
+    for key in _TELEMETRY_KEEP:
+        table[key] = tel[key]
+    table["valid"] = tel["valid"]
+    return table
+
+
 def profile_configs(
     cfgs: list[GemmConfig],
     sim: TpuGemmSimulator | None = None,
@@ -80,17 +119,49 @@ def profile_configs(
     measure_fn: Callable[[GemmConfig], GemmTelemetry] | None = None,
     drop_invalid: bool = True,
     progress_every: int = 0,
+    chip: ChipSpec | str | None = None,
 ) -> dict[str, np.ndarray]:
-    """Run the sweep; return dict-of-columns (features + targets + extras)."""
-    sim = sim or TpuGemmSimulator(seed=0)
-    measure = measure_fn or sim.measure
-    rows: list[dict[str, float]] = []
+    """Run the sweep; return dict-of-columns (features + targets + extras).
+
+    Without `measure_fn` the whole sweep runs through the vectorized
+    `measure_batch` substrate. Passing `measure_fn` (one GemmConfig ->
+    GemmTelemetry, e.g. a wall-clock runner on real hardware) falls back to
+    the per-config loop.
+    """
+    sim = sim or TpuGemmSimulator(chip=chip if chip is not None else TPU_V5E,
+                                  seed=0)
     t0 = time.time()
+    if measure_fn is None:
+        chunks = []
+        done = 0
+        next_report = progress_every
+        for start in range(0, len(cfgs), _CHUNK):
+            chunks.append(_batch_table(cfgs[start:start + _CHUNK], sim))
+            done = min(start + _CHUNK, len(cfgs))
+            if progress_every and done >= next_report:
+                print(f"profiled {done}/{len(cfgs)} "
+                      f"({time.time() - t0:.1f}s)")
+                next_report = done + progress_every
+        if not chunks:
+            raise RuntimeError("no valid configurations in sweep")
+        table = {key: np.concatenate([c[key] for c in chunks])
+                 for key in chunks[0]}
+        if drop_invalid:
+            mask = table.pop("valid")
+            table = {k: v[mask] for k, v in table.items()}
+        else:
+            table.pop("valid")
+        if not len(table["runtime_ms"]):
+            raise RuntimeError("no valid configurations in sweep")
+        return table
+
+    # real-hardware path: one measurement per call, rows accumulated
+    rows: list[dict[str, float]] = []
     for i, cfg in enumerate(cfgs):
-        tel = measure(cfg)
+        tel = measure_fn(cfg)
         if drop_invalid and not tel.valid:
             continue
-        row = config_features(cfg)
+        row = config_features(cfg, chip=sim.chip)
         row["layout"] = cfg.layout
         row["dtype"] = cfg.dtype
         row["runtime_ms"] = tel.runtime_ms
@@ -106,7 +177,7 @@ def profile_configs(
             print(f"profiled {i + 1}/{len(cfgs)} ({time.time() - t0:.1f}s)")
     if not rows:
         raise RuntimeError("no valid configurations in sweep")
-    table: dict[str, np.ndarray] = {}
+    table = {}
     for key in rows[0]:
         vals = [r[key] for r in rows]
         if isinstance(vals[0], str):
@@ -118,11 +189,16 @@ def profile_configs(
 
 def collect_dataset(n_configs: int = 16128, seed: int = 0,
                     sim: TpuGemmSimulator | None = None,
-                    progress_every: int = 0) -> dict[str, np.ndarray]:
-    """The paper's dataset: >=16,128 profiled GEMM operations."""
+                    progress_every: int = 0,
+                    chip: ChipSpec | str = TPU_V5E) -> dict[str, np.ndarray]:
+    """The paper's dataset: >=16,128 profiled GEMM operations.
+
+    `chip` selects the measurement substrate ("tpu_v5e", "rtx4070", or any
+    registered ChipSpec); an explicit `sim` wins over `chip`.
+    """
     cfgs = sweep_configs(n_configs=n_configs, seed=seed)
-    return profile_configs(cfgs, sim or TpuGemmSimulator(seed=seed),
-                           progress_every=progress_every)
+    sim = sim or TpuGemmSimulator(chip=chip, seed=seed)
+    return profile_configs(cfgs, sim, progress_every=progress_every)
 
 
 def save_dataset(table: dict[str, np.ndarray], path: str) -> None:

@@ -16,7 +16,6 @@ don't divide the 16-way model axis (e.g. 28 heads) remain legal.
 from __future__ import annotations
 
 import fnmatch
-import re
 import threading
 
 import jax

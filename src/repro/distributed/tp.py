@@ -22,7 +22,6 @@ axis gradient reduction stays with SPMD (bf16 cotangents).
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -24,12 +24,21 @@ import jax.numpy as jnp
 from repro.kernels.tiled_matmul import BlockConfig, DEFAULT_CONFIG, tiled_matmul
 
 _MODE: Literal["auto", "pallas", "pallas_interpret", "xla"] = "auto"
+_CHIP: str = "tpu_v5e"
 
 
 def force_mode(mode: Literal["auto", "pallas", "pallas_interpret", "xla"]):
     """Override dispatch (tests use 'pallas_interpret'; dry-run uses 'xla')."""
     global _MODE
     _MODE = mode
+
+
+def force_chip(chip: str) -> None:
+    """Select the chip registry entry the trace-time autotuner targets."""
+    global _CHIP
+    from repro.core.chips import get_chip
+
+    _CHIP = get_chip(chip).name
 
 
 def _resolve_mode() -> str:
@@ -40,12 +49,13 @@ def _resolve_mode() -> str:
 
 @functools.lru_cache(maxsize=None)
 def _tuned_config(m: int, n: int, k: int, dtype: str,
-                  objective: str) -> BlockConfig:
+                  objective: str, chip: str) -> BlockConfig:
     # Late import: autotuner depends on the trained predictor artifacts.
     try:
         from repro.core.autotuner import get_tuner
 
-        return get_tuner().best_config(m, n, k, dtype=dtype, objective=objective)
+        return get_tuner(chip=chip).best_config(m, n, k, dtype=dtype,
+                                                objective=objective)
     except Exception:
         return DEFAULT_CONFIG
 
@@ -78,7 +88,7 @@ def matmul(
             a.reshape(m, k), b, dn, preferred_element_type=jnp.float32
         ).astype(out_dtype)
     else:
-        cfg = config or _tuned_config(m, n, k, str(a.dtype), objective)
+        cfg = config or _tuned_config(m, n, k, str(a.dtype), objective, _CHIP)
         out = tiled_matmul(
             a.reshape(m, k), b,
             config=cfg,

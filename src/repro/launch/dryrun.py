@@ -18,7 +18,6 @@ from repro.configs import (  # noqa: E402
     all_cells,
     get_config,
     input_specs,
-    supported_cells,
 )
 from repro.core.hloanalyze import analyze_hlo  # noqa: E402
 from repro.distributed.sharding import (  # noqa: E402

@@ -6,7 +6,6 @@ predictor-tuned Pallas GEMM is the compute path on TPU and XLA dot elsewhere.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
-import jax.numpy as jnp
 
 from repro.models import encdec, hybrid, moe, ssm, vlm
 from repro.models.config import ModelConfig

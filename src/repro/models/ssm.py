@@ -257,7 +257,6 @@ def ssd_scan(x: jax.Array, a_log: jax.Array, Bm: jax.Array, Cm: jax.Array,
 
 def _mamba2_split(cfg: ModelConfig, proj: jax.Array):
     di, ds, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
-    H = di // cfg.ssm_headdim
     z, rest = jnp.split(proj, [di], axis=-1)
     xBC, dt = jnp.split(rest, [di + 2 * G * ds], axis=-1)
     return z, xBC, dt  # dt: (..., H)

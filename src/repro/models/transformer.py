@@ -8,7 +8,6 @@ for the 512-device dry-run compiles).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -86,7 +86,6 @@ def vlm_prefill(params: Params, batch: dict, cfg: ModelConfig,
 
 def vlm_decode_step(params: Params, token: jax.Array, state: dict,
                     cfg: ModelConfig):
-    B = token.shape[0]
     idx = state["index"]
     pos_scalar = state["next_pos"]                       # (B,)
     positions = jnp.repeat(pos_scalar[:, None, None], 3, axis=2)  # (B,1,3)

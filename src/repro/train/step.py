@@ -8,7 +8,6 @@ reduces cotangents in bf16 — half the DP wire bytes of fp32).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

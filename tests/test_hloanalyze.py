@@ -112,9 +112,6 @@ class TestBytes:
 
 class TestCollectives:
     def test_psum_inside_scan_scaled(self):
-        mesh = jax.make_mesh((1,), ("x",))
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
         # collectives need >1 device to appear; just validate parser on text
         hlo = """
 HloModule m

@@ -10,7 +10,6 @@ from repro.core.mlperf import (
     LinearRegression,
     Pipeline,
     RandomForestRegressor,
-    Ridge,
     StackingRegressor,
     StandardScaler,
     TabularPreprocessor,

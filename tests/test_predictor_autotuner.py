@@ -12,7 +12,6 @@ from repro.core.profiler import (
     collect_dataset,
     feature_table,
     load_dataset,
-    profile_configs,
     save_dataset,
     sweep_configs,
 )
@@ -20,7 +19,9 @@ from repro.core.profiler import (
 
 @pytest.fixture(scope="module")
 def dataset():
-    return collect_dataset(n_configs=2500, seed=0)
+    # 2,200 configs: enough for R^2 > 0.95 while keeping module setup and
+    # the RF fits fast (the batched substrate collects this in ~25 ms).
+    return collect_dataset(n_configs=2200, seed=0)
 
 
 @pytest.fixture(scope="module")
@@ -77,6 +78,7 @@ class TestPredictor:
         assert set(out) == set(TARGETS)
         assert (out["runtime_ms"] > 0).all()
 
+    @pytest.mark.slow
     def test_beats_linreg(self, fitted, dataset):
         pred, tr, te = fitted
         lin = PerfPredictor(model="linreg").fit(tr)
@@ -100,6 +102,7 @@ class TestPredictor:
                                                                     jnp.float32)))
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
+    @pytest.mark.slow
     def test_jax_predictor_close_in_distribution(self, fitted):
         """fp32 feature scaling can flip exact-threshold splits; demand
         functional closeness (median <1% error, p90 <10%)."""

@@ -1,7 +1,6 @@
 """Distributed-runtime tests: optimizer, checkpoint/restart, fault tolerance,
 data pipeline determinism, serving engine, gradient compression."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,6 @@ from repro.data.pipeline import (
     DataConfig,
     DataLoader,
     SyntheticLMDataset,
-    smoke_batch,
 )
 from repro.models.registry import get_model
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state, lr_at
@@ -224,9 +222,6 @@ class TestServingEngine:
         assert len(results) == 3
         assert all(len(r.tokens) == 5 for r in results)
         # same prompts again -> identical generations (greedy)
-        for uid in range(3):
-            rng2 = np.random.default_rng(0)
-            pass
         eng2 = ServingEngine(model, params, cfg, max_batch=2, max_len=64)
         rng = np.random.default_rng(0)
         for uid in range(3):
