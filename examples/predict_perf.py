@@ -1,15 +1,19 @@
 """Performance-prediction example: what the paper's Fig 7-9 show — predicted
-vs actual runtime/power/energy across matrix sizes, printed as a table, plus
-a demonstration of the jitted in-graph predictor ranking candidate configs.
+vs actual runtime/power/energy across matrix sizes, printed as a table — plus
+the serving stack around it: the versioned pickle-free predictor artifact
+(save -> validated load), the batched `tune_many` fleet API, and the compiled
+ranking path over a candidate grid.
 
 Run:  PYTHONPATH=src python examples/predict_perf.py
 """
 
-import jax.numpy as jnp
+import os
+import tempfile
+
 import numpy as np
 
 from repro.core.autotuner import GemmAutotuner
-from repro.core.features import NUMERIC_FEATURES, config_features
+from repro.core.features import config_features
 from repro.core.hwsim import GemmConfig, TpuGemmSimulator
 from repro.core.mlperf import train_test_split
 from repro.core.predictor import PerfPredictor
@@ -19,8 +23,18 @@ from repro.core.profiler import collect_dataset
 def main():
     table = collect_dataset(n_configs=4000, seed=0)
     tr, _ = train_test_split(table, test_size=0.1, random_state=0)
-    pred = PerfPredictor(model="rf", residual=True, fast=True).fit(tr)
+    pred = PerfPredictor(model="rf", residual=True, fast=True,
+                         chip="tpu_v5e").fit(tr)
     sim = TpuGemmSimulator(seed=42)
+
+    # versioned artifact round-trip: .npz arrays + JSON metadata, validated
+    # on load (schema + fingerprint), no pickle anywhere.
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "perf_predictor_tpu_v5e.npz")
+        pred.save(path)
+        pred = PerfPredictor.load(path)
+    print(f"artifact: model={pred.model_name} chip={pred.chip_name} "
+          f"fingerprint={pred.fingerprint()}")
 
     print(f"{'size':>6} {'pred ms':>9} {'actual ms':>9} {'pred W':>7} "
           f"{'actual W':>8} {'pred J':>8} {'actual J':>8}")
@@ -33,18 +47,23 @@ def main():
               f"{out['power_w'][0]:>7.1f} {t.power_w:>8.1f} "
               f"{out['energy_j'][0]:>8.3f} {t.energy_j:>8.3f}")
 
-    # jitted in-graph ranking of every candidate config for one GEMM
+    # fleet tuning: one batched scorer call + one verification sweep for
+    # every uncached shape (the serving path behind ops.warm_gemm_cache).
     tuner = GemmAutotuner(pred, sim)
-    cfgs = tuner.candidate_configs(4096, 4096, 4096)
-    X = jnp.asarray(
-        np.stack([[config_features(c)[k] for k in NUMERIC_FEATURES]
-                  for c in cfgs]), jnp.float32)
-    jfn = pred.jax_predictor()
-    runtimes = np.asarray(jfn(X))[:, 0]
-    best = cfgs[int(runtimes.argmin())]
-    print(f"\njitted ranking over {len(cfgs)} candidates -> best block "
-          f"({best.block_m},{best.block_n},{best.block_k}) "
-          f"pred {runtimes.min():.3f} ms")
+    fleet = [(4096, 4096, 4096), (8192, 1024, 8192), (16, 4096, 4096),
+             (2048, 2048, 2048), (512, 512, 512)]
+    best = tuner.tune_many(fleet)
+    print("\ntune_many over the shape fleet:")
+    for (m, n, k), cfg in zip(fleet, best):
+        print(f"  ({m:>5},{n:>5},{k:>5}) -> block "
+              f"({cfg.block_m},{cfg.block_n},{cfg.block_k})")
+
+    # compiled ranking of every candidate config for one GEMM
+    cfgs, X = tuner.candidate_table(4096, 4096, 4096, "bf16")
+    order = tuner.rank(cfgs, features=X)
+    bestc = cfgs[int(order[0])]
+    print(f"\nbatched ranking over {len(cfgs)} candidates -> best block "
+          f"({bestc.block_m},{bestc.block_n},{bestc.block_k})")
     print("predict_perf OK")
 
 

@@ -40,6 +40,15 @@ class ChipSpec:
         """FLOPs/byte at which compute time == memory time."""
         return self.peak(dtype) / self.hbm_bw
 
+    @property
+    def nominal_power_w(self) -> float:
+        """Mid-load operating power: idle floor + half the dynamic envelope.
+
+        This is the analytical anchor the predictor's residual mode uses
+        for energy (TPU v5e: 60 + (95+45)/2 = 130 W; RTX 4070: 142.5 W).
+        """
+        return self.idle_power_w + 0.5 * (self.mxu_power_w + self.hbm_power_w)
+
 
 TPU_V5E = ChipSpec(
     name="tpu_v5e",
@@ -115,6 +124,18 @@ def available_chips() -> list[str]:
 
 register_chip(TPU_V5E, "v5e")
 register_chip(RTX_4070, "rtx_4070", "ada", "4070")
+
+
+# Trace-time dtype strings (str(jnp_array.dtype)) -> simulator dtype names.
+# The substrate's peak-FLOPs tables are keyed by the short names only, so
+# the autotuner canonicalizes before enumerating candidates.
+DTYPE_CANON = {"bfloat16": "bf16", "float32": "f32", "float16": "f16",
+               "int8": "int8", "s8": "int8", "u8": "int8"}
+
+
+def canon_dtype(dtype: str) -> str:
+    """Map a jax dtype string to the substrate's dtype name."""
+    return DTYPE_CANON.get(dtype, dtype)
 
 
 DTYPE_BYTES = {"bf16": 2, "f32": 4, "float32": 4, "bfloat16": 2, "int8": 1,

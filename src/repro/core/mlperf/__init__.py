@@ -12,6 +12,12 @@ can be exported to flat arrays for jit-compiled prediction inside JAX
 (see `jaxpredict.py`), which the autotuner uses.
 """
 
+from repro.core.mlperf.state import (
+    estimator_from_state,
+    pack_nested,
+    register_estimator,
+    unpack_nested,
+)
 from repro.core.mlperf.tree import DecisionTreeRegressor, Binner
 from repro.core.mlperf.forest import RandomForestRegressor
 from repro.core.mlperf.gbdt import GradientBoostedTreesRegressor
@@ -33,6 +39,10 @@ from repro.core.mlperf.metrics import (
 )
 
 __all__ = [
+    "estimator_from_state",
+    "pack_nested",
+    "register_estimator",
+    "unpack_nested",
     "DecisionTreeRegressor",
     "Binner",
     "RandomForestRegressor",

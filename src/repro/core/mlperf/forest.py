@@ -12,9 +12,23 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.mlperf.tree import Binner, DecisionTreeRegressor
+from repro.core.mlperf.state import (
+    CLASS_KEY,
+    class_tag,
+    register_estimator,
+    scalar,
+)
+from repro.core.mlperf.tree import (
+    Binner,
+    DecisionTreeRegressor,
+    concat_flat_trees,
+    estimators_from_state,
+    flatten_ensemble,
+    predict_stacked,
+)
 
 
+@register_estimator
 class RandomForestRegressor:
     def __init__(
         self,
@@ -40,8 +54,10 @@ class RandomForestRegressor:
         self.estimators_: list[DecisionTreeRegressor] = []
         self.binner_: Binner | None = None
         self.n_targets_: int | None = None
+        self._stacked: dict[str, np.ndarray] | None = None
 
     def fit(self, X, y, sample_weight=None):
+        self._stacked = None
         X = np.asarray(X, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)
         if y.ndim == 1:
@@ -76,7 +92,25 @@ class RandomForestRegressor:
             self.estimators_.append(tree)
         return self
 
+    def _stacked_arrays(self) -> dict[str, np.ndarray]:
+        if self._stacked is None:
+            self._stacked = flatten_ensemble(
+                [t.tree_ for t in self.estimators_])
+        return self._stacked
+
     def predict(self, X) -> np.ndarray:
+        """Mean prediction over all trees — one stacked descent, no
+        Python per-tree loop (same leaves as `predict_per_tree_loop`)."""
+        assert self.estimators_, "not fitted"
+        X = np.asarray(X, dtype=np.float64)
+        leaves = predict_stacked(self._stacked_arrays(), X,
+                                 max_depth=self.max_depth)  # (T, N, K)
+        acc = leaves.sum(axis=0) / len(self.estimators_)
+        return acc[:, 0] if self.n_targets_ == 1 else acc
+
+    def predict_per_tree_loop(self, X) -> np.ndarray:
+        """Pre-vectorization reference path (per-tree Python loop), kept
+        for parity tests and rank-latency benchmarks."""
         assert self.estimators_, "not fitted"
         X = np.asarray(X, dtype=np.float64)
         acc = np.zeros((len(X), self.n_targets_))
@@ -93,37 +127,47 @@ class RandomForestRegressor:
         return imp / s if s > 0 else imp
 
     # ---- flat export for jit prediction (see jaxpredict.py) ----
-    def to_flat_arrays(self) -> dict[str, np.ndarray]:
-        """Pack all trees into rectangular arrays padded to the max node
-        count: feature (T, M), threshold (T, M), left/right (T, M),
-        value (T, M, n_targets). Padding nodes are leaves with value 0 and
-        are unreachable.
+    def to_flat_arrays(self, *, float64: bool = False
+                       ) -> dict[str, np.ndarray]:
+        """Global-id flat ensemble (see `flatten_ensemble`) plus the
+        descent step count: feature/threshold/left/right over concatenated
+        nodes, `roots` (T,), value (total_nodes, n_targets), max_depth.
+        `float64=True` keeps exact thresholds/values so x64 traversal takes
+        bit-identical branches vs the numpy reference.
         """
-        trees = [t.tree_ for t in self.estimators_]
-        T = len(trees)
-        M = max(t.n_nodes for t in trees)
-        K = self.n_targets_
-        feature = np.full((T, M), -1, dtype=np.int32)
-        threshold = np.zeros((T, M), dtype=np.float32)
-        left = np.zeros((T, M), dtype=np.int32)
-        right = np.zeros((T, M), dtype=np.int32)
-        value = np.zeros((T, M, K), dtype=np.float32)
-        for i, t in enumerate(trees):
-            m = t.n_nodes
-            feature[i, :m] = t.feature
-            # thresholds sit exactly on training-data values (quantile bin
-            # edges); nudge up one fp32 ulp so values that compared `<=` in
-            # fp64 still go left after fp32 rounding in the jitted path.
-            thr32 = t.threshold.astype(np.float32)
-            threshold[i, :m] = np.nextafter(thr32, np.float32(np.inf))
-            left[i, :m] = np.maximum(t.left, 0)
-            right[i, :m] = np.maximum(t.right, 0)
-            value[i, :m] = t.value
+        flat = self._stacked_arrays()
+        if float64:
+            return {**flat, "max_depth": np.int32(self.max_depth)}
+        # thresholds sit exactly on training-data values (quantile bin
+        # edges); nudge up one fp32 ulp so values that compared `<=` in
+        # fp64 still go left after fp32 rounding in the jitted path.
+        thr32 = flat["threshold"].astype(np.float32)
         return {
-            "feature": feature,
-            "threshold": threshold,
-            "left": left,
-            "right": right,
-            "value": value,
+            "feature": flat["feature"],
+            "threshold": np.nextafter(thr32, np.float32(np.inf)),
+            "left": flat["left"],
+            "right": flat["right"],
+            "value": flat["value"].astype(np.float32),
+            "roots": flat["roots"],
             "max_depth": np.int32(self.max_depth),
         }
+
+    # ---- flat-array state contract (see mlperf.state) ----
+    def to_state(self) -> dict[str, np.ndarray]:
+        assert self.estimators_, "not fitted"
+        state = concat_flat_trees([t.tree_ for t in self.estimators_])
+        state[CLASS_KEY] = class_tag(type(self))
+        state["n_features"] = scalar(np.int64(self.estimators_[0].n_features_))
+        state["n_targets"] = scalar(np.int64(self.n_targets_))
+        state["max_depth"] = scalar(np.int64(self.max_depth))
+        return state
+
+    @classmethod
+    def from_state(cls, state: dict[str, np.ndarray]
+                   ) -> "RandomForestRegressor":
+        estimators = estimators_from_state(state)
+        obj = cls(n_estimators=len(estimators),
+                  max_depth=int(state["max_depth"][()]))
+        obj.n_targets_ = int(state["n_targets"][()])
+        obj.estimators_ = estimators
+        return obj

@@ -10,9 +10,23 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.mlperf.tree import Binner, DecisionTreeRegressor
+from repro.core.mlperf.state import (
+    CLASS_KEY,
+    class_tag,
+    register_estimator,
+    scalar,
+)
+from repro.core.mlperf.tree import (
+    Binner,
+    DecisionTreeRegressor,
+    concat_flat_trees,
+    estimators_from_state,
+    flatten_ensemble,
+    predict_stacked,
+)
 
 
+@register_estimator
 class GradientBoostedTreesRegressor:
     def __init__(
         self,
@@ -36,8 +50,10 @@ class GradientBoostedTreesRegressor:
         self.estimators_: list[DecisionTreeRegressor] = []
         self.base_: np.ndarray | None = None
         self.n_targets_: int | None = None
+        self._stacked: dict[str, np.ndarray] | None = None
 
     def fit(self, X, y, sample_weight=None):
+        self._stacked = None
         X = np.asarray(X, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)
         if y.ndim == 1:
@@ -73,13 +89,57 @@ class GradientBoostedTreesRegressor:
             self.estimators_.append(tree)
         return self
 
+    def _stacked_arrays(self) -> dict[str, np.ndarray]:
+        if self._stacked is None:
+            self._stacked = flatten_ensemble(
+                [t.tree_ for t in self.estimators_])
+        return self._stacked
+
     def predict(self, X) -> np.ndarray:
+        """base + lr * sum of per-round trees — one stacked descent across
+        every boosting round (same leaves as `predict_per_tree_loop`)."""
+        assert self.base_ is not None, "not fitted"
+        X = np.asarray(X, dtype=np.float64)
+        acc = np.tile(self.base_, (len(X), 1))
+        if self.estimators_:
+            leaves = predict_stacked(self._stacked_arrays(), X,
+                                     max_depth=self.max_depth)  # (T, N, K)
+            acc = acc + self.learning_rate * leaves.sum(axis=0)
+        return acc[:, 0] if self.n_targets_ == 1 else acc
+
+    def predict_per_tree_loop(self, X) -> np.ndarray:
+        """Pre-vectorization reference path (per-round Python loop), kept
+        for parity tests and rank-latency benchmarks."""
         assert self.base_ is not None, "not fitted"
         X = np.asarray(X, dtype=np.float64)
         acc = np.tile(self.base_, (len(X), 1))
         for tree in self.estimators_:
             acc += self.learning_rate * tree.tree_.predict_raw(X)
         return acc[:, 0] if self.n_targets_ == 1 else acc
+
+    # ---- flat-array state contract (see mlperf.state) ----
+    def to_state(self) -> dict[str, np.ndarray]:
+        assert self.base_ is not None, "not fitted"
+        state = concat_flat_trees([t.tree_ for t in self.estimators_])
+        state[CLASS_KEY] = class_tag(type(self))
+        state["base"] = np.asarray(self.base_, dtype=np.float64)
+        state["learning_rate"] = scalar(np.float64(self.learning_rate))
+        state["n_features"] = scalar(np.int64(self.estimators_[0].n_features_))
+        state["n_targets"] = scalar(np.int64(self.n_targets_))
+        state["max_depth"] = scalar(np.int64(self.max_depth))
+        return state
+
+    @classmethod
+    def from_state(cls, state: dict[str, np.ndarray]
+                   ) -> "GradientBoostedTreesRegressor":
+        estimators = estimators_from_state(state)
+        obj = cls(n_estimators=len(estimators),
+                  learning_rate=float(state["learning_rate"][()]),
+                  max_depth=int(state["max_depth"][()]))
+        obj.base_ = np.asarray(state["base"], dtype=np.float64)
+        obj.n_targets_ = int(state["n_targets"][()])
+        obj.estimators_ = estimators
+        return obj
 
     def staged_score_path(self, X, y, metric) -> list[float]:
         """Score after each boosting round (for early-stopping analysis)."""

@@ -1,67 +1,92 @@
 """Jit-compiled random-forest inference.
 
 The sklearn original can only predict in Python. Here the fitted forest is
-exported to flat arrays (`RandomForestRegressor.to_flat_arrays`) and traversed
-with a fixed-depth `lax.fori_loop`, so the performance predictor can run
-*inside* jitted code — e.g. ranking thousands of candidate GEMM block configs
-in one XLA call during autotuning.
+exported to the global-id flat layout (`RandomForestRegressor.to_flat_arrays`:
+concatenated node arrays, children rebased to global ids, leaves
+self-looping) and traversed with a level-synchronous descent — one (T*N,)
+cursor vector advanced `max_depth` gather steps. That keeps the whole
+ensemble in a single XLA computation, so the performance predictor can run
+*inside* jitted code — e.g. ranking thousands of candidate GEMM block
+configs in one call during autotuning.
+
+Two precisions:
+
+  * default (float32) — for embedding inside fp32 jitted programs.
+    Thresholds are nudged one ulp so most fp64-trained splits survive fp32
+    rounding, but near-threshold samples can still flip branches.
+  * ``x64=True`` — arrays stay float64 (built and called under a scoped
+    ``jax.experimental.enable_x64``), so traversal takes bit-identical
+    branches vs the numpy reference. This is what the autotuner's serving
+    scorer uses: XLA speed with exact-parity predictions.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth",))
-def _forest_predict(feature, threshold, left, right, value, X, *, max_depth: int):
-    """feature/threshold/left/right: (T, M); value: (T, M, K); X: (N, F).
-    Returns (N, K) mean-over-trees prediction.
+@functools.partial(jax.jit, static_argnames=("max_depth", "n_trees"))
+def _forest_predict(feature, threshold, left, right, value, roots, X, *,
+                    max_depth: int, n_trees: int):
+    """feature/threshold/left/right: (total_nodes,); value: (total, K);
+    roots: (T,); X: (N, F). Returns (N, K) mean-over-trees prediction.
+
+    All (tree, sample) cursors descend together: each step is one gather
+    per node array over the (T*N,) cursor vector. Leaves self-loop, so a
+    fixed `max_depth` step count lands every cursor on its leaf.
     """
+    N, F = X.shape
+    Xr = X.reshape(-1)
+    node = jnp.repeat(roots, N)                        # (T*N,)
+    row = jnp.tile(jnp.arange(N, dtype=roots.dtype) * F, n_trees)
 
-    def one_tree(feat_t, thr_t, left_t, right_t, val_t, x):
-        # x: (F,). Descend max_depth steps; leaves self-loop via feature<0.
-        def step(_, node):
-            f = feat_t[node]
-            is_leaf = f < 0
-            fx = x[jnp.maximum(f, 0)]
-            nxt = jnp.where(fx <= thr_t[node], left_t[node], right_t[node])
-            return jnp.where(is_leaf, node, nxt)
+    def step(_, node):
+        x = Xr[row + feature[node]]
+        return jnp.where(x <= threshold[node], left[node], right[node])
 
-        node = jax.lax.fori_loop(0, max_depth + 1, step, jnp.int32(0))
-        return val_t[node]  # (K,)
-
-    # vmap over samples, then over trees
-    per_sample = jax.vmap(one_tree, in_axes=(None, None, None, None, None, 0))
-    per_tree = jax.vmap(per_sample, in_axes=(0, 0, 0, 0, 0, None))
-    preds = per_tree(feature, threshold, left, right, value, X)  # (T, N, K)
-    return preds.mean(axis=0)
+    node = jax.lax.fori_loop(0, max_depth, step, node)
+    leaves = value[node].reshape(n_trees, N, -1)       # (T, N, K)
+    return leaves.mean(axis=0)
 
 
 class JaxForestPredictor:
     """Wraps a fitted mlperf RandomForestRegressor for jitted inference."""
 
-    def __init__(self, forest):
-        flat = forest.to_flat_arrays()
-        self.feature = jnp.asarray(flat["feature"])
-        self.threshold = jnp.asarray(flat["threshold"])
-        self.left = jnp.asarray(flat["left"])
-        self.right = jnp.asarray(flat["right"])
-        self.value = jnp.asarray(flat["value"])
+    def __init__(self, forest, *, x64: bool = False):
+        self.x64 = x64
+        flat = forest.to_flat_arrays(float64=x64)
+        with self._precision():
+            self.feature = jnp.asarray(flat["feature"])
+            self.threshold = jnp.asarray(flat["threshold"])
+            self.left = jnp.asarray(flat["left"])
+            self.right = jnp.asarray(flat["right"])
+            self.value = jnp.asarray(flat["value"])
+            self.roots = jnp.asarray(flat["roots"])
         self.max_depth = int(flat["max_depth"])
+        self.n_trees = int(len(flat["roots"]))
         self.n_targets = int(self.value.shape[-1])
 
+    def _precision(self):
+        """Scoped x64 so float64 arrays survive asarray/tracing; the
+        default fp32 path is a no-op context."""
+        return enable_x64() if self.x64 else contextlib.nullcontext()
+
     def __call__(self, X) -> jax.Array:
-        X = jnp.asarray(X, dtype=jnp.float32)
-        if X.ndim == 1:
-            X = X[None]
-        return _forest_predict(
-            self.feature, self.threshold, self.left, self.right, self.value,
-            X, max_depth=self.max_depth,
-        )
+        with self._precision():
+            X = jnp.asarray(X, dtype=jnp.float64 if self.x64 else jnp.float32)
+            if X.ndim == 1:
+                X = X[None]
+            return _forest_predict(
+                self.feature, self.threshold, self.left, self.right,
+                self.value, self.roots, X, max_depth=self.max_depth,
+                n_trees=self.n_trees,
+            )
 
     def predict(self, X) -> np.ndarray:
         return np.asarray(self(X))

@@ -8,7 +8,10 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.mlperf.state import CLASS_KEY, class_tag, register_estimator
 
+
+@register_estimator
 class LinearRegression:
     def __init__(self, fit_intercept: bool = True):
         self.fit_intercept = fit_intercept
@@ -46,7 +49,26 @@ class LinearRegression:
         X = np.asarray(X, dtype=np.float64)
         return X @ self.coef_ + self.intercept_
 
+    # ---- flat-array state contract (see mlperf.state) ----
+    def to_state(self) -> dict[str, np.ndarray]:
+        assert self.coef_ is not None, "not fitted"
+        return {
+            CLASS_KEY: class_tag(type(self)),
+            "coef": np.asarray(self.coef_, dtype=np.float64),
+            "intercept": np.asarray(self.intercept_, dtype=np.float64),
+        }
 
+    @classmethod
+    def from_state(cls, state: dict[str, np.ndarray]):
+        obj = cls()
+        obj.coef_ = np.asarray(state["coef"], dtype=np.float64)
+        intercept = np.asarray(state["intercept"], dtype=np.float64)
+        obj.intercept_ = float(intercept[()]) if intercept.ndim == 0 \
+            else intercept
+        return obj
+
+
+@register_estimator
 class Ridge(LinearRegression):
     def __init__(self, alpha: float = 1.0, fit_intercept: bool = True):
         super().__init__(fit_intercept=fit_intercept)

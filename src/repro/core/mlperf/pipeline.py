@@ -36,6 +36,19 @@ class StandardScaler:
     def inverse_transform(self, X):
         return np.asarray(X) * self.scale_ + self.mean_
 
+    # ---- flat-array state contract (see mlperf.state) ----
+    def to_state(self) -> dict[str, np.ndarray]:
+        assert self.mean_ is not None, "not fitted"
+        return {"mean": np.asarray(self.mean_, dtype=np.float64),
+                "scale": np.asarray(self.scale_, dtype=np.float64)}
+
+    @classmethod
+    def from_state(cls, state) -> "StandardScaler":
+        obj = cls()
+        obj.mean_ = np.asarray(state["mean"], dtype=np.float64)
+        obj.scale_ = np.asarray(state["scale"], dtype=np.float64)
+        return obj
+
 
 class TabularPreprocessor:
     """Dict-of-columns table -> (feature_matrix, feature_names).

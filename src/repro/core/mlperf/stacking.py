@@ -13,8 +13,18 @@ import copy
 import numpy as np
 
 from repro.core.mlperf.linreg import Ridge
+from repro.core.mlperf.state import (
+    CLASS_KEY,
+    class_tag,
+    estimator_from_state,
+    pack_nested,
+    register_estimator,
+    scalar,
+    unpack_nested,
+)
 
 
+@register_estimator
 class StackingRegressor:
     def __init__(
         self,
@@ -82,3 +92,39 @@ class StackingRegressor:
         Z = self._meta_features(preds, X)
         out = np.stack([m.predict(Z) for m in self.meta_], axis=1)
         return out[:, 0] if self.n_targets_ == 1 else out
+
+    # ---- flat-array state contract (see mlperf.state) ----
+    def to_state(self) -> dict[str, np.ndarray]:
+        assert self.fitted_bases_, "not fitted"
+        state: dict[str, np.ndarray] = {
+            CLASS_KEY: class_tag(type(self)),
+            "n_bases": scalar(np.int64(len(self.fitted_bases_))),
+            "n_targets": scalar(np.int64(self.n_targets_)),
+            "passthrough": scalar(np.bool_(self.passthrough)),
+            # meta ridges are per-target with 1-d coefs: stack to (T, Z)
+            "meta_coef": np.stack(
+                [np.asarray(m.coef_, dtype=np.float64) for m in self.meta_]),
+            "meta_intercept": np.array(
+                [float(np.ravel(m.intercept_)[0]) for m in self.meta_]),
+        }
+        for i, est in enumerate(self.fitted_bases_):
+            state.update(pack_nested(f"base{i}", est.to_state()))
+        return state
+
+    @classmethod
+    def from_state(cls, state: dict[str, np.ndarray]) -> "StackingRegressor":
+        obj = cls([], passthrough=bool(state["passthrough"][()]))
+        obj.n_targets_ = int(state["n_targets"][()])
+        obj.fitted_bases_ = [
+            estimator_from_state(unpack_nested(state, f"base{i}"))
+            for i in range(int(state["n_bases"][()]))
+        ]
+        meta_coef = np.asarray(state["meta_coef"], dtype=np.float64)
+        meta_intercept = np.asarray(state["meta_intercept"], dtype=np.float64)
+        obj.meta_ = []
+        for t in range(obj.n_targets_):
+            m = Ridge(alpha=obj.meta_alpha)
+            m.coef_ = meta_coef[t]
+            m.intercept_ = float(meta_intercept[t])
+            obj.meta_.append(m)
+        return obj

@@ -15,6 +15,13 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.mlperf.state import (
+    CLASS_KEY,
+    class_tag,
+    register_estimator,
+    scalar,
+)
+
 _MAX_BINS = 255  # bin index 255 reserved for "missing"
 
 
@@ -126,6 +133,121 @@ class _FlatTree:
             node[idx] = np.where(go_left, self.left[nd], self.right[nd])
             active = self.feature[node] >= 0
         return self.value[node]
+
+
+def flatten_ensemble(trees: list[_FlatTree]) -> dict[str, np.ndarray]:
+    """Global-id flat layout for batched descent over a whole ensemble.
+
+    Node arrays of every tree are concatenated and children rebased to
+    global node ids; leaves self-loop (left == right == own id), so the
+    descent is a pure fixed-point iteration with 1-d gathers only — no
+    per-tree padding, no 2-d advanced indexing.
+    """
+    offsets = np.cumsum([0] + [t.n_nodes for t in trees[:-1]]).astype(np.int64)
+    feature = np.concatenate([t.feature for t in trees])
+    threshold = np.concatenate([t.threshold for t in trees])
+    left = np.concatenate([t.left + o for t, o in zip(trees, offsets)])
+    right = np.concatenate([t.right + o for t, o in zip(trees, offsets)])
+    node_ids = np.arange(len(feature), dtype=np.int64)
+    is_leaf = feature < 0
+    left = np.where(is_leaf, node_ids, left)
+    right = np.where(is_leaf, node_ids, right)
+    return {
+        "feature": np.maximum(feature, 0).astype(np.int64),
+        "threshold": threshold.astype(np.float64),
+        "left": left.astype(np.int64),
+        "right": right.astype(np.int64),
+        "value": np.concatenate([t.value for t in trees], axis=0),
+        "roots": offsets,
+    }
+
+
+def predict_stacked(flat: dict[str, np.ndarray], X: np.ndarray,
+                    max_depth: int | None = None) -> np.ndarray:
+    """Leaf values for every (tree, sample) pair at once: (T, N, K).
+
+    One level-synchronous descent over the whole ensemble — a (T*N,)
+    cursor vector advanced together — instead of a Python loop over
+    trees. Reaches the identical leaves as `_FlatTree.predict_raw`.
+    With `max_depth` the loop runs a fixed step count (leaves self-loop,
+    so overshooting is a no-op); otherwise it iterates to convergence.
+    """
+    X = np.ascontiguousarray(X, dtype=np.float64)
+    N, F = X.shape
+    Xr = X.ravel()
+    roots = flat["roots"]
+    T = len(roots)
+    feature, threshold = flat["feature"], flat["threshold"]
+    left, right = flat["left"], flat["right"]
+    node = np.repeat(roots, N)                       # (T*N,) cursor vector
+    row = np.tile(np.arange(N, dtype=np.int64) * F, T)
+    steps = 0
+    while True:
+        x = Xr[row + feature[node]]                  # per-cursor feature
+        nxt = np.where(x <= threshold[node], left[node], right[node])
+        steps += 1
+        if max_depth is not None:
+            node = nxt
+            if steps >= max_depth:
+                break
+        else:
+            if np.array_equal(nxt, node):            # all cursors on leaves
+                break
+            node = nxt
+    return flat["value"][node].reshape(T, N, -1)     # (T, N, K)
+
+
+def concat_flat_trees(trees: list[_FlatTree]) -> dict[str, np.ndarray]:
+    """Ragged ensemble -> concatenated arrays + `tree_offsets` (T+1,)."""
+    offsets = np.cumsum([0] + [t.n_nodes for t in trees]).astype(np.int64)
+    return {
+        "feature": np.concatenate([t.feature for t in trees]),
+        "threshold": np.concatenate([t.threshold for t in trees]),
+        "threshold_bin": np.concatenate([t.threshold_bin for t in trees]),
+        "left": np.concatenate([t.left for t in trees]),
+        "right": np.concatenate([t.right for t in trees]),
+        "value": np.concatenate([t.value for t in trees], axis=0),
+        "n_samples": np.concatenate([t.n_samples for t in trees]),
+        "gain": np.concatenate([t.gain for t in trees]),
+        "tree_offsets": offsets,
+    }
+
+
+def split_flat_trees(state: dict[str, np.ndarray]) -> list[_FlatTree]:
+    """Inverse of `concat_flat_trees`."""
+    offsets = np.asarray(state["tree_offsets"], dtype=np.int64)
+    trees = []
+    for a, b in zip(offsets[:-1], offsets[1:]):
+        trees.append(_FlatTree(
+            feature=np.asarray(state["feature"][a:b], dtype=np.int32),
+            threshold=np.asarray(state["threshold"][a:b], dtype=np.float64),
+            threshold_bin=np.asarray(state["threshold_bin"][a:b],
+                                     dtype=np.int32),
+            left=np.asarray(state["left"][a:b], dtype=np.int32),
+            right=np.asarray(state["right"][a:b], dtype=np.int32),
+            value=np.asarray(state["value"][a:b], dtype=np.float64),
+            n_samples=np.asarray(state["n_samples"][a:b], dtype=np.int32),
+            gain=np.asarray(state["gain"][a:b], dtype=np.float64),
+        ))
+    return trees
+
+
+def estimators_from_state(state: dict[str, np.ndarray]
+                          ) -> list["DecisionTreeRegressor"]:
+    """Rebuild predict-ready DecisionTreeRegressor wrappers from a
+    concatenated-ensemble state (the shared tail of forest/GBDT
+    `from_state`)."""
+    max_depth = int(state["max_depth"][()])
+    n_features = int(state["n_features"][()])
+    n_targets = int(state["n_targets"][()])
+    out = []
+    for t in split_flat_trees(state):
+        est = DecisionTreeRegressor(max_depth=max_depth)
+        est.tree_ = t
+        est.n_features_ = n_features
+        est.n_targets_ = n_targets
+        out.append(est)
+    return out
 
 
 class _TreeBuilder:
@@ -267,6 +389,7 @@ class _TreeBuilder:
         return best
 
 
+@register_estimator
 class DecisionTreeRegressor:
     """Multi-output CART regression tree (histogram split finding)."""
 
@@ -346,3 +469,22 @@ class DecisionTreeRegressor:
         np.add.at(imp, self.tree_.feature[mask], self.tree_.gain[mask])
         s = imp.sum()
         return imp / s if s > 0 else imp
+
+    # ---- flat-array state contract (see mlperf.state) ----
+    def to_state(self) -> dict[str, np.ndarray]:
+        assert self.tree_ is not None, "not fitted"
+        state = concat_flat_trees([self.tree_])
+        state[CLASS_KEY] = class_tag(type(self))
+        state["n_features"] = scalar(np.int64(self.n_features_))
+        state["n_targets"] = scalar(np.int64(self.n_targets_))
+        state["max_depth"] = scalar(np.int64(self.max_depth))
+        return state
+
+    @classmethod
+    def from_state(cls, state: dict[str, np.ndarray]
+                   ) -> "DecisionTreeRegressor":
+        obj = cls(max_depth=int(state["max_depth"][()]))
+        obj.tree_ = split_flat_trees(state)[0]
+        obj.n_features_ = int(state["n_features"][()])
+        obj.n_targets_ = int(state["n_targets"][()])
+        return obj

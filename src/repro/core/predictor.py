@@ -6,14 +6,25 @@
 
 predicting [runtime_ms, power_w, energy_j, tflops] simultaneously.
 `model=` selects the Table VI architecture: rf / gbdt / linreg / stacking.
+
+Persistence is pickle-free: `save`/`load` speak a versioned artifact format —
+one ``.npz`` holding the estimator's flat-array state (see
+``repro.core.mlperf.state``) plus a ``__meta__`` JSON record (schema version,
+chip, feature/target schema, model name, log/residual flags, content
+fingerprint). `load` validates the metadata and refuses artifacts whose
+feature schema doesn't match the running code or whose arrays were tampered
+with; the fingerprint also versions downstream caches (the autotuner keys its
+winner cache by it, so retraining invalidates stale winners).
 """
 
 from __future__ import annotations
 
-import pickle
+import hashlib
+import json
 
 import numpy as np
 
+from repro.core.chips import TPU_V5E, get_chip
 from repro.core.features import NUMERIC_FEATURES, TARGETS
 from repro.core.mlperf import (
     GradientBoostedTreesRegressor,
@@ -21,9 +32,20 @@ from repro.core.mlperf import (
     RandomForestRegressor,
     StackingRegressor,
     StandardScaler,
+    estimator_from_state,
+    pack_nested,
     regression_report,
+    unpack_nested,
 )
 from repro.core.mlperf.jaxpredict import JaxForestPredictor
+
+ARTIFACT_FORMAT = "repro.perf_predictor"
+ARTIFACT_SCHEMA_VERSION = 1
+_META_KEY = "__meta__"
+
+
+class ArtifactError(ValueError):
+    """A predictor artifact is malformed, tampered, or schema-incompatible."""
 
 
 def make_model(name: str, random_state: int = 0, fast: bool = False):
@@ -56,6 +78,20 @@ def make_model(name: str, random_state: int = 0, fast: bool = False):
     raise ValueError(f"unknown model {name!r}")
 
 
+MODEL_NAMES = ("rf", "rf_deep", "gbdt", "linreg", "stacking")
+
+
+def _chip_nominal_power(chip: str | None) -> float:
+    """Anchor power from the chip the table was collected on (the old code
+    hardcoded 130.0, which is only right for TPU v5e)."""
+    if chip is not None:
+        try:
+            return get_chip(chip).nominal_power_w
+        except ValueError:
+            pass  # unregistered chip name: fall back to the default chip
+    return TPU_V5E.nominal_power_w
+
+
 class PerfPredictor:
     """fit(table) / predict(table) over dict-of-columns GEMM tables.
 
@@ -79,6 +115,7 @@ class PerfPredictor:
         """
         self.model_name = model
         self.chip_name = chip  # substrate the training table came from
+        self.nominal_power_w = _chip_nominal_power(chip)
         self.log_targets = log_targets
         self.residual = residual
         self.scaler = StandardScaler()
@@ -90,6 +127,11 @@ class PerfPredictor:
         self.feature_names = list(NUMERIC_FEATURES)
         self.target_names = list(TARGETS)
         self._fitted = False
+        self._reset_caches()
+
+    def _reset_caches(self) -> None:
+        self._jax_cache: dict[bool, object] = {}
+        self._fingerprint: str | None = None
 
     # ----- table <-> matrix -----
     def _X(self, table: dict[str, np.ndarray]) -> np.ndarray:
@@ -106,7 +148,7 @@ class PerfPredictor:
         flops = np.asarray(table["total_flops"], np.float64)
         return {
             "runtime_ms": rt,
-            "energy_j": rt / 1e3 * 130.0,           # nominal mid-load power
+            "energy_j": rt / 1e3 * self.nominal_power_w,
             "tflops": flops / (rt / 1e3) / 1e12,
         }
 
@@ -148,6 +190,7 @@ class PerfPredictor:
         self.model.fit(
             Xs, self.y_scaler.fit_transform(self._encode_y(targets, table)))
         self._fitted = True
+        self._reset_caches()
         return self
 
     def predict(self, table: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
@@ -162,6 +205,20 @@ class PerfPredictor:
             Y = Y[:, None]
         return self._decode_y(self.y_scaler.inverse_transform(Y), table)
 
+    def predict_matrix_reference(self, table: dict[str, np.ndarray]
+                                 ) -> np.ndarray:
+        """Pre-refactor prediction path: the estimator's per-tree Python
+        loop instead of the stacked descent. Kept as the parity/latency
+        baseline for tests and benchmarks."""
+        assert self._fitted, "predictor not fitted"
+        X = self.scaler.transform(self._X(table))
+        predict = getattr(self.model, "predict_per_tree_loop",
+                          self.model.predict)
+        Y = np.asarray(predict(X), dtype=np.float64)
+        if Y.ndim == 1:
+            Y = Y[:, None]
+        return self._decode_y(self.y_scaler.inverse_transform(Y), table)
+
     def evaluate(self, table: dict[str, np.ndarray]) -> dict:
         """Table IV: per-target R2/MSE/MAE/median%/mean% report."""
         truth = np.stack(
@@ -171,30 +228,54 @@ class PerfPredictor:
         return regression_report(truth, pred, self.target_names)
 
     # ----- jitted path (forest models only) -----
-    def jax_predictor(self):
-        """JaxForestPredictor over *scaled* features. Returns (fn, meta):
-        fn(X_raw (N,F) jnp) -> (N, T) decoded predictions via pure jax."""
-        if not isinstance(self.model, RandomForestRegressor):
+    def supports_jax(self) -> bool:
+        return isinstance(self.model, RandomForestRegressor)
+
+    def jax_predictor(self, *, x64: bool = False):
+        """Compiled scorer over *raw* features: fn(X_raw (N, F)) -> (N, T)
+        decoded predictions via pure jax. Built once per precision and
+        cached on the instance (refit invalidates). ``x64=True`` traverses
+        in float64 — branch decisions bit-identical to the numpy path —
+        which is what the autotuner's serving scorer uses.
+        """
+        if not self.supports_jax():
             raise TypeError("jitted prediction requires a forest model")
+        fn = self._jax_cache.get(x64)
+        if fn is None:
+            fn = self._build_jax_predictor(x64)
+            self._jax_cache[x64] = fn
+        return fn
+
+    def _build_jax_predictor(self, x64: bool):
+        import jax
         import jax.numpy as jnp
 
-        jp = JaxForestPredictor(self.model)
-        mean = jnp.asarray(self.scaler.mean_, dtype=jnp.float32)
-        scale = jnp.asarray(self.scaler.scale_, dtype=jnp.float32)
-        y_mean = jnp.asarray(self.y_scaler.mean_, dtype=jnp.float32)
-        y_scale = jnp.asarray(self.y_scaler.scale_, dtype=jnp.float32)
-        log_mask = jnp.asarray(
-            [1.0 if t in self.LOG_TARGETS else 0.0 for t in self.target_names],
-            dtype=jnp.float32)
+        jp = JaxForestPredictor(self.model, x64=x64)
+        with jp._precision():
+            dt = jnp.float64 if x64 else jnp.float32
+            y_mean = jnp.asarray(self.y_scaler.mean_, dtype=dt)
+            y_scale = jnp.asarray(self.y_scaler.scale_, dtype=dt)
+            log_mask = jnp.asarray(
+                [1.0 if t in self.LOG_TARGETS else 0.0
+                 for t in self.target_names], dtype=dt)
         i_nc = self.feature_names.index("naive_compute_ms")
         i_nm = self.feature_names.index("naive_memory_ms")
         i_no = self.feature_names.index("naive_overhead_ms")
         i_fl = self.feature_names.index("total_flops")
         residual = self.residual
+        nominal_power = self.nominal_power_w
         t_idx = {t: i for i, t in enumerate(self.target_names)}
+        target_names = list(self.target_names)
+        scaler = self.scaler
 
-        def fn(X_raw):
-            Xs = (X_raw - mean) / scale
+        # traverse -> decode as ONE jitted computation (single dispatch).
+        # Feature standardization stays OUTSIDE the jit on purpose: with
+        # mean/scale as captured constants XLA rewrites the division into a
+        # reciprocal multiply, and the last-ulp difference flips
+        # near-threshold tree branches vs the numpy path. Scaling in numpy
+        # keeps the traversal input bit-identical to `predict_matrix`.
+        @jax.jit
+        def scorer(Xs, X_raw):
             Y = jp(Xs) * y_scale + y_mean
             Y = jnp.where(log_mask > 0, jnp.exp(Y), Y)
             if residual:
@@ -203,11 +284,11 @@ class PerfPredictor:
                 rt = jnp.maximum(rt, 1e-9)
                 anchors = {
                     "runtime_ms": rt,
-                    "energy_j": rt / 1e3 * 130.0,
+                    "energy_j": rt / 1e3 * nominal_power,
                     "tflops": X_raw[:, i_fl] / (rt / 1e3) / 1e12,
                 }
                 cols = []
-                for t in self.target_names:
+                for t in target_names:
                     col = Y[:, t_idx[t]]
                     if t in anchors:
                         col = col * anchors[t]
@@ -215,17 +296,131 @@ class PerfPredictor:
                 Y = jnp.stack(cols, axis=1)
             return Y
 
+        def fn(X_raw):
+            Xs = scaler.transform(np.asarray(X_raw, dtype=np.float64))
+            with jp._precision():
+                return scorer(jnp.asarray(Xs, dtype=dt),
+                              jnp.asarray(X_raw, dtype=dt))
+
         return fn
 
-    # ----- persistence -----
-    def save(self, path: str) -> None:
-        with open(path, "wb") as f:
-            pickle.dump(self, f)
+    # ----- persistence: versioned .npz artifact -----
+    def to_state(self) -> dict[str, np.ndarray]:
+        """Everything `predict` needs, as flat numpy arrays."""
+        assert self._fitted, "predictor not fitted"
+        state = {
+            **pack_nested("scaler", self.scaler.to_state()),
+            **pack_nested("y_scaler", self.y_scaler.to_state()),
+            **pack_nested("model", self.model.to_state()),
+        }
+        return state
 
-    @staticmethod
-    def load(path: str) -> "PerfPredictor":
-        with open(path, "rb") as f:
-            obj = pickle.load(f)
-        if not isinstance(obj, PerfPredictor):
-            raise TypeError(f"{path} is not a PerfPredictor checkpoint")
+    def meta(self) -> dict:
+        """The artifact's JSON metadata record."""
+        return {
+            "format": ARTIFACT_FORMAT,
+            "schema_version": ARTIFACT_SCHEMA_VERSION,
+            "model": self.model_name,
+            "chip": self.chip_name,
+            "nominal_power_w": self.nominal_power_w,
+            "feature_names": list(self.feature_names),
+            "target_names": list(self.target_names),
+            "log_targets": bool(self.log_targets),
+            "residual": bool(self.residual),
+            "fingerprint": self.fingerprint(),
+        }
+
+    def fingerprint(self) -> str:
+        """Deterministic content hash of the fitted state + schema/flags.
+
+        Versions the artifact: downstream caches (tuner winners) key on it,
+        so retraining — or any array tampering — invalidates them.
+        """
+        if self._fingerprint is None:
+            h = hashlib.sha256()
+            h.update(json.dumps({
+                "model": self.model_name,
+                "chip": self.chip_name,
+                "nominal_power_w": self.nominal_power_w,
+                "feature_names": list(self.feature_names),
+                "target_names": list(self.target_names),
+                "log_targets": bool(self.log_targets),
+                "residual": bool(self.residual),
+            }, sort_keys=True).encode())
+            for key, arr in sorted(self.to_state().items()):
+                h.update(key.encode())
+                a = np.ascontiguousarray(arr)
+                h.update(str(a.dtype).encode())
+                h.update(str(a.shape).encode())
+                h.update(a.tobytes())
+            self._fingerprint = h.hexdigest()[:16]
+        return self._fingerprint
+
+    def save(self, path: str) -> None:
+        """Write the versioned artifact (.npz arrays + JSON metadata)."""
+        meta = self.meta()
+        with open(path, "wb") as f:
+            np.savez_compressed(f, **{_META_KEY: np.array(json.dumps(meta))},
+                                **self.to_state())
+
+    @classmethod
+    def load(cls, path: str) -> "PerfPredictor":
+        """Load + validate an artifact. Raises ArtifactError on a missing
+        or mismatched schema — never unpickles anything."""
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                if _META_KEY not in z.files:
+                    raise ArtifactError(
+                        f"{path} is not a perf-predictor artifact (no "
+                        "__meta__ record; legacy pickle checkpoints are "
+                        "not supported — retrain to produce one)")
+                meta = json.loads(str(z[_META_KEY][()]))
+                state = {k: z[k] for k in z.files if k != _META_KEY}
+        except (OSError, ValueError, KeyError) as e:
+            if isinstance(e, ArtifactError):
+                raise
+            raise ArtifactError(f"cannot read artifact {path}: {e}") from e
+        if meta.get("format") != ARTIFACT_FORMAT:
+            raise ArtifactError(
+                f"{path}: unexpected artifact format {meta.get('format')!r}")
+        if meta.get("schema_version") != ARTIFACT_SCHEMA_VERSION:
+            raise ArtifactError(
+                f"{path}: schema version {meta.get('schema_version')} != "
+                f"supported {ARTIFACT_SCHEMA_VERSION}")
+        if list(meta.get("feature_names", [])) != list(NUMERIC_FEATURES):
+            raise ArtifactError(
+                f"{path}: feature schema mismatch — artifact was trained on "
+                f"{meta.get('feature_names')}, this build expects "
+                f"{list(NUMERIC_FEATURES)}; retrain the predictor")
+        if list(meta.get("target_names", [])) != list(TARGETS):
+            raise ArtifactError(
+                f"{path}: target schema mismatch — retrain the predictor")
+        obj = cls.__new__(cls)
+        try:
+            obj.model_name = meta["model"]
+            obj.chip_name = meta.get("chip")
+            obj.nominal_power_w = float(
+                meta.get("nominal_power_w",
+                         _chip_nominal_power(obj.chip_name)))
+            obj.log_targets = bool(meta["log_targets"])
+            obj.residual = bool(meta["residual"])
+            obj.feature_names = list(meta["feature_names"])
+            obj.target_names = list(meta["target_names"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise ArtifactError(
+                f"{path}: incomplete artifact metadata: {e}") from e
+        try:
+            obj.scaler = StandardScaler.from_state(
+                unpack_nested(state, "scaler"))
+            obj.y_scaler = StandardScaler.from_state(
+                unpack_nested(state, "y_scaler"))
+            obj.model = estimator_from_state(unpack_nested(state, "model"))
+        except (KeyError, ValueError, IndexError) as e:
+            raise ArtifactError(f"{path}: corrupt estimator state: {e}") from e
+        obj._fitted = True
+        obj._reset_caches()
+        if meta.get("fingerprint") != obj.fingerprint():
+            raise ArtifactError(
+                f"{path}: fingerprint mismatch — artifact arrays or metadata "
+                "were modified after save")
         return obj

@@ -60,6 +60,39 @@ def _tuned_config(m: int, n: int, k: int, dtype: str,
         return DEFAULT_CONFIG
 
 
+def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
+                    objective: str = "runtime",
+                    chip: str | None = None) -> dict[tuple, BlockConfig]:
+    """Pre-tune a fleet of (m, n, k) GEMM shapes in one batched
+    `tune_many` pass and prime the trace-time config cache, so the first
+    jit trace of a model pays zero per-shape tuning latency.
+
+    `dtype` uses trace-time spelling (str(a.dtype), e.g. "bfloat16") —
+    the tuner canonicalizes. Trace-time lookups consult the *active*
+    chip only (`force_chip`), so pass `chip=None` to warm the chip the
+    traces will actually run against; warming an explicit other chip
+    fills that chip's tuner/winner caches but cannot serve traces until
+    `force_chip` selects it. Returns {shape: BlockConfig}; on any tuner
+    failure (e.g. no artifacts and no substrate) returns {} and traces
+    fall back to DEFAULT_CONFIG exactly like the untuned path.
+    """
+    shapes = [tuple(int(x) for x in s) for s in shapes]
+    try:
+        from repro.core.autotuner import get_tuner
+        from repro.core.chips import get_chip
+
+        chip_name = get_chip(chip).name if chip else _CHIP
+
+        best = get_tuner(chip=chip_name).tune_many(
+            shapes, dtype=dtype, objective=objective)
+    except Exception:
+        return {}
+    for m, n, k in shapes:
+        # the tuner cache is hot now, so this just fills the lru wrapper
+        _tuned_config(m, n, k, dtype, objective, chip_name)
+    return dict(zip(shapes, best))
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,

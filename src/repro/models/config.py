@@ -136,3 +136,30 @@ class ModelConfig:
         all_experts = 3 * self.d_model * self.d_ff_expert * self.n_experts * self.n_layers
         active_experts = 3 * self.d_model * self.d_ff_expert * self.top_k * self.n_layers
         return full - all_experts + active_experts
+
+
+def gemm_shapes(cfg: ModelConfig, n_tokens: int) -> list[tuple[int, int, int]]:
+    """The dominant (m, n, k) GEMMs one forward pass issues over `n_tokens`
+    rows — the shape fleet `kernels.ops.warm_gemm_cache` pre-tunes so the
+    first jit trace of a model never pays per-shape autotuning.
+
+    Shapes follow `ops.matmul`'s convention (m rows, n out-features, k
+    in-features). This is the projection/FFN/head skeleton shared by every
+    family; SSM scans and conv mixers don't go through `ops.matmul`.
+    """
+    t = int(n_tokens)
+    d, hd, kv = cfg.d_model, cfg.hd, cfg.kv_heads
+    shapes = {
+        (t, cfg.n_heads * hd, d),      # Q projection
+        (t, kv * hd, d),               # K/V projections
+        (t, d, cfg.n_heads * hd),      # output projection
+        (t, cfg.vocab, d),             # LM head
+    }
+    ff = cfg.d_ff_expert if cfg.n_experts else cfg.d_ff
+    if ff:
+        shapes.add((t, ff, d))         # up (and gate) projection
+        shapes.add((t, d, ff))         # down projection
+    if cfg.kind in ("mamba1", "hybrid"):
+        shapes.add((t, 2 * cfg.d_inner, d))
+        shapes.add((t, d, cfg.d_inner))
+    return sorted(shapes)

@@ -81,6 +81,27 @@ def make_eval_step(model, cfg: ModelConfig) -> Callable:
     return eval_step
 
 
+def warm_train_gemms(cfg: ModelConfig, batch_size: int, seq_len: int, *,
+                     objective: str = "runtime",
+                     chip: str | None = None) -> dict:
+    """Pre-tune the GEMM fleet a train step will trace.
+
+    Enumerates the forward shapes for batch_size * seq_len token rows and
+    batch-tunes them through one `ops.warm_gemm_cache` call so the first
+    `train_step` trace pays no per-shape autotuning. Only forward shapes
+    are warmed: backward-pass GEMMs are lowered by autodiff's
+    dot_general transpose rules and never consult the tuner. Returns
+    {shape: BlockConfig} for the fleet ({} if no tuner is available —
+    traces then use the default config).
+    """
+    from repro.kernels import ops
+    from repro.models.config import gemm_shapes
+
+    fleet = gemm_shapes(cfg, batch_size * seq_len)
+    return ops.warm_gemm_cache(fleet, dtype=cfg.activation_dtype,
+                               objective=objective, chip=chip)
+
+
 def make_serve_steps(model, cfg: ModelConfig):
     """(prefill_fn, decode_fn) suitable for jit/pjit."""
 

@@ -186,8 +186,8 @@ class TestCrossChipPipeline:
         art = str(tmp_path)
         p1 = build_default_predictor(art, n_train=300, chip="tpu_v5e")
         p2 = build_default_predictor(art, n_train=300, chip="rtx4070")
-        assert (tmp_path / "perf_predictor_tpu_v5e.pkl").exists()
-        assert (tmp_path / "perf_predictor_rtx4070.pkl").exists()
+        assert (tmp_path / "perf_predictor_tpu_v5e.npz").exists()
+        assert (tmp_path / "perf_predictor_rtx4070.npz").exists()
         assert p1.chip_name == "tpu_v5e"
         assert p2.chip_name == "rtx4070"
         # reload path hits the per-chip artifact, not a retrain

@@ -119,7 +119,7 @@ class TestPredictor:
 
     def test_save_load_roundtrip(self, fitted, tmp_path):
         pred, tr, te = fitted
-        p = str(tmp_path / "pred.pkl")
+        p = str(tmp_path / "pred.npz")
         pred.save(p)
         back = PerfPredictor.load(p)
         np.testing.assert_allclose(back.predict_matrix(te),
