@@ -62,6 +62,12 @@ def run() -> list[dict]:
 
     us_rank = timeit(lambda: tuner.rank(cfgs, features=X), n=10)
     us_rank_ref = timeit(rank_reference, n=10)
+
+    # fully in-graph ranking: feature grid + compiled predictor + top-k in
+    # one jit call, 4 shapes x 160-block static grid = 640 candidates
+    graph_shapes = SHAPES[:4]
+    tuner.rank_in_graph(graph_shapes)  # warm the compiled ranker
+    us_rank_graph = timeit(lambda: tuner.rank_in_graph(graph_shapes), n=10)
     # parity gate: batched scores within 1e-4 relative of the loop path
     # (exact order equality only holds on the bit-exact numpy scorer; the
     # jit path on accelerators is ~1e-9 and can flip near-ties)
@@ -86,6 +92,7 @@ def run() -> list[dict]:
         "rank512_us_batched": us_rank,
         "rank512_us_reference_loop": us_rank_ref,
         "rank512_speedup": us_rank_ref / us_rank,
+        "rank_in_graph_us_640cand": us_rank_graph,
     })
     return [
         row("autotune.runtime_objective", us_tune,
@@ -99,4 +106,6 @@ def run() -> list[dict]:
         row("autotune.rank512_reference", us_rank_ref,
             f"numpy per-tree loop; batched is "
             f"{us_rank_ref / us_rank:.1f}x faster"),
+        row("autotune.rank_in_graph", us_rank_graph,
+            "4 shapes x 160-block grid, one jit call (scoped x64)"),
     ]

@@ -7,13 +7,20 @@ Objectives mirror the paper's findings: "runtime" (3.2x speedup claim),
 "energy"/"power" (22% power-reduction claim), "edp" (energy-delay product).
 
 Prediction is the serving hot path, so `rank()` runs through a compiled
-scorer: forest predictors score via the cached x64 jit path (bit-identical
-branches vs numpy, one XLA call for the whole candidate grid), and the
-candidate list + feature table for each (shape, dtype) bucket is computed
-once and cached. `tune_many()` tunes a whole fleet of shapes with one scorer
-call and one batched verification sweep. The winner cache (in memory and the
-JSON sidecar) is keyed by the predictor's artifact fingerprint, so
-retraining invalidates stale winners automatically.
+scorer: every estimator family in the zoo (forest, GBDT, linreg/ridge,
+stacking) scores via the cached x64 jit path (bit-identical accumulations
+vs numpy, one XLA call for the whole candidate grid), and the candidate
+list + feature table for each (shape, dtype) bucket is computed once and
+cached. `rank_in_graph()` goes further: the candidate feature grid is built
+with jnp ops and argmin'd *inside* `jax.jit`, with the GEMM extents as
+traced values — zero Python in the ranking loop and no retrace per shape —
+which `tune_many()` uses by default on accelerator backends. `tune_many()`
+tunes a whole fleet of shapes with one scorer call and one batched
+verification sweep (optionally through a wall-clock `measure_fn` for
+on-device tuning). The winner cache (in memory and the JSON sidecar) is
+keyed by the predictor's artifact fingerprint and LRU-bounded, so
+retraining invalidates stale winners and long-lived processes can't grow
+the sidecar without limit.
 
 Everything is chip-aware: the tuner's candidate filter, feature builder, and
 verification all run against the chip backing its simulator, and predictor
@@ -36,9 +43,10 @@ from collections.abc import Sequence
 
 import numpy as np
 
-from repro.core.chips import TPU_V5E, ChipSpec, canon_dtype, get_chip
-from repro.core.features import features_matrix
-from repro.core.hwsim import GemmConfig, TpuGemmSimulator
+from repro.core.chips import DTYPE_BYTES, TPU_V5E, ChipSpec, canon_dtype, get_chip
+from repro.core.features import features_matrix, graph_candidate_features
+from repro.core.hwsim import VMEM_USABLE_FRACTION, GemmConfig, TpuGemmSimulator
+from repro.core.mlperf.compiled import precision_scope
 from repro.core.predictor import ArtifactError, PerfPredictor
 from repro.kernels.tiled_matmul import BlockConfig
 
@@ -72,6 +80,7 @@ class GemmAutotuner:
         chip: ChipSpec | str | None = None,
         candidate_cache_size: int = 512,
         scorer: str = "auto",
+        winner_cache_size: int = 4096,
     ):
         """`scorer` selects the batched prediction path for `rank`:
         "jit" (the cached x64 jax_predictor — one XLA call per candidate
@@ -79,6 +88,11 @@ class GemmAutotuner:
         "auto" (jit on accelerator backends; numpy on CPU, where per-call
         XLA dispatch overhead exceeds the descent itself at candidate-grid
         sizes). Both paths predict within 1e-9 relative of each other.
+
+        `winner_cache_size` bounds the tuned-winner cache (memory + JSON
+        sidecar) with LRU eviction, mirroring the candidate-table cache,
+        so a long-lived serving process sweeping many shapes can't grow
+        the sidecar unboundedly.
         """
         self.predictor = predictor
         self.sim = sim or TpuGemmSimulator(
@@ -90,7 +104,16 @@ class GemmAutotuner:
             raise ValueError(f"unknown scorer {scorer!r}")
         self.scorer = scorer
         self.artifact_fingerprint = predictor.fingerprint()
-        self._cache: dict[str, tuple[int, int, int]] = {}
+        self._winner_cache_size = winner_cache_size
+        self._cache: OrderedDict[str, tuple[int, int, int]] = OrderedDict()
+        # in-graph ranking state: static candidate block grid, jitted
+        # rankers keyed by (objective, x64, k), device-resident predictor
+        # params per precision, and a trace counter (tests assert no
+        # retrace across shape fleets).
+        self._graph_block_grid: np.ndarray | None = None
+        self._graph_fns: dict = {}
+        self._graph_params: dict = {}
+        self.graph_traces = 0
         # (m, n, k, dtype) -> (candidate configs, feature table) — one bucket
         # per GEMM-call signature on this tuner's (chip, dtype) grid.
         self._cand_cache: OrderedDict[
@@ -101,21 +124,41 @@ class GemmAutotuner:
         if cache_path and os.path.exists(cache_path):
             self._cache = self._load_cache_file(cache_path)
 
-    # ---------- winner cache (fingerprint-versioned) ----------
-    def _load_cache_file(self, path: str) -> dict[str, tuple[int, int, int]]:
+    # ---------- winner cache (fingerprint-versioned, LRU-bounded) ----------
+    def _load_cache_file(self, path: str
+                         ) -> "OrderedDict[str, tuple[int, int, int]]":
         """Read the winner sidecar; discard it when it predates the current
-        artifact (or the pre-versioned flat format)."""
+        artifact (or the pre-versioned flat format). Entries keep their
+        file order (oldest first) and are trimmed to the LRU bound."""
         try:
             with open(path) as f:
                 payload = json.load(f)
         except (OSError, ValueError):
-            return {}
+            return OrderedDict()
         if (not isinstance(payload, dict)
                 or payload.get("cache_version") != _CACHE_FILE_VERSION
                 or payload.get("artifact_fingerprint")
                 != self.artifact_fingerprint):
-            return {}
-        return {k: tuple(v) for k, v in payload.get("entries", {}).items()}
+            return OrderedDict()
+        entries = OrderedDict(
+            (k, tuple(v)) for k, v in payload.get("entries", {}).items())
+        while len(entries) > self._winner_cache_size:
+            entries.popitem(last=False)
+        return entries
+
+    def _cache_get(self, key: str) -> tuple[int, int, int] | None:
+        """LRU lookup (caller holds self._lock)."""
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key: str, val: tuple[int, int, int]) -> None:
+        """LRU insert + eviction (caller holds self._lock)."""
+        self._cache[key] = val
+        self._cache.move_to_end(key)
+        while len(self._cache) > self._winner_cache_size:
+            self._cache.popitem(last=False)
 
     def _write_cache_locked(self) -> None:
         """Persist the winner cache (caller holds self._lock)."""
@@ -224,7 +267,142 @@ class GemmAutotuner:
         X = (features if features is not None
              else features_matrix(cfgs, chip=self.chip))
         Y = self._predict_features(X)
-        return np.argsort(self._scores_from_matrix(Y, objective))
+        # stable: coarse tree predictors tie often, and in-graph top-k
+        # breaks ties by index — keep both paths' orders identical.
+        return np.argsort(self._scores_from_matrix(Y, objective),
+                          kind="stable")
+
+    # ---------- fully in-graph ranking ----------
+    def _graph_blocks(self) -> np.ndarray:
+        """The static (C, 3) candidate block grid. Shape-dependent pruning
+        (extent clipping, VMEM fit) happens in-graph via the validity
+        mask, so one compiled ranker serves every GEMM shape."""
+        if self._graph_block_grid is None:
+            self._graph_block_grid = np.array(
+                [(bm, bn, bk) for bm in _BM for bn in _BN for bk in _BK],
+                dtype=np.int64)
+        return self._graph_block_grid
+
+    def _graph_consts(self, dtype: str) -> dict[str, np.ndarray]:
+        """Chip/dtype scalars for `graph_candidate_features`, as 0-d
+        arrays: traced (not baked) so XLA can't constant-fold them into
+        reciprocal multiplies that drift vs the numpy feature builder."""
+        c = self.chip
+        return {
+            "peak": np.asarray(c.peak_flops[dtype]),
+            "hbm_bw": np.asarray(c.hbm_bw),
+            "vmem_usable": np.asarray(c.vmem_bytes * VMEM_USABLE_FRACTION),
+            "mxu": np.asarray(c.mxu_dim, dtype=np.int64),
+            "dtype_bytes": np.asarray(int(DTYPE_BYTES[dtype]),
+                                      dtype=np.int64),
+            "step_cost": np.asarray(1e-7),
+        }
+
+    def _graph_rank_fn(self, objective: str, x64: bool, top_k: int):
+        """Build (once per (objective, precision, k)) the jitted ranker:
+        feature grid -> scale -> compiled predictor -> decode -> objective
+        -> masked top-k, all in one XLA program."""
+        key = (objective, x64, top_k)
+        hit = self._graph_fns.get(key)
+        if hit is not None:
+            return hit
+        import jax
+        import jax.numpy as jnp
+
+        # validate the objective before baking it into a trace
+        self._objective_scores(
+            {t: np.zeros(1) for t in ("runtime_ms", "power_w", "energy_j")},
+            objective)
+        # lower + upload once per precision; extra (objective, k) variants
+        # only re-trace the thin ranker around the shared apply/params
+        cached = self._graph_params.get(x64)
+        if cached is None:
+            params, apply = self.predictor.jax_components(x64=x64)
+            with precision_scope(x64):
+                cached = (jax.tree.map(jnp.asarray, params), apply)
+            self._graph_params[x64] = cached
+        device_params, apply = cached
+        t_idx = {t: i for i, t in enumerate(self.predictor.target_names)}
+        tuner = self
+
+        def ranker(mnk, blocks, consts, mean, scale, pparams):
+            tuner.graph_traces += 1  # python side effect: counts traces
+            feats, valid = graph_candidate_features(mnk, blocks, consts,
+                                                    exact=x64)
+            S, C, F = feats.shape
+            flat = feats.reshape(S * C, F)
+            Y = apply(pparams, (flat - mean) / scale, flat)
+            if objective == "edp":
+                score = (Y[:, t_idx["energy_j"]]
+                         * Y[:, t_idx["runtime_ms"]])
+            else:
+                col = {"runtime": "runtime_ms", "energy": "energy_j",
+                       "power": "power_w"}[objective]
+                score = Y[:, t_idx[col]]
+            score = jnp.where(valid, score.reshape(S, C), jnp.inf)
+            neg, idx = jax.lax.top_k(-score, top_k)
+            return -neg, idx
+
+        entry = (jax.jit(ranker), device_params)
+        self._graph_fns[key] = entry
+        return entry
+
+    def rank_in_graph(self, shapes: Sequence[tuple[int, int, int]], *,
+                      dtype: str = "bf16", objective: str = "runtime",
+                      top_k: int | None = None, x64: bool = True
+                      ) -> tuple[list[list[GemmConfig]], np.ndarray]:
+        """Rank the candidate grid for a fleet of shapes *inside* jax.jit.
+
+        The candidate feature table is built with jnp ops over the static
+        block grid, scored through the compiled predictor, and the
+        objective argmin'd in-graph — the GEMM extents are traced array
+        values, so new shapes reuse the compiled ranker (no retrace; shape
+        fleets are padded to power-of-two buckets). ``x64=True`` (default)
+        runs the whole graph in scoped float64: features, scaling, and
+        descent are bit-identical to the trace-time `rank()` path, so both
+        return the same winners. ``x64=False`` is the approximate f32 mode
+        for embedding in fp32 programs.
+
+        Returns ``(top_cfgs, top_scores)``: per shape, up to `top_k`
+        candidate `GemmConfig`s in ascending predicted-objective order
+        (fewer when the valid set is smaller; empty when no candidate
+        fits) and the (S, top_k) score matrix (+inf past the valid set).
+        """
+        import jax.numpy as jnp
+
+        dtype = canon_dtype(dtype)
+        blocks = self._graph_blocks()
+        k = min(top_k if top_k is not None else self.verify_top_k,
+                len(blocks))
+        S = len(shapes)
+        if S == 0:
+            return [], np.zeros((0, k))
+        pad = _next_pow2(S)
+        mnk = np.zeros((pad, 3), dtype=np.int64)
+        mnk[:S] = [tuple(int(x) for x in s) for s in shapes]
+        mnk[S:] = mnk[S - 1]
+        jitted, device_params = self._graph_rank_fn(objective, x64, k)
+        consts = self._graph_consts(dtype)
+        with precision_scope(x64):
+            scores, idx = jitted(
+                jnp.asarray(mnk), jnp.asarray(blocks),
+                {name: jnp.asarray(v) for name, v in consts.items()},
+                jnp.asarray(self.predictor.scaler.mean_),
+                jnp.asarray(self.predictor.scaler.scale_),
+                device_params)
+        scores = np.asarray(scores)[:S]
+        idx = np.asarray(idx)[:S]
+        top_cfgs: list[list[GemmConfig]] = []
+        for i, (m, n, kk) in enumerate(shapes):
+            row = []
+            for j in range(k):
+                if np.isfinite(scores[i, j]):
+                    bm, bn, bk = blocks[idx[i, j]]
+                    row.append(GemmConfig(
+                        m=int(m), n=int(n), k=int(kk), block_m=int(bm),
+                        block_n=int(bn), block_k=int(bk), dtype=dtype))
+            top_cfgs.append(row)
+        return top_cfgs, scores
 
     # ---------- tuning ----------
     @staticmethod
@@ -232,22 +410,42 @@ class GemmAutotuner:
         return f"{m},{n},{k},{dtype},{objective}"
 
     def best_config(self, m: int, n: int, k: int, *, dtype: str = "bf16",
-                    objective: str = "runtime") -> BlockConfig:
-        return self.tune_many([(m, n, k)], dtype=dtype,
-                              objective=objective)[0]
+                    objective: str = "runtime", rank_mode: str = "auto",
+                    measure_fn=None) -> BlockConfig:
+        return self.tune_many([(m, n, k)], dtype=dtype, objective=objective,
+                              rank_mode=rank_mode, measure_fn=measure_fn)[0]
 
     def tune_many(self, shapes: Sequence[tuple[int, int, int]], *,
-                  dtype: str = "bf16", objective: str = "runtime"
+                  dtype: str = "bf16", objective: str = "runtime",
+                  rank_mode: str = "auto", measure_fn=None
                   ) -> list[BlockConfig]:
         """Tune a fleet of (m, n, k) shapes in one pass: all uncached
-        shapes share one batched scorer call and one batched top-k
-        verification sweep, then land in the winner cache together."""
+        shapes share one batched ranking pass and one batched top-k
+        verification sweep, then land in the winner cache together.
+
+        `rank_mode` selects the ranking path: "graph" scores candidates
+        fully in-graph (`rank_in_graph`: jnp feature grid + compiled
+        predictor + in-jit top-k — the accelerator serving path), "trace"
+        ranks in Python over the cached candidate tables, and "auto"
+        (default) picks "graph" exactly when the compiled scorer is the
+        rank backend (accelerator backends; see `scorer`). Both modes
+        produce the same winners — the graph path runs scoped-x64.
+
+        `measure_fn`, when given, replaces the simulator for the
+        verification sweep — the real-hardware hook. It is called once
+        with the flat list of top-k `GemmConfig`s (all shapes
+        concatenated) and must return a telemetry-like mapping with
+        "runtime_ms", "power_w", and "energy_j" arrays aligned with the
+        input order (e.g. wall-clock timings of the actual kernels).
+        """
         dtype = canon_dtype(dtype)
+        if rank_mode not in ("auto", "graph", "trace"):
+            raise ValueError(f"unknown rank_mode {rank_mode!r}")
         out: list[BlockConfig | None] = [None] * len(shapes)
         todo: list[int] = []
         with self._lock:
             for i, (m, n, k) in enumerate(shapes):
-                hit = self._cache.get(self._key(m, n, k, dtype, objective))
+                hit = self._cache_get(self._key(m, n, k, dtype, objective))
                 if hit is not None:
                     out[i] = BlockConfig(*hit)
                 else:
@@ -255,38 +453,58 @@ class GemmAutotuner:
         if not todo:
             return out  # type: ignore[return-value]
 
-        # candidate gather (per-shape buckets, cached)
-        groups: list[tuple[int, list[GemmConfig], np.ndarray]] = []
-        for i in todo:
-            m, n, k = shapes[i]
-            cfgs, X = self.candidate_table(m, n, k, dtype)
-            if not cfgs:
-                # cache the BASELINE fallback too — an empty candidate list
-                # is deterministic for the bucket, so never re-enumerate.
-                out[i] = BASELINE
-            else:
-                groups.append((i, cfgs, X))
+        use_graph = (rank_mode == "graph"
+                     or (rank_mode == "auto" and self._use_jit_scorer()))
+        # rank: per-uncached-shape top-k candidates, ascending predicted
+        # objective. An empty top list means no candidate fits (BASELINE
+        # fallback — cached too: the empty set is deterministic per
+        # bucket, so never re-enumerate).
+        groups: list[tuple[int, list[GemmConfig]]] = []
+        if use_graph:
+            tops_all, _ = self.rank_in_graph(
+                [shapes[i] for i in todo], dtype=dtype, objective=objective)
+            for i, top in zip(todo, tops_all):
+                if top:
+                    groups.append((i, top))
+                else:
+                    out[i] = BASELINE
+        else:
+            trace_groups: list[tuple[int, list[GemmConfig], np.ndarray]] = []
+            for i in todo:
+                m, n, k = shapes[i]
+                cfgs, X = self.candidate_table(m, n, k, dtype)
+                if not cfgs:
+                    out[i] = BASELINE
+                else:
+                    trace_groups.append((i, cfgs, X))
+            if trace_groups:
+                # one compiled scorer call over every candidate of every
+                # shape
+                scores = self._scores_from_matrix(
+                    self._predict_features(
+                        np.concatenate([X for _, _, X in trace_groups])),
+                    objective)
+                off = 0
+                for i, cfgs, _X in trace_groups:
+                    # stable sort: tie-break by index like in-graph top-k
+                    order = np.argsort(scores[off:off + len(cfgs)],
+                                       kind="stable")
+                    groups.append(
+                        (i, [cfgs[j] for j in order[:self.verify_top_k]]))
+                    off += len(cfgs)
 
         winners: dict[int, tuple[int, int, int]] = {}
         if groups:
-            # one compiled scorer call over every candidate of every shape
-            scores = self._scores_from_matrix(
-                self._predict_features(np.concatenate([X for _, _, X in groups])),
-                objective)
-            tops: list[list[GemmConfig]] = []
-            off = 0
-            for _, cfgs, _X in groups:
-                order = np.argsort(scores[off:off + len(cfgs)])
-                tops.append([cfgs[j] for j in order[:self.verify_top_k]])
-                off += len(cfgs)
             # one batched verification sweep across all shapes
-            flat = [c for top in tops for c in top]
-            tel = self.sim.measure_batch(flat)
+            flat = [c for _, top in groups for c in top]
+            tel = (measure_fn(flat) if measure_fn is not None
+                   else self.sim.measure_batch(flat))
             meas = self._objective_scores(
-                {t: tel[t] for t in ("runtime_ms", "power_w", "energy_j")},
+                {t: np.asarray(tel[t], dtype=np.float64)
+                 for t in ("runtime_ms", "power_w", "energy_j")},
                 objective)
             off = 0
-            for (i, _, _), top in zip(groups, tops):
+            for i, top in groups:
                 s = meas[off:off + len(top)]
                 w = top[int(np.argmin(s))]
                 winners[i] = (w.block_m, w.block_n, w.block_k)
@@ -300,7 +518,7 @@ class GemmAutotuner:
                 if best is None:  # BASELINE fallback
                     best = (BASELINE.block_m, BASELINE.block_n,
                             BASELINE.block_k)
-                self._cache[self._key(m, n, k, dtype, objective)] = best
+                self._cache_put(self._key(m, n, k, dtype, objective), best)
             self._write_cache_locked()
         return out  # type: ignore[return-value]
 

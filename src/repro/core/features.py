@@ -129,6 +129,108 @@ def features_matrix(cfgs: Sequence[GemmConfig],
     return np.stack([cols[k] for k in NUMERIC_FEATURES], axis=1)
 
 
+def graph_candidate_features(mnk, blocks, consts, *, exact: bool = True):
+    """In-graph (jnp) mirror of `config_features_batch` over an S×C grid.
+
+    For every (shape, block) pair of `mnk` (S, 3) × `blocks` (C, 3) —
+    candidate configs with the default trace-time knobs (layout "nn",
+    alpha=1, beta=0, stages=2) — build the (S, C, len(NUMERIC_FEATURES))
+    feature tensor plus the (S, C) validity mask (VMEM-fit and the
+    extent-clipping rule of `GemmAutotuner.candidate_configs`) entirely
+    with jax ops, so the autotuner can rank whole candidate grids inside
+    `jax.jit` with the shape extents as *traced* values (no retrace per
+    GEMM shape).
+
+    `consts` carries the chip/dtype scalars as 0-d arrays — peak FLOP/s
+    ("peak"), HBM bandwidth ("hbm_bw"), usable VMEM bytes ("vmem_usable"),
+    MXU edge ("mxu"), input dtype bytes ("dtype_bytes"), and the per-step
+    sequencer cost ("step_cost", 1e-7). They are traced arguments on
+    purpose: baked literals would let XLA fold divisions into reciprocal
+    multiplies (and adjacent constant multiplies into one rounded factor),
+    drifting the last ulp vs the numpy feature builder.
+
+    `exact=True` (use under a scoped ``enable_x64``) keeps integer terms
+    in int64 and mirrors the numpy float-op order, producing bit-identical
+    columns for every extent where the integer-valued terms stay below
+    2**53 (far beyond any realistic GEMM). `exact=False` computes in
+    f32/i32 with early float casts for the overflow-prone products — the
+    approximate mode for embedding in fp32 programs.
+    """
+    import jax.numpy as jnp
+
+    ft = jnp.float64 if exact else jnp.float32
+    m, n, k = (mnk[:, i][:, None] for i in range(3))       # (S, 1)
+    bm, bn, bk = (blocks[:, i][None, :] for i in range(3))  # (1, C)
+    in_b = consts["dtype_bytes"]
+    mxu = consts["mxu"]
+
+    grid_m = _ceil_div(m, bm)
+    grid_n = _ceil_div(n, bn)
+    grid_steps = grid_m * grid_n * _ceil_div(k, bk)
+    single = (bm * bk + bk * bn) * in_b + bm * bn * 4
+    max_buffers = jnp.floor_divide(
+        consts["vmem_usable"], jnp.maximum(single, 1)).astype(mnk.dtype)
+    passes = (_ceil_div(bm, mxu) * _ceil_div(bn, mxu) * _ceil_div(bk, mxu))
+    total_flops = 2.0 * m * n * k
+    if exact:
+        # integer-exact paths: numpy adds an int64 subtotal to a float
+        # product; both stay < 2**53 so one i64 sum + one convert lands on
+        # the identical f64 value with no FMA-contraction hazard.
+        bytes_accessed = (in_b * (m * k + k * n) + 4 * m * n).astype(ft)
+        refetch = (grid_n * m * k * in_b + grid_m * k * n * in_b
+                   + m * n * 4).astype(ft)
+        padded = (grid_steps * passes * (2 * mxu ** 3)).astype(ft)
+        mxn, mxk, nxk = m * n, m * k, n * k
+    else:
+        # i32 products overflow above ~46k extents: cast to float early.
+        mf, nf, kf = (x.astype(ft) for x in (m, n, k))
+        in_f = in_b.astype(ft)
+        bytes_accessed = in_f * (mf * kf + kf * nf) + 4.0 * mf * nf
+        refetch = (grid_n.astype(ft) * mf * kf * in_f
+                   + grid_m.astype(ft) * kf * nf * in_f + mf * nf * 4.0)
+        padded = (grid_steps.astype(ft) * passes
+                  * (2.0 * mxu.astype(ft) ** 3))
+        mxn, mxk, nxk = mf * nf, mf * kf, nf * kf
+
+    S, C = grid_steps.shape[0], grid_steps.shape[1]
+    full = lambda v: jnp.full((S, C), v, dtype=ft)
+    bcast = lambda a: jnp.broadcast_to(a.astype(ft), (S, C))
+    cols = {
+        "refetch_bytes": bcast(refetch),
+        "naive_compute_ms": bcast(total_flops / consts["peak"] * 1e3),
+        "naive_memory_ms": bcast(refetch / consts["hbm_bw"] * 1e3),
+        "padded_compute_ms": bcast(padded / consts["peak"] * 1e3),
+        # per-step cost as a traced const: two adjacent literal multiplies
+        # (1e-7 then 1e3) would be constant-folded into one rounded factor
+        "naive_overhead_ms": bcast(grid_steps * consts["step_cost"] * 1e3),
+        "m": bcast(m), "n": bcast(n), "k": bcast(k),
+        "block_m": bcast(bm), "block_n": bcast(bn), "block_k": bcast(bk),
+        "stages": full(2.0), "alpha": full(1.0), "beta": full(0.0),
+        "dtype_bytes": bcast(in_b),
+        "mxn": bcast(mxn), "mxk": bcast(mxk), "nxk": bcast(nxk),
+        "mxnxk": bcast(m.astype(ft) * n * k),
+        "total_flops": bcast(total_flops),
+        "bytes_accessed": bcast(bytes_accessed),
+        "arithmetic_intensity": bcast(
+            total_flops / jnp.maximum(bytes_accessed, 1.0)),
+        "grid_steps": bcast(grid_steps),
+        "vmem_working_set": bcast(single),
+        "max_inflight_buffers": bcast(max_buffers),
+        "alignment_waste": bcast(padded / jnp.maximum(total_flops, 1.0)),
+        "layout_a_t": full(0.0), "layout_b_t": full(0.0),
+    }
+    feats = jnp.stack([cols[name] for name in NUMERIC_FEATURES], axis=-1)
+
+    def roundup(x, q):
+        return jnp.maximum(q, _ceil_div(x, q) * q)
+
+    valid = ((bm <= 2 * roundup(m, 8))
+             & (bn <= 2 * roundup(n, 128))
+             & (bk <= 2 * roundup(k, 128))
+             & (max_buffers >= 1))
+    return feats, valid
+
+
 def table_from_configs(cfgs: Sequence[GemmConfig],
                        chip: ChipSpec | str = TPU_V5E
                        ) -> dict[str, np.ndarray]:

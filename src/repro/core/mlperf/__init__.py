@@ -16,7 +16,13 @@ from repro.core.mlperf.state import (
     estimator_from_state,
     pack_nested,
     register_estimator,
+    registered_estimator_names,
     unpack_nested,
+)
+from repro.core.mlperf.compiled import (
+    compilable_families,
+    lower_estimator,
+    supports_compile,
 )
 from repro.core.mlperf.tree import DecisionTreeRegressor, Binner
 from repro.core.mlperf.forest import RandomForestRegressor
@@ -42,7 +48,11 @@ __all__ = [
     "estimator_from_state",
     "pack_nested",
     "register_estimator",
+    "registered_estimator_names",
     "unpack_nested",
+    "compilable_families",
+    "lower_estimator",
+    "supports_compile",
     "DecisionTreeRegressor",
     "Binner",
     "RandomForestRegressor",

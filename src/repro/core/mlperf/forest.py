@@ -21,6 +21,7 @@ from repro.core.mlperf.state import (
 from repro.core.mlperf.tree import (
     Binner,
     DecisionTreeRegressor,
+    cast_flat_ensemble,
     concat_flat_trees,
     estimators_from_state,
     flatten_ensemble,
@@ -135,20 +136,8 @@ class RandomForestRegressor:
         `float64=True` keeps exact thresholds/values so x64 traversal takes
         bit-identical branches vs the numpy reference.
         """
-        flat = self._stacked_arrays()
-        if float64:
-            return {**flat, "max_depth": np.int32(self.max_depth)}
-        # thresholds sit exactly on training-data values (quantile bin
-        # edges); nudge up one fp32 ulp so values that compared `<=` in
-        # fp64 still go left after fp32 rounding in the jitted path.
-        thr32 = flat["threshold"].astype(np.float32)
         return {
-            "feature": flat["feature"],
-            "threshold": np.nextafter(thr32, np.float32(np.inf)),
-            "left": flat["left"],
-            "right": flat["right"],
-            "value": flat["value"].astype(np.float32),
-            "roots": flat["roots"],
+            **cast_flat_ensemble(self._stacked_arrays(), float64=float64),
             "max_depth": np.int32(self.max_depth),
         }
 

@@ -19,6 +19,7 @@ from repro.core.mlperf.state import (
 from repro.core.mlperf.tree import (
     Binner,
     DecisionTreeRegressor,
+    cast_flat_ensemble,
     concat_flat_trees,
     estimators_from_state,
     flatten_ensemble,
@@ -96,15 +97,18 @@ class GradientBoostedTreesRegressor:
         return self._stacked
 
     def predict(self, X) -> np.ndarray:
-        """base + lr * sum of per-round trees — one stacked descent across
-        every boosting round (same leaves as `predict_per_tree_loop`)."""
+        """base + sum of lr-scaled per-round trees — one stacked descent
+        across every boosting round (same leaves as
+        `predict_per_tree_loop`). Leaves are scaled *before* the
+        tree-axis sum so the compiled lowering (which bakes lr into the
+        exported leaf values) accumulates bit-identical addends."""
         assert self.base_ is not None, "not fitted"
         X = np.asarray(X, dtype=np.float64)
         acc = np.tile(self.base_, (len(X), 1))
         if self.estimators_:
             leaves = predict_stacked(self._stacked_arrays(), X,
                                      max_depth=self.max_depth)  # (T, N, K)
-            acc = acc + self.learning_rate * leaves.sum(axis=0)
+            acc = acc + (self.learning_rate * leaves).sum(axis=0)
         return acc[:, 0] if self.n_targets_ == 1 else acc
 
     def predict_per_tree_loop(self, X) -> np.ndarray:
@@ -116,6 +120,32 @@ class GradientBoostedTreesRegressor:
         for tree in self.estimators_:
             acc += self.learning_rate * tree.tree_.predict_raw(X)
         return acc[:, 0] if self.n_targets_ == 1 else acc
+
+    # ---- flat export for jit prediction (see compiled.py) ----
+    def to_flat_arrays(self, *, float64: bool = False
+                       ) -> dict[str, np.ndarray]:
+        """Global-id flat ensemble for the weighted-sum descent: the same
+        layout forests export, plus the boosting offset `base` (K,). The
+        compiled scorer computes ``base + learning_rate * sum(leaves)``
+        with the identical accumulation order as the numpy `predict`.
+        `float64=True` keeps exact thresholds/values (x64 bit-parity);
+        otherwise thresholds get the one-ulp fp32 nudge.
+        """
+        assert self.base_ is not None, "not fitted"
+        base = np.asarray(self.base_, dtype=np.float64)
+        flat = (cast_flat_ensemble(self._stacked_arrays(), float64=float64)
+                if self.estimators_ else
+                {"feature": np.zeros(0, np.int64),
+                 "threshold": np.zeros(0),
+                 "left": np.zeros(0, np.int64),
+                 "right": np.zeros(0, np.int64),
+                 "value": np.zeros((0, len(base))),
+                 "roots": np.zeros(0, np.int64)})
+        return {
+            **flat,
+            "base": base if float64 else base.astype(np.float32),
+            "max_depth": np.int32(self.max_depth),
+        }
 
     # ---- flat-array state contract (see mlperf.state) ----
     def to_state(self) -> dict[str, np.ndarray]:

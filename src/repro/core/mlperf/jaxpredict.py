@@ -1,92 +1,63 @@
-"""Jit-compiled random-forest inference.
+"""Jit-compiled estimator inference for the whole mlperf zoo.
 
-The sklearn original can only predict in Python. Here the fitted forest is
-exported to the global-id flat layout (`RandomForestRegressor.to_flat_arrays`:
-concatenated node arrays, children rebased to global ids, leaves
-self-looping) and traversed with a level-synchronous descent — one (T*N,)
-cursor vector advanced `max_depth` gather steps. That keeps the whole
-ensemble in a single XLA computation, so the performance predictor can run
-*inside* jitted code — e.g. ranking thousands of candidate GEMM block
-configs in one call during autotuning.
+The sklearn-style originals can only predict in Python. `JaxEstimator`
+wraps any fitted estimator that has a registered lowering (see
+`compiled.py`): the model is exported to flat arrays (tree ensembles in the
+global-id layout — concatenated node arrays, children rebased to global
+ids, leaves self-looping — linear models as coefficient matrices, stacking
+as the composition of its bases) and evaluated as ONE jitted computation.
+That keeps the entire model in a single XLA program, so the performance
+predictor can run *inside* jitted code — e.g. ranking thousands of
+candidate GEMM block configs in one call during autotuning, or fully
+in-graph via `GemmAutotuner.rank_in_graph`.
 
 Two precisions:
 
   * default (float32) — for embedding inside fp32 jitted programs.
-    Thresholds are nudged one ulp so most fp64-trained splits survive fp32
-    rounding, but near-threshold samples can still flip branches.
+    Tree thresholds are nudged one ulp so most fp64-trained splits survive
+    fp32 rounding, but near-threshold samples can still flip branches.
   * ``x64=True`` — arrays stay float64 (built and called under a scoped
-    ``jax.experimental.enable_x64``), so traversal takes bit-identical
-    branches vs the numpy reference. This is what the autotuner's serving
-    scorer uses: XLA speed with exact-parity predictions.
+    ``jax.experimental.enable_x64``), and every accumulation runs in the
+    numpy reference's order, so predictions are bit-identical to
+    `est.predict`. This is what the autotuner's serving scorer uses: XLA
+    speed with exact-parity predictions.
 """
 
 from __future__ import annotations
 
-import contextlib
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import enable_x64
+
+from repro.core.mlperf.compiled import lower_estimator, precision_scope
 
 
-@functools.partial(jax.jit, static_argnames=("max_depth", "n_trees"))
-def _forest_predict(feature, threshold, left, right, value, roots, X, *,
-                    max_depth: int, n_trees: int):
-    """feature/threshold/left/right: (total_nodes,); value: (total, K);
-    roots: (T,); X: (N, F). Returns (N, K) mean-over-trees prediction.
+class JaxEstimator:
+    """Wraps any lowered mlperf estimator for jitted inference."""
 
-    All (tree, sample) cursors descend together: each step is one gather
-    per node array over the (T*N,) cursor vector. Leaves self-loop, so a
-    fixed `max_depth` step count lands every cursor on its leaf.
-    """
-    N, F = X.shape
-    Xr = X.reshape(-1)
-    node = jnp.repeat(roots, N)                        # (T*N,)
-    row = jnp.tile(jnp.arange(N, dtype=roots.dtype) * F, n_trees)
-
-    def step(_, node):
-        x = Xr[row + feature[node]]
-        return jnp.where(x <= threshold[node], left[node], right[node])
-
-    node = jax.lax.fori_loop(0, max_depth, step, node)
-    leaves = value[node].reshape(n_trees, N, -1)       # (T, N, K)
-    return leaves.mean(axis=0)
-
-
-class JaxForestPredictor:
-    """Wraps a fitted mlperf RandomForestRegressor for jitted inference."""
-
-    def __init__(self, forest, *, x64: bool = False):
+    def __init__(self, est, *, x64: bool = False):
         self.x64 = x64
-        flat = forest.to_flat_arrays(float64=x64)
+        lowered = lower_estimator(est, float64=x64)
         with self._precision():
-            self.feature = jnp.asarray(flat["feature"])
-            self.threshold = jnp.asarray(flat["threshold"])
-            self.left = jnp.asarray(flat["left"])
-            self.right = jnp.asarray(flat["right"])
-            self.value = jnp.asarray(flat["value"])
-            self.roots = jnp.asarray(flat["roots"])
-        self.max_depth = int(flat["max_depth"])
-        self.n_trees = int(len(flat["roots"]))
-        self.n_targets = int(self.value.shape[-1])
+            self.params = jax.tree.map(jnp.asarray, lowered.params)
+        self._apply = jax.jit(lowered.apply)
+        self.n_targets = int(lowered.n_targets)
 
     def _precision(self):
         """Scoped x64 so float64 arrays survive asarray/tracing; the
         default fp32 path is a no-op context."""
-        return enable_x64() if self.x64 else contextlib.nullcontext()
+        return precision_scope(self.x64)
 
     def __call__(self, X) -> jax.Array:
         with self._precision():
             X = jnp.asarray(X, dtype=jnp.float64 if self.x64 else jnp.float32)
             if X.ndim == 1:
                 X = X[None]
-            return _forest_predict(
-                self.feature, self.threshold, self.left, self.right,
-                self.value, self.roots, X, max_depth=self.max_depth,
-                n_trees=self.n_trees,
-            )
+            return self._apply(self.params, X)
 
     def predict(self, X) -> np.ndarray:
         return np.asarray(self(X))
+
+
+class JaxForestPredictor(JaxEstimator):
+    """Back-compat name from when only forests could serve compiled."""

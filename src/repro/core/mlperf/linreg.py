@@ -11,6 +11,29 @@ import numpy as np
 from repro.core.mlperf.state import CLASS_KEY, class_tag, register_estimator
 
 
+def ordered_affine(X: np.ndarray, coef: np.ndarray,
+                   intercept) -> np.ndarray:
+    """X @ coef + intercept with a fixed feature-by-feature accumulation.
+
+    BLAS matmuls reassociate the inner sum (blocking, SIMD lanes), so two
+    builds — or numpy vs the jitted scorer — can disagree in the last ulp.
+    Summing per-feature products in declared order pins the result and
+    lets the compiled lowering (`compiled._ordered_affine`: the same
+    products materialized before an add-only fori_loop — jax needs the
+    materialization to dodge FMA contraction, numpy has no such hazard)
+    reproduce predictions bit-for-bit in float64. F is the feature count
+    (tens), so the Python loop over vectorized columns costs nothing at
+    serving batch sizes.
+    """
+    squeeze = coef.ndim == 1
+    coef2 = coef[:, None] if squeeze else coef
+    acc = np.zeros((len(X), coef2.shape[1]), dtype=np.float64)
+    for f in range(coef2.shape[0]):
+        acc = acc + X[:, f][:, None] * coef2[f][None, :]
+    out = acc[:, 0] if squeeze else acc
+    return out + intercept
+
+
 @register_estimator
 class LinearRegression:
     def __init__(self, fit_intercept: bool = True):
@@ -47,7 +70,7 @@ class LinearRegression:
 
     def predict(self, X) -> np.ndarray:
         X = np.asarray(X, dtype=np.float64)
-        return X @ self.coef_ + self.intercept_
+        return ordered_affine(X, self.coef_, self.intercept_)
 
     # ---- flat-array state contract (see mlperf.state) ----
     def to_state(self) -> dict[str, np.ndarray]:

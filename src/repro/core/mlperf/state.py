@@ -37,6 +37,13 @@ def register_estimator(cls: type) -> type:
     return cls
 
 
+def registered_estimator_names() -> list[str]:
+    """Class names reachable from `estimator_from_state` (the serialization
+    registry; `compiled.compilable_families` is the jit-lowering analogue —
+    the parity suite asserts every serializable family also compiles)."""
+    return sorted(_REGISTRY)
+
+
 def class_tag(cls: type) -> np.ndarray:
     return np.array(cls.__name__)
 

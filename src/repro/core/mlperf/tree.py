@@ -197,6 +197,29 @@ def predict_stacked(flat: dict[str, np.ndarray], X: np.ndarray,
     return flat["value"][node].reshape(T, N, -1)     # (T, N, K)
 
 
+def cast_flat_ensemble(flat: dict[str, np.ndarray], *, float64: bool
+                       ) -> dict[str, np.ndarray]:
+    """Precision-cast a `flatten_ensemble` layout for the compiled scorer.
+
+    `float64=True` keeps exact thresholds/values so x64 traversal takes
+    bit-identical branches vs the numpy reference. The fp32 path nudges
+    each threshold up one fp32 ulp: thresholds sit exactly on training-data
+    values (quantile bin edges), so values that compared `<=` in fp64 must
+    still go left after fp32 rounding in the jitted path.
+    """
+    if float64:
+        return dict(flat)
+    thr32 = flat["threshold"].astype(np.float32)
+    return {
+        "feature": flat["feature"],
+        "threshold": np.nextafter(thr32, np.float32(np.inf)),
+        "left": flat["left"],
+        "right": flat["right"],
+        "value": flat["value"].astype(np.float32),
+        "roots": flat["roots"],
+    }
+
+
 def concat_flat_trees(trees: list[_FlatTree]) -> dict[str, np.ndarray]:
     """Ragged ensemble -> concatenated arrays + `tree_offsets` (T+1,)."""
     offsets = np.cumsum([0] + [t.n_nodes for t in trees]).astype(np.int64)

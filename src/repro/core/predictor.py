@@ -37,7 +37,11 @@ from repro.core.mlperf import (
     regression_report,
     unpack_nested,
 )
-from repro.core.mlperf.jaxpredict import JaxForestPredictor
+from repro.core.mlperf.compiled import (
+    lower_estimator,
+    precision_scope,
+    supports_compile,
+)
 
 ARTIFACT_FORMAT = "repro.perf_predictor"
 ARTIFACT_SCHEMA_VERSION = 1
@@ -227,64 +231,56 @@ class PerfPredictor:
         pred = self.predict_matrix(table)
         return regression_report(truth, pred, self.target_names)
 
-    # ----- jitted path (forest models only) -----
+    # ----- jitted path (every lowered estimator family) -----
     def supports_jax(self) -> bool:
-        return isinstance(self.model, RandomForestRegressor)
+        """True when the fitted model has a compiled lowering — all of the
+        Table VI zoo (forest, GBDT, linreg/ridge, stacking) does."""
+        return supports_compile(self.model)
 
-    def jax_predictor(self, *, x64: bool = False):
-        """Compiled scorer over *raw* features: fn(X_raw (N, F)) -> (N, T)
-        decoded predictions via pure jax. Built once per precision and
-        cached on the instance (refit invalidates). ``x64=True`` traverses
-        in float64 — branch decisions bit-identical to the numpy path —
-        which is what the autotuner's serving scorer uses.
+    def jax_components(self, *, x64: bool = False):
+        """(params, apply) for embedding the decoded predictor in a larger
+        jitted program (e.g. the autotuner's in-graph ranker).
+
+        `apply(params, Xs, X_raw) -> (N, T)` is a pure jax function:
+        estimator forward (via the compiled lowering) + target decode
+        (y-descaling, log-target exp, residual anchor multiply). `params`
+        is a flat pytree of numpy arrays; keeping the decode constants as
+        *traced* arguments (not baked literals) stops XLA from
+        constant-folding divisions into reciprocal multiplies, which would
+        drift the last ulp vs the numpy path.
         """
-        if not self.supports_jax():
-            raise TypeError("jitted prediction requires a forest model")
-        fn = self._jax_cache.get(x64)
-        if fn is None:
-            fn = self._build_jax_predictor(x64)
-            self._jax_cache[x64] = fn
-        return fn
-
-    def _build_jax_predictor(self, x64: bool):
-        import jax
-        import jax.numpy as jnp
-
-        jp = JaxForestPredictor(self.model, x64=x64)
-        with jp._precision():
-            dt = jnp.float64 if x64 else jnp.float32
-            y_mean = jnp.asarray(self.y_scaler.mean_, dtype=dt)
-            y_scale = jnp.asarray(self.y_scaler.scale_, dtype=dt)
-            log_mask = jnp.asarray(
+        lowered = lower_estimator(self.model, float64=x64)
+        ft = np.float64 if x64 else np.float32
+        params = {
+            "est": lowered.params,
+            "y_mean": np.asarray(self.y_scaler.mean_, dtype=ft),
+            "y_scale": np.asarray(self.y_scaler.scale_, dtype=ft),
+            "log_mask": np.asarray(
                 [1.0 if t in self.LOG_TARGETS else 0.0
-                 for t in self.target_names], dtype=dt)
+                 for t in self.target_names], dtype=ft),
+            "nominal_power": np.asarray(self.nominal_power_w, dtype=ft),
+        }
         i_nc = self.feature_names.index("naive_compute_ms")
         i_nm = self.feature_names.index("naive_memory_ms")
         i_no = self.feature_names.index("naive_overhead_ms")
         i_fl = self.feature_names.index("total_flops")
         residual = self.residual
-        nominal_power = self.nominal_power_w
         t_idx = {t: i for i, t in enumerate(self.target_names)}
         target_names = list(self.target_names)
-        scaler = self.scaler
+        est_apply = lowered.apply
 
-        # traverse -> decode as ONE jitted computation (single dispatch).
-        # Feature standardization stays OUTSIDE the jit on purpose: with
-        # mean/scale as captured constants XLA rewrites the division into a
-        # reciprocal multiply, and the last-ulp difference flips
-        # near-threshold tree branches vs the numpy path. Scaling in numpy
-        # keeps the traversal input bit-identical to `predict_matrix`.
-        @jax.jit
-        def scorer(Xs, X_raw):
-            Y = jp(Xs) * y_scale + y_mean
-            Y = jnp.where(log_mask > 0, jnp.exp(Y), Y)
+        def apply(p, Xs, X_raw):
+            import jax.numpy as jnp
+
+            Y = est_apply(p["est"], Xs) * p["y_scale"] + p["y_mean"]
+            Y = jnp.where(p["log_mask"] > 0, jnp.exp(Y), Y)
             if residual:
                 rt = (jnp.maximum(X_raw[:, i_nc], X_raw[:, i_nm])
                       + X_raw[:, i_no])
                 rt = jnp.maximum(rt, 1e-9)
                 anchors = {
                     "runtime_ms": rt,
-                    "energy_j": rt / 1e3 * nominal_power,
+                    "energy_j": rt / 1e3 * p["nominal_power"],
                     "tflops": X_raw[:, i_fl] / (rt / 1e3) / 1e12,
                 }
                 cols = []
@@ -296,10 +292,48 @@ class PerfPredictor:
                 Y = jnp.stack(cols, axis=1)
             return Y
 
+        return params, apply
+
+    def jax_predictor(self, *, x64: bool = False):
+        """Compiled scorer over *raw* features: fn(X_raw (N, F)) -> (N, T)
+        decoded predictions via pure jax, for any estimator family in the
+        zoo. Built once per precision and cached on the instance (refit
+        invalidates). ``x64=True`` runs the estimator in float64 — tree
+        branch decisions and accumulations bit-identical to the numpy
+        path — which is what the autotuner's serving scorer uses.
+        """
+        if not self.supports_jax():
+            raise TypeError(
+                f"no compiled lowering for model "
+                f"{type(self.model).__name__!r}")
+        fn = self._jax_cache.get(x64)
+        if fn is None:
+            fn = self._build_jax_predictor(x64)
+            self._jax_cache[x64] = fn
+        return fn
+
+    def _build_jax_predictor(self, x64: bool):
+        import jax
+        import jax.numpy as jnp
+
+        params, apply = self.jax_components(x64=x64)
+        dt = jnp.float64 if x64 else jnp.float32
+        with precision_scope(x64):
+            device_params = jax.tree.map(jnp.asarray, params)
+        scorer = jax.jit(apply)
+        scaler = self.scaler
+
+        # estimator forward -> decode as ONE jitted computation (single
+        # dispatch). Feature standardization stays OUTSIDE the jit on
+        # purpose: with mean/scale as captured constants XLA rewrites the
+        # division into a reciprocal multiply, and the last-ulp difference
+        # flips near-threshold tree branches vs the numpy path. Scaling in
+        # numpy keeps the traversal input bit-identical to
+        # `predict_matrix`.
         def fn(X_raw):
             Xs = scaler.transform(np.asarray(X_raw, dtype=np.float64))
-            with jp._precision():
-                return scorer(jnp.asarray(Xs, dtype=dt),
+            with precision_scope(x64):
+                return scorer(device_params, jnp.asarray(Xs, dtype=dt),
                               jnp.asarray(X_raw, dtype=dt))
 
         return fn

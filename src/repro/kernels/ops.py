@@ -62,7 +62,8 @@ def _tuned_config(m: int, n: int, k: int, dtype: str,
 
 def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
                     objective: str = "runtime",
-                    chip: str | None = None) -> dict[tuple, BlockConfig]:
+                    chip: str | None = None,
+                    rank_mode: str = "auto") -> dict[tuple, BlockConfig]:
     """Pre-tune a fleet of (m, n, k) GEMM shapes in one batched
     `tune_many` pass and prime the trace-time config cache, so the first
     jit trace of a model pays zero per-shape tuning latency.
@@ -72,11 +73,18 @@ def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
     chip only (`force_chip`), so pass `chip=None` to warm the chip the
     traces will actually run against; warming an explicit other chip
     fills that chip's tuner/winner caches but cannot serve traces until
-    `force_chip` selects it. Returns {shape: BlockConfig}; on any tuner
+    `force_chip` selects it. `rank_mode` selects the candidate-ranking
+    path ("auto" ranks fully in-graph on accelerator backends — see
+    `GemmAutotuner.rank_in_graph` — and at trace time on CPU; "graph" /
+    "trace" force one). Returns {shape: BlockConfig}; on any tuner
     failure (e.g. no artifacts and no substrate) returns {} and traces
     fall back to DEFAULT_CONFIG exactly like the untuned path.
     """
     shapes = [tuple(int(x) for x in s) for s in shapes]
+    # validate eagerly: a rank_mode typo must stay loud, not vanish into
+    # the tuner-failure fallback below
+    if rank_mode not in ("auto", "graph", "trace"):
+        raise ValueError(f"unknown rank_mode {rank_mode!r}")
     try:
         from repro.core.autotuner import get_tuner
         from repro.core.chips import get_chip
@@ -84,7 +92,7 @@ def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
         chip_name = get_chip(chip).name if chip else _CHIP
 
         best = get_tuner(chip=chip_name).tune_many(
-            shapes, dtype=dtype, objective=objective)
+            shapes, dtype=dtype, objective=objective, rank_mode=rank_mode)
     except Exception:
         return {}
     for m, n, k in shapes:

@@ -208,10 +208,13 @@ def attention_apply(
     if kv_cache is not None and xa is None:
         # decode: write new k/v at cache_index, attend over the prefix
         ck, cv = kv_cache["k"], kv_cache["v"]
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, cache_index, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, cache_index, 0, 0))
+        # literal 0s must match cache_index's dtype: under JAX_ENABLE_X64
+        # they'd otherwise promote to int64 next to an int32 index, which
+        # dynamic_update_slice rejects
+        zero = jnp.zeros((), dtype=cache_index.dtype)
+        idx = (zero, cache_index, zero, zero)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), idx)
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), idx)
         new_cache = {"k": ck, "v": cv}
         # quantized caches (e.g. fp8) convert at read; on TPU the convert
         # fuses into the attention loads

@@ -337,12 +337,15 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
 
     new_cache = None
     if kv_cache is not None:
+        # literal 0s must match cache_index's dtype (int64 vs int32 mix
+        # under JAX_ENABLE_X64 is rejected by dynamic_update_slice)
+        zero = jnp.zeros((), dtype=cache_index.dtype)
         cc = jax.lax.dynamic_update_slice(
             kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype),
-            (0, cache_index, 0))
+            (zero, cache_index, zero))
         cp = jax.lax.dynamic_update_slice(
             kv_cache["k_pe"], k_pe[:, :, 0].astype(kv_cache["k_pe"].dtype),
-            (0, cache_index, 0))
+            (zero, cache_index, zero))
         new_cache = {"c_kv": cc, "k_pe": cp}
         c_kv_full, k_pe_full = cc, cp[:, :, None]
         kv_len = cache_index + S

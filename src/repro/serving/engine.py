@@ -40,6 +40,7 @@ class ServingEngine:
                  max_batch: int = 8, max_len: int = 512,
                  greedy: bool = True, seed: int = 0,
                  pretune: bool = False, tune_objective: str = "runtime",
+                 tune_rank_mode: str = "auto",
                  chip: str | None = None):
         """`pretune=True` batch-tunes the engine's GEMM fleet up front:
         every projection/FFN/head shape the prefill (max_batch * max_len
@@ -47,7 +48,9 @@ class ServingEngine:
         one `ops.warm_gemm_cache` pass (predictor-ranked, substrate-
         verified, cached per chip + artifact version), so the first
         request pays no per-shape autotuning. `tune_objective` picks the
-        paper's serving objective ("runtime", "energy", "power", "edp").
+        paper's serving objective ("runtime", "energy", "power", "edp");
+        `tune_rank_mode` picks the candidate-ranking path ("auto" ranks
+        fully in-graph on accelerator backends, at trace time on CPU).
         """
         self.model = model
         self.params = params
@@ -66,7 +69,8 @@ class ServingEngine:
                            | set(gemm_shapes(cfg, max_batch)))
             self.pretuned = ops.warm_gemm_cache(
                 fleet, dtype=cfg.activation_dtype,
-                objective=tune_objective, chip=chip)
+                objective=tune_objective, chip=chip,
+                rank_mode=tune_rank_mode)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg, max_len=max_len))
         self._decode = jax.jit(

@@ -1,0 +1,111 @@
+"""Regenerate the golden artifacts under tests/fixtures/.
+
+Run from the repo root after an *intentional* schema or descent change:
+
+    PYTHONPATH=src python tests/gen_golden_fixtures.py
+
+Each model family gets a tiny committed predictor artifact
+(``golden_<family>.npz``, the full versioned `.npz` + JSON-metadata format)
+plus one shared ``golden_expected.npz`` holding the frozen input feature
+block and the expected numpy / compiled-scorer predictions. Ridge has no
+`PerfPredictor` model name, so it ships as a raw estimator state
+(``golden_ridge_state.npz``) with its own expected outputs.
+
+`tests/test_golden_artifacts.py` loads these and fails CI whenever a
+schema bump, descent rewrite, or serialization change silently shifts
+predictions — regeneration (and a review of the diff) is the explicit
+acknowledgement that outputs were supposed to move.
+"""
+
+import os
+
+import numpy as np
+
+FIXTURE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "fixtures")
+GOLDEN_CHIP = "tpu_v5e"
+GOLDEN_FAMILIES = ("rf", "gbdt", "linreg", "stacking")
+N_ROWS = 48
+
+
+def _tiny_model(name: str):
+    """Drastically shrunken Table VI models so the committed artifacts
+    stay a few KB each."""
+    from repro.core.mlperf import (
+        GradientBoostedTreesRegressor,
+        LinearRegression,
+        RandomForestRegressor,
+        StackingRegressor,
+    )
+
+    if name == "rf":
+        return RandomForestRegressor(n_estimators=4, max_depth=4,
+                                     random_state=0)
+    if name == "gbdt":
+        return GradientBoostedTreesRegressor(n_estimators=8, max_depth=3,
+                                             random_state=0)
+    if name == "linreg":
+        return LinearRegression()
+    if name == "stacking":
+        return StackingRegressor(
+            [RandomForestRegressor(n_estimators=3, max_depth=3,
+                                   random_state=0),
+             LinearRegression()],
+            n_folds=2,
+        )
+    raise ValueError(name)
+
+
+def generate() -> dict[str, str]:
+    from repro.core.predictor import PerfPredictor
+    from repro.core.profiler import collect_dataset
+
+    os.makedirs(FIXTURE_DIR, exist_ok=True)
+    table = collect_dataset(n_configs=200, seed=0, chip=GOLDEN_CHIP)
+    written = {}
+    expected: dict[str, np.ndarray] = {}
+    X_block = None
+    for family in GOLDEN_FAMILIES:
+        pred = PerfPredictor(model=family, residual=True, fast=True,
+                             chip=GOLDEN_CHIP, random_state=0)
+        pred.model = _tiny_model(family)
+        pred.fit(table)
+        if X_block is None:
+            X_block = np.stack(
+                [table[k][:N_ROWS] for k in pred.feature_names], axis=1)
+            expected["X"] = X_block
+            expected["feature_names"] = np.array(pred.feature_names)
+            expected["target_names"] = np.array(pred.target_names)
+        path = os.path.join(FIXTURE_DIR, f"golden_{family}.npz")
+        pred.save(path)
+        written[family] = path
+        sub = {k: table[k][:N_ROWS] for k in table}
+        expected[f"{family}/predict"] = pred.predict_matrix(sub)
+        expected[f"{family}/jit_x64"] = np.asarray(
+            pred.jax_predictor(x64=True)(X_block))
+
+    # ridge: raw estimator state (no PerfPredictor model name)
+    from repro.core.mlperf import Ridge
+
+    rng = np.random.default_rng(0)
+    Xr = rng.normal(size=(300, 8))
+    yr = np.stack([Xr @ rng.normal(size=8) + 1.0,
+                   Xr @ rng.normal(size=8) - 2.0], axis=1)
+    ridge = Ridge(alpha=0.5).fit(Xr, yr)
+    ridge_path = os.path.join(FIXTURE_DIR, "golden_ridge_state.npz")
+    with open(ridge_path, "wb") as f:
+        np.savez_compressed(f, **ridge.to_state())
+    written["ridge"] = ridge_path
+    expected["ridge/X"] = Xr[:N_ROWS]
+    expected["ridge/predict"] = ridge.predict(Xr[:N_ROWS])
+
+    exp_path = os.path.join(FIXTURE_DIR, "golden_expected.npz")
+    with open(exp_path, "wb") as f:
+        np.savez_compressed(f, **expected)
+    written["expected"] = exp_path
+    return written
+
+
+if __name__ == "__main__":
+    for name, path in generate().items():
+        print(f"{name}: {path} ({os.path.getsize(path)} bytes)")

@@ -1,0 +1,274 @@
+"""Property-based parity suite for the compiled estimator layer.
+
+Random *fitted states* — valid tree topologies, grid-quantized thresholds
+and leaf values, random affine coefficients — are generated directly (not
+via `fit`), rebuilt through the `to_state`/`from_state` contract, and
+served through the compiled scorer (`JaxEstimator`), asserting for every
+estimator family:
+
+  * x64 jit-scorer output is **bit-exact** vs the numpy `predict`;
+  * f32 jit-scorer output is within 1e-6 relative (inputs/thresholds sit
+    on grids far coarser than one fp32 ulp, so branch decisions agree and
+    only accumulation rounding remains);
+  * `to_state` -> `from_state` -> `to_state` is idempotent, and the
+    compiled scorer built from a round-tripped state matches the original
+    bit-for-bit.
+
+Runs under hypothesis when available (drawing generator seeds/shape knobs);
+falls back to a deterministic seed sweep otherwise, so the suite guards CI
+with or without the optional dependency. The ×-both-chips predictor-level
+parity (real fitted models over real chip feature tables) lives at the
+bottom.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.mlperf import (
+    compilable_families,
+    estimator_from_state,
+    registered_estimator_names,
+)
+from repro.core.mlperf.forest import RandomForestRegressor
+from repro.core.mlperf.gbdt import GradientBoostedTreesRegressor
+from repro.core.mlperf.jaxpredict import JaxEstimator
+from repro.core.mlperf.linreg import LinearRegression, Ridge
+from repro.core.mlperf.stacking import StackingRegressor
+from repro.core.mlperf.tree import DecisionTreeRegressor, _FlatTree
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+FAMILIES = ("tree", "forest", "gbdt", "linreg", "ridge", "stacking")
+
+# Grids coarse enough that one fp32 ulp can't flip a comparison: feature
+# values and split thresholds are multiples of 1/16 in [1/16, 4] (spacing
+# 6.25e-2 >> 2**-22 ≈ 2.4e-7, the fp32 ulp at 4.0). Every generated
+# quantity (features, thresholds, leaves, coefficients, intercepts) is
+# *positive*, so fp32 accumulations never cancel and the elementwise
+# relative-error bound stays a few ulps.
+_GRID = 1.0 / 16.0
+
+
+def _grid_vals(rng, size, lo=_GRID, hi=4.0):
+    return rng.integers(round(lo / _GRID), round(hi / _GRID) + 1,
+                        size=size).astype(np.float64) * _GRID
+
+
+def _random_flat_tree(rng, depth: int, n_features: int,
+                      n_targets: int) -> _FlatTree:
+    """A random perfect binary tree of `depth` in the flat layout."""
+    n_internal = 2 ** depth - 1
+    n_nodes = 2 ** (depth + 1) - 1
+    feature = np.full(n_nodes, -1, dtype=np.int32)
+    feature[:n_internal] = rng.integers(0, n_features, size=n_internal)
+    threshold = np.zeros(n_nodes)
+    threshold[:n_internal] = _grid_vals(rng, n_internal)
+    left = np.full(n_nodes, -1, dtype=np.int32)
+    right = np.full(n_nodes, -1, dtype=np.int32)
+    left[:n_internal] = 2 * np.arange(n_internal, dtype=np.int32) + 1
+    right[:n_internal] = 2 * np.arange(n_internal, dtype=np.int32) + 2
+    value = _grid_vals(rng, (n_nodes, n_targets), lo=0.5, hi=2.0)
+    return _FlatTree(
+        feature=feature, threshold=threshold,
+        threshold_bin=np.zeros(n_nodes, dtype=np.int32),
+        left=left, right=right, value=value,
+        n_samples=np.ones(n_nodes, dtype=np.int32),
+        gain=np.zeros(n_nodes),
+    )
+
+
+def _random_estimator(family: str, rng, *, n_features: int, n_targets: int,
+                      depth: int, n_trees: int):
+    """A predict-ready random fitted estimator of `family`."""
+    trees = [_random_flat_tree(rng, depth, n_features, n_targets)
+             for _ in range(n_trees)]
+
+    def wrap(tree):
+        est = DecisionTreeRegressor(max_depth=depth)
+        est.tree_ = tree
+        est.n_features_ = n_features
+        est.n_targets_ = n_targets
+        return est
+
+    if family == "tree":
+        return wrap(trees[0])
+    if family == "forest":
+        f = RandomForestRegressor(n_estimators=n_trees, max_depth=depth)
+        f.estimators_ = [wrap(t) for t in trees]
+        f.n_targets_ = n_targets
+        return f
+    if family == "gbdt":
+        g = GradientBoostedTreesRegressor(n_estimators=n_trees,
+                                          learning_rate=0.125,
+                                          max_depth=depth)
+        g.estimators_ = [wrap(t) for t in trees]
+        g.base_ = _grid_vals(rng, n_targets, lo=0.5, hi=2.0)
+        g.n_targets_ = n_targets
+        return g
+    if family in ("linreg", "ridge"):
+        est = LinearRegression() if family == "linreg" else Ridge(alpha=0.5)
+        est.coef_ = _grid_vals(rng, (n_features, n_targets), hi=2.0)
+        est.intercept_ = _grid_vals(rng, n_targets, hi=2.0)
+        return est
+    if family == "stacking":
+        s = StackingRegressor([], n_folds=2,
+                              passthrough=bool(rng.integers(0, 2)))
+        s.fitted_bases_ = [
+            _random_estimator("forest", rng, n_features=n_features,
+                              n_targets=n_targets, depth=depth,
+                              n_trees=max(2, n_trees // 2)),
+            _random_estimator("linreg", rng, n_features=n_features,
+                              n_targets=n_targets, depth=depth, n_trees=1),
+        ]
+        s.n_targets_ = n_targets
+        z_dim = (len(s.fitted_bases_) * n_targets
+                 + (n_features if s.passthrough else 0))
+        s.meta_ = []
+        for _ in range(n_targets):
+            m = Ridge(alpha=1e-3)
+            m.coef_ = _grid_vals(rng, z_dim, hi=1.0)
+            m.intercept_ = float(_grid_vals(rng, (), hi=1.0)[()])
+            s.meta_.append(m)
+        return s
+    raise ValueError(family)
+
+
+def _check_family(family: str, seed: int, n_features: int, n_targets: int,
+                  depth: int, n_trees: int, n_rows: int) -> None:
+    rng = np.random.default_rng(seed)
+    est = _random_estimator(family, rng, n_features=n_features,
+                            n_targets=n_targets, depth=depth,
+                            n_trees=n_trees)
+    X = _grid_vals(rng, (n_rows, n_features))
+    want = np.asarray(est.predict(X)).reshape(n_rows, -1)
+
+    # x64: bit-exact vs numpy predict
+    got64 = JaxEstimator(est, x64=True).predict(X)
+    np.testing.assert_array_equal(got64, want, err_msg=f"{family} x64")
+
+    # f32: <= 1e-6 relative (grid-spaced data: no branch flips, positive
+    # leaves: no cancellation)
+    got32 = JaxEstimator(est).predict(X)
+    rel = np.abs(got32 - want) / np.maximum(np.abs(want), 1e-12)
+    assert rel.max() <= 1e-6, (family, rel.max())
+
+    # state round-trip idempotence + compiled round-trip parity
+    state = est.to_state()
+    back = estimator_from_state(state)
+    state2 = back.to_state()
+    assert sorted(state) == sorted(state2), family
+    for key in state:
+        np.testing.assert_array_equal(state[key], state2[key],
+                                      err_msg=f"{family}/{key}")
+    np.testing.assert_array_equal(
+        JaxEstimator(back, x64=True).predict(X), got64,
+        err_msg=f"{family} compiled round-trip")
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        family=st.sampled_from(FAMILIES),
+        seed=st.integers(0, 2**32 - 1),
+        n_features=st.integers(2, 8),
+        n_targets=st.integers(1, 4),
+        depth=st.integers(1, 4),
+        n_trees=st.integers(1, 8),
+        n_rows=st.integers(1, 64),
+    )
+    def test_compiled_parity_hypothesis(family, seed, n_features, n_targets,
+                                        depth, n_trees, n_rows):
+        _check_family(family, seed, n_features, n_targets, depth, n_trees,
+                      n_rows)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("seed", range(4))
+def test_compiled_parity_seeded(family, seed):
+    """Deterministic fallback sweep (always runs, hypothesis or not)."""
+    rng = np.random.default_rng(seed * 1000 + 7)
+    _check_family(
+        family, seed=seed * 31 + 1,
+        n_features=int(rng.integers(2, 9)),
+        n_targets=int(rng.integers(1, 5)),
+        depth=int(rng.integers(1, 5)),
+        n_trees=int(rng.integers(1, 9)),
+        n_rows=int(rng.integers(1, 65)),
+    )
+
+
+def test_every_serializable_family_compiles():
+    """The lowering registry covers the whole serialization registry:
+    anything an artifact can hold can serve through the jit scorer."""
+    assert set(registered_estimator_names()) <= set(compilable_families())
+
+
+# ---------------------------------------------------------------------------
+# predictor-level parity: real fitted models, both chips
+# ---------------------------------------------------------------------------
+
+CHIPS = ("tpu_v5e", "rtx4070")
+MODELS = ("rf", "gbdt", "linreg", "stacking")
+
+
+@pytest.fixture(scope="module")
+def chip_tables():
+    from repro.core.profiler import collect_dataset
+
+    return {chip: collect_dataset(n_configs=300, seed=0, chip=chip)
+            for chip in CHIPS}
+
+
+def _small_zoo_model(name: str):
+    """Shrunken Table VI models: parity doesn't need paper-scale
+    ensembles, and 8 fits (4 families x 2 chips) must stay fast."""
+    if name == "rf":
+        return RandomForestRegressor(n_estimators=6, max_depth=5,
+                                     random_state=0)
+    if name == "gbdt":
+        return GradientBoostedTreesRegressor(n_estimators=15, max_depth=3,
+                                             random_state=0)
+    if name == "linreg":
+        return LinearRegression()
+    if name == "stacking":
+        return StackingRegressor(
+            [RandomForestRegressor(n_estimators=4, max_depth=4,
+                                   random_state=0),
+             LinearRegression()],
+            n_folds=2,
+        )
+    raise ValueError(name)
+
+
+@pytest.mark.parametrize("chip", CHIPS)
+@pytest.mark.parametrize("model", MODELS)
+def test_x64_scorer_parity_all_models_both_chips(model, chip, chip_tables):
+    """Every Table VI family serves through the compiled scorer on every
+    chip's feature table; x64 estimator forward is bit-exact, so only the
+    decode's exp/anchor ulps remain."""
+    from repro.core.predictor import PerfPredictor
+
+    table = chip_tables[chip]
+    pred = PerfPredictor(model=model, residual=True, fast=True, chip=chip)
+    pred.model = _small_zoo_model(model)
+    pred.fit(table)
+    assert pred.supports_jax()
+    X = np.stack([table[k] for k in pred.feature_names], axis=1)[:128]
+    sub = {k: v[:128] for k, v in table.items()}
+    got = np.asarray(pred.jax_predictor(x64=True)(X))
+    want = pred.predict_matrix(sub)
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+    # the raw estimator forward (scaled features -> scaled targets) is
+    # bit-exact — decode is the only remaining rounding source
+    Xs = pred.scaler.transform(X)
+    est_want = np.asarray(pred.model.predict(Xs)).reshape(len(Xs), -1)
+    est_got = JaxEstimator(pred.model, x64=True).predict(Xs)
+    np.testing.assert_array_equal(est_got, est_want)

@@ -261,7 +261,9 @@ class TestTunerServing:
 
         def rank_reference():
             t = table_from_configs(cfgs, chip=tuner.chip)
-            return np.argsort(rf_pred.predict_matrix_reference(t)[:, 0])
+            # stable, matching rank()'s deterministic tie-break
+            return np.argsort(rf_pred.predict_matrix_reference(t)[:, 0],
+                              kind="stable")
 
         rank_new(), rank_reference()
         t_new, t_ref = [], []
@@ -274,6 +276,93 @@ class TestTunerServing:
             t_ref.append(time.perf_counter() - t0)
         assert min(t_ref) > 4.0 * min(t_new), (min(t_ref), min(t_new))
         np.testing.assert_array_equal(rank_new(), rank_reference())
+
+
+class TestWinnerCacheLRU:
+    def _shape(self, i):
+        return (128 * (i + 1), 256, 512)
+
+    def test_memory_eviction_lru_order(self, rf_pred, tmp_path):
+        tuner = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                              winner_cache_size=4)
+        for i in range(6):
+            tuner.best_config(*self._shape(i))
+        assert len(tuner._cache) == 4
+        # oldest two evicted, newest four retained
+        keys = list(tuner._cache)
+        assert keys == [tuner._key(*self._shape(i), "bf16", "runtime")
+                        for i in range(2, 6)]
+
+    def test_hit_refreshes_recency(self, rf_pred):
+        tuner = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                              winner_cache_size=2)
+        a, b, c = self._shape(0), self._shape(1), self._shape(2)
+        tuner.best_config(*a)
+        tuner.best_config(*b)
+        tuner.best_config(*a)      # refresh a: b becomes the LRU entry
+        tuner.best_config(*c)      # evicts b, not a
+        keys = set(tuner._cache)
+        assert tuner._key(*a, "bf16", "runtime") in keys
+        assert tuner._key(*b, "bf16", "runtime") not in keys
+
+    def test_sidecar_bounded_and_reloadable(self, rf_pred, tmp_path):
+        cache = str(tmp_path / "cache.json")
+        tuner = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                              cache_path=cache, winner_cache_size=3)
+        for i in range(6):
+            tuner.best_config(*self._shape(i))
+        with open(cache) as f:
+            payload = json.load(f)
+        assert len(payload["entries"]) == 3  # sidecar stays bounded
+
+        # reload: entries survive in order, and a tighter bound trims the
+        # oldest on load
+        t2 = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                           cache_path=cache, winner_cache_size=3)
+        assert list(t2._cache) == list(payload["entries"])
+        t3 = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                           cache_path=cache, winner_cache_size=2)
+        assert list(t3._cache) == list(payload["entries"])[-2:]
+
+
+class TestMeasureFn:
+    """`tune_many(measure_fn=...)`: the wall-clock verification hook."""
+
+    def test_fake_clock_overrides_simulator(self, rf_pred):
+        tuner = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3))
+        tuner.sim.measure_batch = lambda *a, **k: pytest.fail(
+            "simulator must not measure when measure_fn is given")
+        calls = []
+
+        def fake_clock(cfgs):
+            calls.append(list(cfgs))
+            n = len(cfgs)
+            # the "clock" says the LAST verified candidate is fastest
+            rt = np.arange(n, 0, -1, dtype=np.float64)
+            return {"runtime_ms": rt, "power_w": np.full(n, 100.0),
+                    "energy_j": rt * 0.1}
+
+        best = tuner.best_config(1024, 1024, 1024, measure_fn=fake_clock)
+        assert len(calls) == 1
+        assert 1 <= len(calls[0]) <= tuner.verify_top_k
+        w = calls[0][-1]
+        assert best.as_tuple() == (w.block_m, w.block_n, w.block_k)
+
+    def test_fake_clock_winner_cached(self, rf_pred):
+        tuner = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3))
+        seen = []
+
+        def fake_clock(cfgs):
+            seen.append(len(cfgs))
+            n = len(cfgs)
+            rt = np.arange(1, n + 1, dtype=np.float64)
+            return {"runtime_ms": rt, "power_w": np.full(n, 90.0),
+                    "energy_j": rt}
+
+        a = tuner.best_config(512, 512, 512, measure_fn=fake_clock)
+        b = tuner.best_config(512, 512, 512, measure_fn=fake_clock)
+        assert a == b
+        assert len(seen) == 1, "cached winner must not re-measure"
 
 
 class TestWarmGemmCache:

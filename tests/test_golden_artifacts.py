@@ -1,0 +1,80 @@
+"""Golden-artifact regression tests.
+
+Tiny fitted predictor artifacts (one per model family) are committed under
+``tests/fixtures/`` together with their expected predictions on a frozen
+input block. Loading them exercises the full validated artifact path
+(schema version, feature/target schema, fingerprint), and the prediction
+assertions pin the numeric outputs of both the numpy stacked-descent path
+and the compiled x64 scorer:
+
+  * a feature-schema change makes `PerfPredictor.load` raise
+    `ArtifactError` -> the suite fails until fixtures are regenerated
+    (the intended "schema bumps are explicit" CI gate);
+  * a descent/serialization change that silently shifts predictions
+    fails the output comparison.
+
+Regenerate deliberately with ``python tests/gen_golden_fixtures.py``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from gen_golden_fixtures import FIXTURE_DIR, GOLDEN_CHIP, GOLDEN_FAMILIES
+
+
+@pytest.fixture(scope="module")
+def expected():
+    path = os.path.join(FIXTURE_DIR, "golden_expected.npz")
+    with np.load(path, allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+@pytest.mark.parametrize("family", GOLDEN_FAMILIES)
+def test_golden_artifact_load_and_predict(family, expected):
+    from repro.core.predictor import PerfPredictor
+
+    pred = PerfPredictor.load(
+        os.path.join(FIXTURE_DIR, f"golden_{family}.npz"))
+    assert pred.model_name == family
+    assert pred.chip_name == GOLDEN_CHIP
+    assert list(expected["feature_names"]) == list(pred.feature_names)
+    assert list(expected["target_names"]) == list(pred.target_names)
+
+    X = expected["X"]
+    table = {name: X[:, i] for i, name in enumerate(pred.feature_names)}
+    got = pred.predict_matrix(table)
+    np.testing.assert_allclose(got, expected[f"{family}/predict"],
+                               rtol=1e-9)
+
+    got_jit = np.asarray(pred.jax_predictor(x64=True)(X))
+    np.testing.assert_allclose(got_jit, expected[f"{family}/jit_x64"],
+                               rtol=1e-9)
+
+
+def test_golden_ridge_state_roundtrip(expected):
+    from repro.core.mlperf import Ridge, estimator_from_state
+
+    path = os.path.join(FIXTURE_DIR, "golden_ridge_state.npz")
+    with np.load(path, allow_pickle=False) as z:
+        state = {k: z[k] for k in z.files}
+    ridge = estimator_from_state(state)
+    assert isinstance(ridge, Ridge)
+    got = ridge.predict(expected["ridge/X"])
+    np.testing.assert_array_equal(got, expected["ridge/predict"])
+
+    from repro.core.mlperf.jaxpredict import JaxEstimator
+
+    got_jit = JaxEstimator(ridge, x64=True).predict(expected["ridge/X"])
+    np.testing.assert_allclose(
+        got_jit, np.asarray(expected["ridge/predict"]).reshape(len(got), -1),
+        rtol=1e-12)
+
+
+def test_golden_artifacts_stay_tiny():
+    """Committed fixtures must stay lightweight (they live in git)."""
+    total = 0
+    for name in os.listdir(FIXTURE_DIR):
+        total += os.path.getsize(os.path.join(FIXTURE_DIR, name))
+    assert total < 512 * 1024, f"fixtures grew to {total} bytes"

@@ -104,7 +104,10 @@ class TestBytes:
             c, ys = jax.lax.scan(body, cache, jnp.arange(n))
             return ys.sum()
 
-        text = _compile_text(f, jnp.zeros((n, S)), jnp.ones((n, S)))
+        # explicit f32: the 4-byte budget below must hold with or without
+        # JAX_ENABLE_X64 (the x64 CI job runs this suite too)
+        text = _compile_text(f, jnp.zeros((n, S), jnp.float32),
+                             jnp.ones((n, S), jnp.float32))
         cost = analyze_hlo(text, 1)
         full_per_iter = n * S * 4 * n
         assert cost.hbm_bytes < 0.5 * full_per_iter

@@ -1,0 +1,144 @@
+"""Tests for the fully in-graph candidate ranker (`rank_in_graph`).
+
+The acceptance contract: the in-graph path (jnp feature grid + compiled
+predictor + in-jit top-k, scoped x64) returns the same winners as the
+trace-time `rank()` over a >=512-candidate sweep, reuses one compiled
+ranker across GEMM shapes (no retrace — extents are traced values), and
+plugs into `tune_many`/`warm_gemm_cache` as a drop-in ranking mode.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.autotuner import GemmAutotuner
+from repro.core.hwsim import TpuGemmSimulator
+from repro.core.predictor import PerfPredictor
+from repro.core.profiler import collect_dataset
+
+# four shapes x the 160-block static grid = 640 candidates >= the
+# 512-candidate acceptance sweep
+SHAPES = [(1024, 1024, 1024), (16, 2048, 2048), (4096, 4096, 1024),
+          (333, 777, 1234)]
+
+
+@pytest.fixture(scope="module")
+def rf_pred():
+    table = collect_dataset(n_configs=600, seed=0, chip="tpu_v5e")
+    return PerfPredictor(model="rf", residual=True, fast=True,
+                         chip="tpu_v5e").fit(table)
+
+
+@pytest.fixture()
+def tuner(rf_pred):
+    return GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3), scorer="jit")
+
+
+class TestWinnerParity:
+    def test_same_winners_as_trace_rank_512(self, tuner):
+        """>=512 candidates across the fleet: per shape, the in-graph
+        top-k must equal the trace-time rank()'s head, and the in-graph
+        scores must match the trace-time jit scores bit-for-bit."""
+        tops, scores = tuner.rank_in_graph(SHAPES, top_k=3)
+        total = 0
+        for (m, n, k), top, sc in zip(SHAPES, tops, scores):
+            cfgs, X = tuner.candidate_table(m, n, k, "bf16")
+            total += len(cfgs)
+            order = tuner.rank(cfgs, features=X)
+            for j, cfg in enumerate(top):
+                want = cfgs[order[j]]
+                assert (cfg.block_m, cfg.block_n, cfg.block_k) == (
+                    want.block_m, want.block_n, want.block_k), (m, n, k, j)
+            trace_scores = tuner._scores_from_matrix(
+                tuner._predict_features(X), "runtime")
+            np.testing.assert_array_equal(
+                sc[:len(top)], trace_scores[order[:len(top)]])
+        assert total >= 512
+
+    @pytest.mark.parametrize("objective", ["energy", "edp", "power"])
+    def test_objectives_match_trace_rank(self, tuner, objective):
+        tops, _ = tuner.rank_in_graph(SHAPES[:2], objective=objective,
+                                      top_k=1)
+        for (m, n, k), top in zip(SHAPES[:2], tops):
+            cfgs, X = tuner.candidate_table(m, n, k, "bf16")
+            best = cfgs[tuner.rank(cfgs, objective=objective,
+                                   features=X)[0]]
+            assert (top[0].block_m, top[0].block_n, top[0].block_k) == (
+                best.block_m, best.block_n, best.block_k)
+
+    def test_f32_mode_ranks_plausibly(self, tuner):
+        """The approximate f32 mode must produce valid configs whose
+        predicted runtime is near-optimal under the exact scorer (branch
+        flips may reorder near-ties, not wreck the ranking)."""
+        tops, _ = tuner.rank_in_graph(SHAPES[:1], top_k=1, x64=False)
+        (m, n, k), top = SHAPES[0], tops[0]
+        assert top, "f32 mode returned no candidates"
+        cfgs, X = tuner.candidate_table(m, n, k, "bf16")
+        scores = tuner._scores_from_matrix(tuner._predict_features(X),
+                                           "runtime")
+        key = (top[0].block_m, top[0].block_n, top[0].block_k)
+        got = next(scores[i] for i, c in enumerate(cfgs)
+                   if (c.block_m, c.block_n, c.block_k) == key)
+        assert got <= np.quantile(scores, 0.05) * 1.5
+
+
+class TestNoRetrace:
+    def test_one_trace_serves_many_shape_fleets(self, tuner):
+        assert tuner.graph_traces == 0
+        tuner.rank_in_graph(SHAPES, top_k=3)
+        assert tuner.graph_traces == 1
+        # different extents, same fleet-size bucket: no retrace
+        tuner.rank_in_graph([(2048, 2048, 2048), (64, 512, 4096),
+                             (100, 200, 300), (512, 512, 512)], top_k=3)
+        assert tuner.graph_traces == 1
+        # fleet sizes share power-of-two buckets (padded), so a smaller
+        # fleet in the same bucket also reuses the trace
+        tuner.rank_in_graph([(96, 96, 96)], top_k=3)
+        traces_small = tuner.graph_traces
+        tuner.rank_in_graph([(97, 97, 97)], top_k=3)
+        assert tuner.graph_traces == traces_small
+
+    def test_validity_masked_in_graph(self, tuner):
+        """Every returned candidate is simulator-valid and clip-legal —
+        the static grid is pruned by the in-graph mask, not in Python."""
+        tops, _ = tuner.rank_in_graph([(8, 128, 128)], top_k=8)
+        assert tops[0], "no valid candidates for a tiny GEMM?"
+        valid = tuner.sim.analyze_batch(tops[0])["valid"]
+        assert valid.all()
+        legal = {(c.block_m, c.block_n, c.block_k)
+                 for c in tuner.candidate_configs(8, 128, 128)}
+        for cfg in tops[0]:
+            assert (cfg.block_m, cfg.block_n, cfg.block_k) in legal
+
+
+class TestTuneManyModes:
+    def test_graph_and_trace_tune_same_winners(self, rf_pred):
+        t_graph = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                                scorer="jit")
+        t_trace = GemmAutotuner(rf_pred, TpuGemmSimulator(seed=3),
+                                scorer="jit")
+        wg = t_graph.tune_many(SHAPES, rank_mode="graph")
+        wt = t_trace.tune_many(SHAPES, rank_mode="trace")
+        assert wg == wt
+
+    def test_bad_rank_mode_rejected(self, tuner):
+        with pytest.raises(ValueError, match="rank_mode"):
+            tuner.tune_many(SHAPES[:1], rank_mode="psychic")
+
+    def test_warm_gemm_cache_graph_mode(self, rf_pred):
+        from repro.core import autotuner as at
+        from repro.kernels import ops
+
+        at.set_tuner(GemmAutotuner(rf_pred, TpuGemmSimulator(seed=0),
+                                   scorer="jit"))
+        ops._tuned_config.cache_clear()
+        try:
+            shapes = [(256, 512, 1024), (128, 256, 512)]
+            out = ops.warm_gemm_cache(shapes, dtype="bfloat16",
+                                      rank_mode="graph")
+            assert set(out) == set(shapes)
+            for (m, n, k), cfg in out.items():
+                assert ops._tuned_config(
+                    m, n, k, "bfloat16", "runtime", "tpu_v5e") == cfg
+        finally:
+            at.set_tuner(None)
+            ops._tuned_config.cache_clear()
