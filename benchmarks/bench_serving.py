@@ -1,0 +1,150 @@
+"""Serving-engine benchmark: continuous batching vs the legacy wave loop.
+
+Serves one mixed-budget workload (max_new_tokens drawn from {4, 8, 64} —
+the Racing-to-Idle shape) through both engine modes over the same tiny
+dense LM and reports tokens/s, attributed J/token, slot occupancy, and the
+executed decode-step*slot totals. The JSON artifact
+(artifacts/bench/serving.json) is the regression surface CI uploads.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+# allow `python benchmarks/bench_serving.py` from anywhere (run.py inserts
+# the repo root itself)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import dump, row  # noqa: E402
+
+BUDGETS = (4, 8, 64)
+
+
+def _build(smoke: bool):
+    import jax
+
+    from repro.models.config import ModelConfig
+    from repro.models.registry import get_model
+
+    cfg = ModelConfig(
+        name="serve-bench", kind="dense",
+        n_layers=2 if smoke else 4,
+        d_model=64 if smoke else 256,
+        n_heads=4 if smoke else 8, n_kv_heads=2 if smoke else 4,
+        d_ff=128 if smoke else 1024, vocab=256 if smoke else 4096,
+        param_dtype="float32", activation_dtype="float32", remat=False,
+    )
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    return cfg, model, params
+
+
+PROMPT_LEN = 16   # fixed so one wave prefill trace serves every wave and
+                  # the warm-up pass can cover both modes' jit shapes
+
+
+def _workload(cfg, n_requests: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        (uid, rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
+         int(rng.choice(BUDGETS)))
+        for uid in range(n_requests)
+    ]
+
+
+def _serve(cfg, model, params, reqs, mode: str, max_batch: int):
+    from repro.serving.engine import Request, ServingEngine
+
+    eng = ServingEngine(model, params, cfg, max_batch=max_batch,
+                        max_len=128, mode=mode)
+    # warm-up pass covering every jit shape the timed region traces —
+    # a full wave of PROMPT_LEN prompts (wave prefill (B, S) + decode
+    # (B,)) which in continuous mode also compiles the slot-prefill
+    # bucket and the insert fn — then reset counters so the tok/s
+    # comparison charges compilation to neither mode
+    for i in range(max_batch):
+        eng.submit(Request(uid=10_000 + i,
+                           prompt=np.arange(1, PROMPT_LEN + 1,
+                                            dtype=np.int32),
+                           max_new_tokens=2))
+    eng.run_until_empty()
+    eng.reset_stats()
+    for uid, prompt, mnt in reqs:
+        eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                           max_new_tokens=mnt))
+    t0 = time.perf_counter()
+    results = eng.run_until_empty()
+    wall = time.perf_counter() - t0
+    rep = eng.report()
+    rep["mode"] = mode
+    rep["wall_s"] = wall
+    rep["tokens_per_s"] = (rep["generated_tokens"] / wall if wall > 0
+                           else 0.0)
+    return results, rep
+
+
+def run(smoke: bool | None = None) -> list[dict]:
+    if smoke is None:
+        # mirror benchmarks.common.default_n_configs: unset env = full scale
+        smoke = int(os.environ.get("BENCH_N_CONFIGS", "16128")) <= 256
+    cfg, model, params = _build(smoke)
+    n_requests = 12 if smoke else 24
+    max_batch = 4
+    reqs = _workload(cfg, n_requests)
+
+    res_c, rep_c = _serve(cfg, model, params, reqs, "continuous", max_batch)
+    res_w, rep_w = _serve(cfg, model, params, reqs, "wave", max_batch)
+
+    # identical greedy streams is a hard invariant, not a benchmark stat
+    by_uid = {r.uid: r for r in res_w}
+    for r in res_c:
+        if not np.array_equal(r.tokens, by_uid[r.uid].tokens):
+            raise AssertionError(f"stream mismatch for request {r.uid}")
+
+    payload = {
+        "n_requests": n_requests,
+        "max_batch": max_batch,
+        "budgets": list(BUDGETS),
+        "continuous": rep_c,
+        "wave": rep_w,
+        "slot_step_reduction": (
+            1.0 - rep_c["slot_steps"] / rep_w["slot_steps"]
+            if rep_w["slot_steps"] else 0.0),
+        "j_per_token_reduction": (
+            1.0 - rep_c["j_per_token"] / rep_w["j_per_token"]
+            if rep_w["j_per_token"] else 0.0),
+    }
+    dump("serving", payload)
+
+    def derived(rep):
+        return (f"tok/s={rep['tokens_per_s']:.0f} "
+                f"J/tok={rep['j_per_token']:.2e} "
+                f"occ={rep['slot_occupancy']:.2f} "
+                f"slot_steps={rep['slot_steps']:.0f}")
+
+    return [
+        row("serve_continuous", rep_c["wall_s"] * 1e6, derived(rep_c)),
+        row("serve_wave", rep_w["wall_s"] * 1e6, derived(rep_w)),
+        row("serve_slot_step_reduction", 0.0,
+            f"{100 * payload['slot_step_reduction']:.1f}% fewer "
+            f"decode-step*slots; J/tok "
+            f"-{100 * payload['j_per_token_reduction']:.1f}%"),
+    ]
+
+
+def main(argv: list[str]) -> int:
+    smoke = "--smoke" in argv
+    rows = run(smoke=smoke or None)
+    for r in rows:
+        print(f"{r['name']}: {r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

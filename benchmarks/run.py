@@ -29,6 +29,7 @@ BENCHES = [
     "bench_model_comparison",# Table VI
     "bench_autotune",        # §Abstract 3.2x / 22% claims
     "bench_kernel",          # Pallas kernel micro
+    "bench_serving",         # continuous batching vs wave (tok/s, J/token)
 ]
 
 
@@ -41,6 +42,9 @@ def main(argv: list[str] | None = None) -> None:
                         help="measurement substrate (tpu_v5e, rtx4070)")
     parser.add_argument("--only", type=str, default=None,
                         help="comma-separated bench module subset")
+    parser.add_argument("--exclude", type=str, default=None,
+                        help="comma-separated bench modules to skip "
+                             "(applied to the default list or --only)")
     args = parser.parse_args(argv)
     # bench modules pick these up through benchmarks.common defaults
     if args.n_configs is not None:
@@ -51,6 +55,9 @@ def main(argv: list[str] | None = None) -> None:
     import importlib
 
     benches = args.only.split(",") if args.only else BENCHES
+    if args.exclude:
+        skip = set(args.exclude.split(","))
+        benches = [b for b in benches if b not in skip]
     print("name,us_per_call,derived")
     failed = []
     for name in benches:

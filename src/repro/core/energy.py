@@ -10,8 +10,9 @@ autotuner's `objective="energy"` / `"edp"` modes.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping
 
-from repro.core.chips import TPU_V5E, ChipSpec
+from repro.core.chips import DTYPE_BYTES, TPU_V5E, ChipSpec, canon_dtype, get_chip
 from repro.core.roofline import RooflineReport
 
 
@@ -44,6 +45,94 @@ def step_power_w(report: RooflineReport, chip: ChipSpec = TPU_V5E,
          + chip.hbm_power_w * duty_hbm
          + ici_power_w * duty_ici)
     return min(p, chip.tdp_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepEnergyEstimate:
+    """Predicted cost of one serving step (a prefill or one lockstep decode
+    iteration of the whole batch) — the unit the engine's per-request
+    energy attribution multiplies by resident steps."""
+
+    name: str
+    step_s: float                  # predicted wall time of the step
+    power_w: float                 # duty-cycle chip power during the step
+    energy_j: float                # power_w * step_s
+    compute_s: float               # summed GEMM compute terms
+    memory_s: float                # summed GEMM memory terms
+    n_gemms: float                 # weighted GEMM count
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
+                      chip: ChipSpec | str = TPU_V5E,
+                      dtype: str = "bf16",
+                      configs: Mapping[tuple[int, int, int], object]
+                      | None = None,
+                      name: str = "step") -> StepEnergyEstimate:
+    """Energy of one step built from its GEMM fleet (the paper's per-kernel
+    model lifted to a serving step).
+
+    `shape_counts` maps (m, n, k) -> issue count per step (see
+    `models.config.gemm_shape_counts`); `configs` optionally maps shapes to
+    tuned `BlockConfig`s (e.g. `ServingEngine.pretuned`) so the estimate
+    reflects the block sizes the step actually runs. Runtime per GEMM comes
+    from the measurement substrate's analytical model; power comes from
+    `step_power_w` over the fleet's aggregate duty cycles (no collective
+    term — single-chip serving).
+    """
+    from repro.core.hwsim import GemmConfig, TpuGemmSimulator
+    from repro.kernels.tiled_matmul import DEFAULT_CONFIG
+
+    chip = get_chip(chip)
+    dtype = canon_dtype(dtype)
+    shapes = sorted(shape_counts)
+    weights = [float(shape_counts[s]) for s in shapes]
+    cfgs = []
+    for m, n, k in shapes:
+        blk = (configs or {}).get((m, n, k)) or DEFAULT_CONFIG
+        cfgs.append(GemmConfig(m=int(m), n=int(n), k=int(k),
+                               block_m=int(blk.block_m),
+                               block_n=int(blk.block_n),
+                               block_k=int(blk.block_k), dtype=dtype))
+    sim = TpuGemmSimulator(chip=chip)
+    tel = sim.analyze_batch(cfgs)
+
+    bytes_per = float(DTYPE_BYTES.get(dtype, 2))
+    peak = chip.peak(dtype if dtype in chip.peak_flops else "bf16")
+    step_s = compute_s = memory_s = 0.0
+    for i, ((m, n, k), w) in enumerate(zip(shapes, weights)):
+        # roofline terms are always finite — the fallback when a block
+        # config is invalid (VMEM OOM) on this chip and the simulator
+        # reports NaN runtime
+        c_s = 2.0 * m * n * k / peak
+        m_s = (m * k + k * n + m * n) * bytes_per / chip.hbm_bw
+        rt = float(tel["runtime_ms"][i]) * 1e-3
+        if not rt > 0.0 or rt != rt:            # NaN/invalid -> bound
+            rt = max(c_s, m_s)
+            compute_s += w * c_s
+            memory_s += w * m_s
+        else:
+            compute_s += w * float(tel["compute_time_ms"][i]) * 1e-3
+            memory_s += w * float(tel["memory_time_ms"][i]) * 1e-3
+        step_s += w * rt
+    flops = sum(2.0 * m * n * k * w for (m, n, k), w in zip(shapes, weights))
+    byts = sum((m * k + k * n + m * n) * bytes_per * w
+               for (m, n, k), w in zip(shapes, weights))
+    # the fleet runs kernels back-to-back, so duty cycles are relative to
+    # total step time: setting collective_s = step_s (with zero ICI power)
+    # pins `step_power_w`'s bound to the step without adding power
+    report = RooflineReport(
+        name=name, n_chips=1, dtype=dtype, hlo_flops=flops, hlo_bytes=byts,
+        collective_wire_bytes=0.0, compute_s=min(compute_s, step_s),
+        memory_s=min(memory_s, step_s), collective_s=step_s)
+    power = (step_power_w(report, chip, ici_power_w=0.0)
+             if step_s > 0 else chip.idle_power_w)
+    return StepEnergyEstimate(
+        name=name, step_s=step_s, power_w=power, energy_j=power * step_s,
+        compute_s=compute_s, memory_s=memory_s,
+        n_gemms=float(sum(weights)))
 
 
 def energy_report(report: RooflineReport, *, tokens_per_step: float,

@@ -101,6 +101,40 @@ def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
     return dict(zip(shapes, best))
 
 
+def prefill_buckets(max_len: int, min_bucket: int = 8) -> list[int]:
+    """Power-of-two row buckets the serving engine pads slot prefills to,
+    so distinct prompt lengths share jit traces and tuned GEMM shapes."""
+    buckets, b = [], min_bucket
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return buckets
+
+
+def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
+                       include_slot_prefill: bool = True
+                       ) -> list[tuple[int, int, int]]:
+    """Every GEMM shape a serving engine will trace: the batched prefill
+    (max_batch * max_len rows, LM head over max_batch last positions), the
+    lockstep decode step (max_batch rows), and — for continuous batching —
+    each power-of-two slot-prefill bucket (1 row-batch of `bucket` tokens,
+    head over 1 row). Feed to `warm_gemm_cache` so neither the first wave
+    nor the first mid-decode slot refill pays per-shape tuning latency."""
+    from repro.models.config import gemm_shape_counts
+
+    fleet = set(gemm_shape_counts(cfg, max_batch * max_len,
+                                  head_tokens=max_batch,
+                                  kv_rows=max_batch * max_len))
+    fleet |= set(gemm_shape_counts(cfg, max_batch,
+                                   kv_rows=max_batch * max_len))
+    if include_slot_prefill:
+        for b in prefill_buckets(max_len):
+            fleet |= set(gemm_shape_counts(cfg, b, head_tokens=1,
+                                           kv_rows=max_len))
+    return sorted(fleet)
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,

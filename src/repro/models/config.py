@@ -138,28 +138,97 @@ class ModelConfig:
         return full - all_experts + active_experts
 
 
+def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
+                      head_tokens: int | None = None,
+                      kv_rows: int | None = None
+                      ) -> dict[tuple[int, int, int], float]:
+    """Dominant (m, n, k) GEMMs of one forward pass over `n_tokens` rows,
+    with per-step multiplicities — the denominator the serving engine's
+    energy attribution needs (one decode step issues each projection once
+    per layer, K and V separately, but the LM head only once).
+
+    `head_tokens` sizes the LM-head GEMM's rows separately: training
+    unembeds every position (default, = n_tokens), but a serving prefill
+    unembeds only each row's last position, so the engine passes its row
+    count (see `lm_prefill`).
+
+    `kv_rows` sizes MLA's per-step K/V decompression (`w_uk`/`w_uv` run
+    over the *whole* latent cache, B * cache_len rows, every serving step
+    — see `moe.mla_apply`); default = n_tokens, the no-cache training
+    case where the cache is the sequence itself.
+
+    Counts are an analytical estimate: MoE expert GEMMs are counted
+    ``top_k + n_shared_experts`` times per layer at full `n_tokens` rows
+    (capacity effects ignored), and hybrid attention blocks are amortized
+    over their `attn_every` period.
+    """
+    t = int(n_tokens)
+    d, hd, kv = cfg.d_model, cfg.hd, cfg.kv_heads
+    L = cfg.n_layers
+    # mamba1 is attention-free (no Q/K/V/O projections at all); hybrid
+    # (Zamba2) runs one shared attention block every attn_every layers,
+    # the backbone being SSM (no ops.matmul work beyond projections)
+    if cfg.kind == "mamba1":
+        attn_layers = 0
+    elif cfg.kind == "hybrid":
+        attn_layers = max(L // max(cfg.attn_every, 1), 1)
+    else:
+        attn_layers = L
+    counts: dict[tuple[int, int, int], float] = {}
+
+    def add(shape: tuple[int, int, int], n: float) -> None:
+        counts[shape] = counts.get(shape, 0.0) + n
+
+    if cfg.kind == "mla_moe" and cfg.kv_lora_rank:
+        # multi-head latent attention traces its own projection fleet
+        # (moe.mla_apply), not the generic Q/K/V/O skeleton
+        r, rq, pe = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+        kvr = int(kv_rows) if kv_rows is not None else t
+        if rq:
+            add((t, rq, d), L)                       # w_dq (Q compress)
+            add((t, cfg.n_heads * (hd + pe), rq), L)  # w_uq
+        else:
+            add((t, cfg.n_heads * (hd + pe), d), L)  # w_uq
+        add((t, r, d), L)                            # w_dkv (KV compress)
+        add((t, pe, d), L)                           # w_kpe (RoPE key)
+        add((kvr, cfg.n_heads * hd, r), 2 * L)       # w_uk / w_uv decompress
+        add((t, d, cfg.n_heads * hd), L)             # output projection
+    elif attn_layers:
+        add((t, cfg.n_heads * hd, d), attn_layers)   # Q projection
+        add((t, kv * hd, d), 2 * attn_layers)        # K and V projections
+        add((t, d, cfg.n_heads * hd), attn_layers)   # output projection
+    add((int(head_tokens) if head_tokens is not None else t,
+         cfg.vocab, d), 1)                           # LM head
+    ff = cfg.d_ff_expert if cfg.n_experts else cfg.d_ff
+    if ff:
+        mults = ((cfg.top_k + cfg.n_shared_experts) if cfg.n_experts else 1)
+        ffn_layers = attn_layers if cfg.kind == "hybrid" else L
+        up = (2 if cfg.gated_mlp else 1) * mults * ffn_layers
+        add((t, ff, d), up)                          # up (and gate) proj
+        add((t, d, ff), mults * ffn_layers)          # down projection
+    if cfg.kind == "mamba1":
+        add((t, 2 * cfg.d_inner, d), L)              # SSM in_proj
+        add((t, d, cfg.d_inner), L)                  # SSM out_proj
+    elif cfg.kind == "hybrid":
+        # mamba2/SSD in_proj also carries B/C state projections and the
+        # per-head dt channel (see ssm.mamba2_block_init)
+        di = cfg.d_inner
+        n_in = (2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                + di // max(cfg.ssm_headdim, 1))
+        add((t, n_in, d), L)                         # SSD in_proj
+        add((t, d, di), L)                           # SSD out_proj
+    return counts
+
+
 def gemm_shapes(cfg: ModelConfig, n_tokens: int) -> list[tuple[int, int, int]]:
     """The dominant (m, n, k) GEMMs one forward pass issues over `n_tokens`
     rows — the shape fleet `kernels.ops.warm_gemm_cache` pre-tunes so the
     first jit trace of a model never pays per-shape autotuning.
 
     Shapes follow `ops.matmul`'s convention (m rows, n out-features, k
-    in-features). This is the projection/FFN/head skeleton shared by every
-    family; SSM scans and conv mixers don't go through `ops.matmul`.
+    in-features). This is the projection/FFN/head skeleton per family
+    (attention projections omitted for attention-free mamba1); SSM scans
+    and conv mixers don't go through `ops.matmul`. Multiplicity-aware
+    variant: `gemm_shape_counts`.
     """
-    t = int(n_tokens)
-    d, hd, kv = cfg.d_model, cfg.hd, cfg.kv_heads
-    shapes = {
-        (t, cfg.n_heads * hd, d),      # Q projection
-        (t, kv * hd, d),               # K/V projections
-        (t, d, cfg.n_heads * hd),      # output projection
-        (t, cfg.vocab, d),             # LM head
-    }
-    ff = cfg.d_ff_expert if cfg.n_experts else cfg.d_ff
-    if ff:
-        shapes.add((t, ff, d))         # up (and gate) projection
-        shapes.add((t, d, ff))         # down projection
-    if cfg.kind in ("mamba1", "hybrid"):
-        shapes.add((t, 2 * cfg.d_inner, d))
-        shapes.add((t, d, cfg.d_inner))
-    return sorted(shapes)
+    return sorted(gemm_shape_counts(cfg, n_tokens))

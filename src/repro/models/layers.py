@@ -114,6 +114,29 @@ def attention_init(key, config: ModelConfig, d_model: int | None = None
 Q_CHUNK = 1024  # query-block size for memory-bounded exact attention
 
 
+def attention_mask(Sq: int, Sk: int, *, causal: bool,
+                   q_offset: jax.Array | int = 0,
+                   kv_len: jax.Array | None = None) -> jax.Array | None:
+    """(Bm, Sq, Sk) boolean mask (Bm broadcasts over batch).
+
+    `q_offset` and `kv_len` may be scalars (whole-batch, the wave-serving
+    contract) or (B,) arrays (per-row, the continuous-batching contract
+    where every decode slot sits at its own sequence position).
+    """
+    mask = None
+    if causal:
+        off = jnp.asarray(q_offset)
+        off = off[:, None, None] if off.ndim else off[None, None, None]
+        qpos = jnp.arange(Sq)[None, :, None] + off       # (Bm, Sq, 1)
+        mask = jnp.arange(Sk)[None, None, :] <= qpos     # (Bm, Sq, Sk)
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        kl = kl[:, None, None] if kl.ndim else kl[None, None, None]
+        valid = jnp.arange(Sk)[None, None, :] < kl       # (Bm, 1, Sk)
+        mask = valid if mask is None else (mask & valid)
+    return mask
+
+
 def _sdpa_block(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
                 q_offset: jax.Array | int = 0,
                 kv_len: jax.Array | None = None) -> jax.Array:
@@ -128,16 +151,10 @@ def _sdpa_block(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
     qg = q.reshape(B, Sq, KV, rep, hd)
     scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k,
                         preferred_element_type=jnp.float32) / math.sqrt(hd)
-    mask = None
-    if causal:
-        qpos = jnp.arange(Sq)[:, None] + q_offset
-        kpos = jnp.arange(Sk)[None, :]
-        mask = kpos <= qpos                              # (Sq, Sk)
-    if kv_len is not None:
-        valid = jnp.arange(Sk)[None, :] < kv_len         # (1, Sk)
-        mask = valid if mask is None else (mask & valid)
+    mask = attention_mask(Sq, Sk, causal=causal, q_offset=q_offset,
+                          kv_len=kv_len)
     if mask is not None:
-        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrqk,bkgh->bqgrh", w.astype(q.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -165,6 +182,29 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
 
     _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nb)))
     return outs.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+def cache_update(cache: jax.Array, update: jax.Array,
+                 index: jax.Array) -> jax.Array:
+    """Write `update` (B, S, ...) into `cache` (B, L, ...) at sequence
+    position `index` — scalar (all rows at one position) or (B,) (each row
+    at its own position; the continuous-batching decode contract).
+
+    Literal 0s must match index's dtype: under JAX_ENABLE_X64 they'd
+    otherwise promote to int64 next to an int32 index, which
+    dynamic_update_slice rejects.
+    """
+    index = jnp.asarray(index)
+    zero = jnp.zeros((), dtype=index.dtype)
+    if index.ndim == 0:
+        starts = (zero, index) + (zero,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, update, starts)
+
+    def row(c, u, i):
+        starts = (i,) + (zero,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, u, starts)
+
+    return jax.vmap(row)(cache, update, index)
 
 
 def attention_apply(
@@ -206,15 +246,12 @@ def attention_apply(
 
     new_cache = None
     if kv_cache is not None and xa is None:
-        # decode: write new k/v at cache_index, attend over the prefix
+        # decode: write new k/v at cache_index, attend over the prefix.
+        # cache_index is a scalar (whole batch at one position — wave
+        # serving) or (B,) (per-slot positions — continuous batching).
         ck, cv = kv_cache["k"], kv_cache["v"]
-        # literal 0s must match cache_index's dtype: under JAX_ENABLE_X64
-        # they'd otherwise promote to int64 next to an int32 index, which
-        # dynamic_update_slice rejects
-        zero = jnp.zeros((), dtype=cache_index.dtype)
-        idx = (zero, cache_index, zero, zero)
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), idx)
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), idx)
+        ck = cache_update(ck, k.astype(ck.dtype), cache_index)
+        cv = cache_update(cv, v.astype(cv.dtype), cache_index)
         new_cache = {"k": ck, "v": cv}
         # quantized caches (e.g. fp8) convert at read; on TPU the convert
         # fuses into the attention loads
@@ -267,6 +304,71 @@ def swiglu_apply(p: Params, x: jax.Array,
     else:
         h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
     return ops.matmul(h, p["w_down"])
+
+
+# ---------------- decode-state slot surgery ----------------
+#
+# Continuous batching keeps one batched decode state of `max_batch` slots
+# and retires/refills individual slots mid-decode. A freshly prefilled
+# single-request state (batch 1) is spliced into slot `b` of the batched
+# state with `dynamic_update_slice` along each leaf's batch axis. The batch
+# axis differs per leaf (KV caches are (L, B, S, ...), per-row indices are
+# (B,)), so it is discovered structurally: evaluate the state shape at two
+# batch sizes and find the axis that scaled.
+
+
+def state_batch_axes(tree_b1, tree_b2):
+    """Per-leaf batch axis of a decode-state pytree.
+
+    `tree_b1` / `tree_b2` are the same state (or its ShapeDtypeStructs, e.g.
+    from `jax.eval_shape`) built at two different batch sizes. Returns a
+    matching pytree of ints (batch axis per leaf; -1 for leaves whose shape
+    does not depend on batch — None would read better but is an empty
+    subtree to the pytree machinery). Raises if a leaf's shape differs
+    along more than one axis.
+    """
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(a.shape) != len(b.shape) or len(diff) > 1:
+            raise ValueError(
+                f"ambiguous batch axis: {a.shape} vs {b.shape}")
+        return diff[0] if diff else -1
+
+    return jax.tree.map(axis, tree_b1, tree_b2)
+
+
+def expand_slot_state(slot_state, axes, n_slots: int):
+    """Zero-initialized batched state of `n_slots` slots with the same
+    structure/dtypes as a single-slot (batch 1) `slot_state`."""
+
+    def expand(leaf, ax):
+        if ax < 0:
+            return leaf
+        shape = list(leaf.shape)
+        shape[ax] = n_slots
+        return jnp.zeros(shape, leaf.dtype)
+
+    return jax.tree.map(expand, slot_state, axes)
+
+
+def insert_slot_state(batch_state, slot_state, axes, slot: jax.Array):
+    """Splice a batch-1 `slot_state` into slot `slot` of `batch_state`.
+
+    Pure function of its inputs (jit-friendly; `slot` may be traced). Leaves
+    with `ax < 0` (batch-independent state) keep the batched value.
+    """
+    slot = jnp.asarray(slot)
+
+    def insert(big, small, ax):
+        if ax < 0:
+            return big
+        zero = jnp.zeros((), dtype=slot.dtype)
+        starts = tuple(slot if i == ax else zero for i in range(big.ndim))
+        return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                            starts)
+
+    return jax.tree.map(insert, batch_state, slot_state, axes)
 
 
 # ---------------- losses ----------------

@@ -337,15 +337,13 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
 
     new_cache = None
     if kv_cache is not None:
-        # literal 0s must match cache_index's dtype (int64 vs int32 mix
-        # under JAX_ENABLE_X64 is rejected by dynamic_update_slice)
-        zero = jnp.zeros((), dtype=cache_index.dtype)
-        cc = jax.lax.dynamic_update_slice(
-            kv_cache["c_kv"], c_kv.astype(kv_cache["c_kv"].dtype),
-            (zero, cache_index, zero))
-        cp = jax.lax.dynamic_update_slice(
-            kv_cache["k_pe"], k_pe[:, :, 0].astype(kv_cache["k_pe"].dtype),
-            (zero, cache_index, zero))
+        # cache_index: scalar (wave serving) or (B,) per-slot positions
+        # (continuous batching) — L.cache_update handles both
+        cc = L.cache_update(kv_cache["c_kv"],
+                            c_kv.astype(kv_cache["c_kv"].dtype), cache_index)
+        cp = L.cache_update(kv_cache["k_pe"],
+                            k_pe[:, :, 0].astype(kv_cache["k_pe"].dtype),
+                            cache_index)
         new_cache = {"c_kv": cc, "k_pe": cp}
         c_kv_full, k_pe_full = cc, cp[:, :, None]
         kv_len = cache_index + S
@@ -369,11 +367,9 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
         scores += jnp.einsum("bqhp,bkgp->bhqk", q_pe_b, k_pe_full,
                              preferred_element_type=jnp.float32)
         scores *= scale
-        qpos = jnp.arange(Sq)[:, None] + off
-        mask = jnp.arange(Sk)[None, :] <= qpos
-        if kv_len is not None:
-            mask = mask & (jnp.arange(Sk)[None, :] < kv_len)
-        scores = jnp.where(mask[None, None], scores, -1e30)
+        mask = L.attention_mask(Sq, Sk, causal=True, q_offset=off,
+                                kv_len=kv_len)
+        scores = jnp.where(mask[:, None], scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1)
         return jnp.einsum("bhqk,bkhd->bqhd", w.astype(x.dtype), v,
                           preferred_element_type=jnp.float32).astype(x.dtype)

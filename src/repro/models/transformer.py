@@ -168,10 +168,25 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
                block_apply: Callable = dense_block_apply,
                max_len: int | None = None) -> tuple[jax.Array, dict]:
-    """Full-sequence forward filling the KV cache; returns last logits."""
+    """Full-sequence forward filling the KV cache; returns last logits.
+
+    Two decode-state contracts, selected by ``batch["lengths"]``:
+
+    * absent (legacy/wave): every row is exactly S tokens; returns the
+      logits at position S-1 and a shared scalar ``index = S``.
+    * present, a (B,) int32 of true prompt lengths over *right-padded*
+      rows: returns each row's logits at ``lengths[b] - 1`` and a per-row
+      ``index = lengths``. Right-padding is causal-safe — pad keys sit
+      after every valid query, so no real token ever attends to padding,
+      and decode overwrites pad cache rows before its per-row ``kv_len``
+      mask can reach them. A padded row is therefore bit-identical to the
+      same prompt served unpadded (the continuous-batching slot-prefill
+      contract).
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     max_len = max_len or S
+    lengths = batch.get("lengths")
     positions = batch.get("positions")
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -186,18 +201,32 @@ def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
                                positions=positions, cache=cache,
                                cache_index=jnp.int32(0))
     x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = _unembed(params, x[:, -1:], cfg)
-    return logits[:, 0], {"kv": cache, "index": jnp.int32(S)}
+    if lengths is None:
+        logits = _unembed(params, x[:, -1:], cfg)
+        return logits[:, 0], {"kv": cache, "index": jnp.int32(S)}
+    lengths = jnp.asarray(lengths, jnp.int32)
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to((lengths - 1)[:, None, None],
+                            (B, 1, x.shape[-1])), axis=1)
+    logits = _unembed(params, last, cfg)
+    return logits[:, 0], {"kv": cache, "index": lengths}
 
 
 def lm_decode_step(params: Params, token: jax.Array, state: dict,
                    cfg: ModelConfig,
                    block_apply: Callable = dense_block_apply
                    ) -> tuple[jax.Array, dict]:
-    """One-token decode. token: (B,) int32. state: {"kv", "index"}."""
+    """One-token decode. token: (B,) int32. state: {"kv", "index"}.
+
+    ``index`` is either a scalar (all rows at the same position — the wave
+    contract) or (B,) (each slot at its own position — the continuous-
+    batching contract; see `lm_prefill`)."""
     B = token.shape[0]
     idx = state["index"]
-    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    if jnp.ndim(idx) == 0:
+        positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    else:
+        positions = idx[:, None].astype(jnp.int32)
     x = _embed(params, token[:, None], cfg)
     x, cache, _ = _scan_blocks(params, x, cfg, block_apply,
                                positions=positions, cache=state["kv"],

@@ -1,15 +1,35 @@
-"""Batched serving engine: continuous-batching-lite over fixed decode slots.
+"""Continuous-batching serving engine with per-request energy accounting.
 
-Requests enter a queue; the engine packs up to `max_batch` prompts per
-prefill wave, then decodes all active slots in lockstep (one jitted decode
-step per token). Finished sequences (EOS or budget) free their slot for the
-next wave — the static-shape analogue of continuous batching that serves
-TPU-style compiled steps well.
+The engine keeps one batched decode state of ``max_batch`` fixed slots. A
+request is prefilled *alone* (batch 1, right-padded to a power-of-two
+bucket so prompt lengths share jit traces) and spliced into a free slot of
+the batched state mid-decode (`layers.insert_slot_state` — pure
+`dynamic_update_slice` surgery over the decode-state pytree). The jitted
+decode step therefore always runs at full static shape, but a finished
+slot is retired the step it finishes and immediately refilled from the
+queue — no slot ever burns decode steps on a dead request, the
+"Racing to Idle" energy waste the paper's energy axis quantifies.
+
+Each request carries telemetry (queue time, TTFT, resident decode steps,
+tokens/s) and an energy estimate: the engine prices one decode step of the
+whole batch (and each prefill bucket) via `core.energy.gemm_fleet_energy`
+— the pretuned GEMM fleet's predicted runtimes under the duty-cycle power
+model — and attributes each resident step's 1/max_batch share to the
+request occupying the slot. `report()` aggregates tokens/s, J/token and
+slot occupancy for benchmarks to regress.
+
+The legacy wave API (`run_wave`) remains as a compatibility shim: one
+batched right-padded prefill, lockstep decode until every request in the
+wave finishes. Finished rows keep executing until the wave drains — which
+is exactly the waste continuous mode exists to remove — but EOS / budget
+termination (including on the *first* sampled token) is honored in both
+modes.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -18,6 +38,15 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 
+# families whose decode state supports per-row indices + slot surgery
+# (attention KV caches; SSM/hybrid/encdec states thread a shared scalar
+# position and are served in wave mode). MoE families note: rows are
+# batch-independent — and continuous/wave token streams bit-identical —
+# only while expert capacity doesn't bind (capacity-factor token dropping
+# is first-come-first-served across the flattened batch); serve MoE with a
+# capacity_factor sized for the decode batch.
+CONTINUOUS_KINDS = ("dense", "moe", "mla_moe")
+
 
 @dataclasses.dataclass
 class Request:
@@ -25,32 +54,58 @@ class Request:
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int = 32
     eos_id: int | None = None
+    submit_s: float = 0.0       # stamped by ServingEngine.submit
 
 
 @dataclasses.dataclass
 class Result:
     uid: int
-    tokens: np.ndarray          # generated ids
+    tokens: np.ndarray          # generated ids (includes EOS if emitted)
     prompt_len: int
-    steps: int
+    steps: int                  # decode iterations the request was resident
+    n_tokens: int = 0           # generated-token count (energy denominator)
+    queue_s: float = 0.0        # submit -> prefill start
+    ttft_s: float = 0.0         # submit -> first token
+    decode_s: float = 0.0       # first token -> last token
+    tokens_per_s: float = 0.0
+    energy_j: float = 0.0       # attributed prefill + resident-step energy
+    energy_per_token_j: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    tokens: list[int]
+    prefill_energy_j: float
+    t_start: float              # prefill start (wall)
+    t_first: float              # first-token time (wall)
+    steps: int = 0              # resident decode iterations so far
+    rng: np.random.Generator | None = None   # per-request sampling stream
 
 
 class ServingEngine:
     def __init__(self, model, params, cfg: ModelConfig, *,
                  max_batch: int = 8, max_len: int = 512,
                  greedy: bool = True, seed: int = 0,
+                 mode: str = "auto",
                  pretune: bool = False, tune_objective: str = "runtime",
                  tune_rank_mode: str = "auto",
                  chip: str | None = None):
-        """`pretune=True` batch-tunes the engine's GEMM fleet up front:
-        every projection/FFN/head shape the prefill (max_batch * max_len
-        rows) and decode (max_batch rows) steps will trace goes through
-        one `ops.warm_gemm_cache` pass (predictor-ranked, substrate-
-        verified, cached per chip + artifact version), so the first
-        request pays no per-shape autotuning. `tune_objective` picks the
-        paper's serving objective ("runtime", "energy", "power", "edp");
-        `tune_rank_mode` picks the candidate-ranking path ("auto" ranks
-        fully in-graph on accelerator backends, at trace time on CPU).
+        """`mode` picks the serving loop: "continuous" (slot table with
+        mid-decode retire/refill), "wave" (legacy batch-of-waves), or
+        "auto" (continuous for the families that support per-slot decode
+        state — see CONTINUOUS_KINDS — wave otherwise).
+
+        `pretune=True` batch-tunes the engine's GEMM fleet up front:
+        every projection/FFN/head shape the batched prefill (max_batch *
+        max_len rows), the decode step (max_batch rows), and each
+        slot-prefill bucket will trace goes through one
+        `ops.warm_gemm_cache` pass (predictor-ranked, substrate-verified,
+        cached per chip + artifact version), so the first request pays no
+        per-shape autotuning. `tune_objective` picks the paper's serving
+        objective ("runtime", "energy", "power", "edp"); `tune_rank_mode`
+        picks the candidate-ranking path ("auto" ranks fully in-graph on
+        accelerator backends, at trace time on CPU).
         """
         self.model = model
         self.params = params
@@ -58,62 +113,390 @@ class ServingEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.greedy = greedy
+        if mode not in ("auto", "continuous", "wave"):
+            raise ValueError(f"unknown serving mode {mode!r}")
+        self.mode = mode
         self.queue: deque[Request] = deque()
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
+        if chip is not None:
+            # validate eagerly: a chip typo must raise here, not silently
+            # zero every energy estimate later
+            from repro.core.chips import get_chip
+
+            chip = get_chip(chip).name
+        self.chip = chip
         self.pretuned: dict[tuple, object] = {}
         if pretune:
             from repro.kernels import ops
-            from repro.models.config import gemm_shapes
 
-            fleet = sorted(set(gemm_shapes(cfg, max_batch * max_len))
-                           | set(gemm_shapes(cfg, max_batch)))
+            fleet = ops.serving_gemm_fleet(
+                cfg, max_batch=max_batch, max_len=max_len,
+                include_slot_prefill=self._continuous_supported())
             self.pretuned = ops.warm_gemm_cache(
                 fleet, dtype=cfg.activation_dtype,
                 objective=tune_objective, chip=chip,
                 rank_mode=tune_rank_mode)
+        if (cfg.n_experts and mode != "wave"
+                and cfg.capacity_factor * cfg.top_k < cfg.n_experts):
+            # capacity = cf*T*K/E binds when too many tokens pick one
+            # expert; dropping is first-come-first-served across the
+            # flattened batch, so a bound batch makes a request's tokens
+            # depend on its neighbors (and breaks wave/continuous
+            # bit-parity). One expert receives at most T assignments
+            # (top-k indices are distinct per token), so cf >= E/K
+            # guarantees no drop at any T.
+            import warnings
+
+            warnings.warn(
+                f"continuous batching with capacity_factor="
+                f"{cfg.capacity_factor} < n_experts/top_k="
+                f"{cfg.n_experts / cfg.top_k:g}: expert capacity can "
+                f"bind, making generations depend on batch composition; "
+                f"raise capacity_factor (>= n_experts/top_k guarantees "
+                f"batch-independent serving) or use wave mode",
+                stacklevel=2)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg, max_len=max_len))
         self._decode = jax.jit(
             lambda p, t, s: model.decode_step(p, t, s, cfg))
+        self._insert_fn = None          # built lazily with the axes spec
+        self._state_axes = None
+        self._step_energy_cache: dict[str | int, object] = {}
+        # engine-level counters (reset per run_* call family, reported
+        # cumulatively)
+        self._stats = {
+            "decode_steps": 0, "resident_slot_steps": 0.0,
+            "slot_steps": 0.0, "generated_tokens": 0, "energy_j": 0.0,
+            "idle_energy_j": 0.0, "requests": 0, "wall_s": 0.0,
+        }
 
+    # ------------------------------------------------------------------
+    # queue
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # attention-free (SSM) decode state is O(1) per token — no
+        # length-bounded KV cache, so no prompt/budget bound applies
+        if not self.cfg.attention_free and len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit "
+                f"max_len={self.max_len} (need >= 1 decode position)")
+        if req.submit_s == 0.0:
+            req.submit_s = time.perf_counter()
         self.queue.append(req)
 
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+    def _req_rng(self, uid: int) -> np.random.Generator:
+        """Each request samples from its own (engine seed, uid) stream, so
+        its tokens can never depend on which neighbors share the batch or
+        when they retire."""
+        return np.random.default_rng((self.seed, uid))
+
+    def _sample(self, logits: np.ndarray,
+                rngs: list[np.random.Generator | None] | None = None
+                ) -> np.ndarray:
+        """Next token per row. Greedy is a single vectorized argmax.
+        Non-greedy draws a per-request Gumbel-max (`_req_rng` streams;
+        `rngs[b] is None` marks a finished/dead row) — dead slots neither
+        advance any RNG nor influence live rows, and the old per-row
+        O(B*V)-work `np.random.choice` probability loop is gone."""
         if self.greedy:
             return logits.argmax(-1).astype(np.int32)
-        z = logits - logits.max(-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(-1, keepdims=True)
-        return np.array([self._rng.choice(len(q), p=q) for q in p],
-                        dtype=np.int32)
+        out = np.zeros(logits.shape[0], np.int32)
+        for b, rng in enumerate(rngs or []):
+            if rng is None:
+                continue
+            z = logits[b]
+            out[b] = np.int32((z + rng.gumbel(size=z.shape)).argmax())
+        return out
 
+    # ------------------------------------------------------------------
+    # energy model
+    # ------------------------------------------------------------------
+    def _step_energy(self, key, n_rows: int, head_rows: int | None = None,
+                     batch_rows: int | None = None):
+        """Predicted StepEnergyEstimate for a step over `n_rows` GEMM rows
+        (decode: max_batch; prefill: padded token count, with the LM head
+        sized to the rows actually unembedded and MLA's cache-wide K/V
+        decompression sized to batch_rows * max_len), cached per key.
+        Returns None (once, with a warning) when the energy model is
+        unavailable."""
+        hit = self._step_energy_cache.get(key, "miss")
+        if hit != "miss":
+            return hit
+        try:
+            from repro.core.energy import gemm_fleet_energy
+            from repro.models.config import gemm_shape_counts
+
+            kv_rows = (batch_rows * self.max_len
+                       if batch_rows is not None else None)
+            est = gemm_fleet_energy(
+                gemm_shape_counts(self.cfg, n_rows, head_tokens=head_rows,
+                                  kv_rows=kv_rows),
+                chip=self.chip or "tpu_v5e",
+                dtype=self.cfg.activation_dtype,
+                configs=self.pretuned or None,
+                name=f"{self.cfg.name}:{key}")
+        except Exception as e:
+            import warnings
+
+            warnings.warn(
+                f"serving energy model unavailable ({e!r}); "
+                f"energy telemetry for step {key!r} will read 0",
+                stacklevel=2)
+            est = None
+        self._step_energy_cache[key] = est
+        return est
+
+    def _decode_energy_j(self) -> float:
+        est = self._step_energy(("decode", self.max_batch), self.max_batch,
+                                batch_rows=self.max_batch)
+        return est.energy_j if est is not None else 0.0
+
+    def _prefill_energy_j(self, n_tokens: int, head_rows: int) -> float:
+        """Energy of one prefill over `n_tokens` padded rows unembedding
+        `head_rows` last positions (1 for slot prefill, B for a wave).
+        `head_rows` is also the prefill's batch-row count, which sizes
+        MLA's cache-wide decompression."""
+        est = self._step_energy(("prefill", int(n_tokens), int(head_rows)),
+                                int(n_tokens), int(head_rows),
+                                batch_rows=int(head_rows))
+        return est.energy_j if est is not None else 0.0
+
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+    def _continuous_supported(self) -> bool:
+        return (self.cfg.kind in CONTINUOUS_KINDS
+                and self.model.init_cache is not None)
+
+    def _bucket(self, n: int) -> int:
+        """Smallest slot-prefill bucket holding `n` prompt tokens — the
+        same `ops.prefill_buckets` list `serving_gemm_fleet` pre-tunes, so
+        slot prefills only ever trace pre-warmed shapes."""
+        from repro.kernels import ops
+
+        for b in ops.prefill_buckets(self.max_len):
+            if b >= n:
+                return b
+        return self.max_len
+
+    def _budget(self, req: Request) -> int:
+        """Effective token budget: >= 1, bounded by KV-cache room for
+        families with a length-bounded cache (attention-free SSM state
+        has no such bound)."""
+        if self.cfg.attention_free:
+            return max(1, req.max_new_tokens)
+        return max(1, min(req.max_new_tokens,
+                          self.max_len - len(req.prompt)))
+
+    def _prefill_slot(self, req: Request, rng) -> tuple[int, dict, float]:
+        """Prefill one request alone (right-padded to a pow2 bucket) and
+        sample its first token. Returns (first_token, slot_state,
+        prefill_energy_j)."""
+        n = len(req.prompt)
+        bucket = self._bucket(n)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt
+        logits, state = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray([n], np.int32)})
+        logits = np.asarray(logits, np.float32)
+        tok = int(self._sample(logits, [rng])[0])
+        return tok, state, self._prefill_energy_j(bucket, head_rows=1)
+
+    def _make_insert(self, slot_state) -> None:
+        """Discover the decode-state batch-axis spec (shapes at batch 1 vs
+        max_batch, via eval_shape — no allocation) and jit the splice."""
+        from repro.models import layers as L
+
+        if self.max_batch == 1:
+            self._state_axes = jax.tree.map(lambda _: -1, slot_state)
+            self._insert_fn = lambda big, small, b: small
+            return
+        s1 = jax.eval_shape(lambda s: s, slot_state)
+        probe_len = self._bucket(1)    # smallest real slot-prefill shape
+
+        def shape_at(bs: int):
+            toks = jnp.zeros((bs, probe_len), jnp.int32)
+            lens = jnp.full((bs,), probe_len, jnp.int32)
+            return jax.eval_shape(
+                lambda p: self.model.prefill(
+                    p, {"tokens": toks, "lengths": lens}, self.cfg,
+                    max_len=self.max_len)[1], self.params)
+
+        sb = shape_at(self.max_batch)
+        axes = L.state_batch_axes(shape_at(1), sb)
+        # sanity: the slot state we actually produced must match the probe
+        jax.tree.map(lambda a, b: None, s1, axes)
+        self._state_axes = axes
+        self._insert_fn = jax.jit(
+            lambda big, small, b: L.insert_slot_state(big, small, axes, b))
+
+    def run_continuous(self) -> list[Result]:
+        """Drain the queue with true continuous batching: retire finished
+        slots mid-decode and refill them immediately."""
+        if not self._continuous_supported():
+            raise ValueError(
+                f"continuous batching unsupported for kind="
+                f"{self.cfg.kind!r} (needs per-slot KV decode state); "
+                f"use wave mode")
+        from repro.models import layers as L
+
+        t_run0 = time.perf_counter()
+        B = self.max_batch
+        results: list[Result] = []
+        slots: list[_Slot | None] = [None] * B
+        batch_state = None
+        token_buf = np.zeros(B, np.int32)
+        decode_energy_j = self._decode_energy_j()
+
+        def finish(slot: _Slot, now: float) -> Result:
+            req = slot.req
+            n_tok = len(slot.tokens)
+            decode_s = max(now - slot.t_first, 0.0)
+            energy = (slot.prefill_energy_j
+                      + slot.steps * decode_energy_j / B)
+            self._stats["generated_tokens"] += n_tok
+            self._stats["energy_j"] += energy
+            self._stats["requests"] += 1
+            return Result(
+                uid=req.uid, tokens=np.array(slot.tokens, np.int32),
+                prompt_len=len(req.prompt), steps=slot.steps,
+                n_tokens=n_tok,
+                queue_s=max(slot.t_start - req.submit_s, 0.0),
+                ttft_s=max(slot.t_first - req.submit_s, 0.0),
+                decode_s=decode_s,
+                tokens_per_s=(n_tok / decode_s if decode_s > 0 else 0.0),
+                energy_j=energy,
+                energy_per_token_j=energy / max(n_tok, 1))
+
+        while self.queue or any(s is not None for s in slots):
+            # ---- refill free slots from the queue (a request finishing
+            # on its very first token frees the slot again, so keep
+            # admitting until the slot holds a live request or the queue
+            # drains — no decode step runs with a needlessly dead slot) --
+            for b in range(B):
+                while slots[b] is None and self.queue:
+                    req = self.queue.popleft()
+                    rng = (None if self.greedy
+                           else self._req_rng(req.uid))
+                    t0 = time.perf_counter()
+                    tok, slot_state, pre_j = self._prefill_slot(req, rng)
+                    t1 = time.perf_counter()
+                    slot = _Slot(req=req, tokens=[tok],
+                                 prefill_energy_j=pre_j,
+                                 t_start=t0, t_first=t1, rng=rng)
+                    # EOS or a 1-token budget on the *first* sampled
+                    # token: finished before ever occupying a decode slot
+                    if (req.eos_id is not None and tok == req.eos_id) or (
+                            self._budget(req) <= 1):
+                        results.append(finish(slot, t1))
+                        continue
+                    if self._insert_fn is None:
+                        self._make_insert(slot_state)
+                    if batch_state is None:
+                        batch_state = L.expand_slot_state(
+                            slot_state, self._state_axes, B)
+                    batch_state = self._insert_fn(
+                        batch_state, slot_state, jnp.int32(b))
+                    slots[b] = slot
+                    token_buf[b] = tok
+            active = np.array([s is not None for s in slots])
+            if not active.any():
+                break                  # queue drained, no live slots
+            # ---- one lockstep decode step over all slots ----
+            logits, batch_state = self._decode(
+                self.params, jnp.asarray(token_buf), batch_state)
+            logits = np.asarray(logits, np.float32)
+            cur = self._sample(
+                logits, [s.rng if s is not None else None for s in slots])
+            now = time.perf_counter()
+            n_active = int(active.sum())
+            self._stats["decode_steps"] += 1
+            self._stats["slot_steps"] += B
+            self._stats["resident_slot_steps"] += n_active
+            # dead slots still execute: their energy share is real spend,
+            # charged to the engine (idle) rather than to any request, so
+            # report()'s J/token stays comparable with wave mode
+            self._stats["idle_energy_j"] += (
+                (B - n_active) * decode_energy_j / B)
+            for b in range(B):
+                slot = slots[b]
+                if slot is None:
+                    continue
+                tok = int(cur[b])
+                slot.tokens.append(tok)
+                slot.steps += 1
+                token_buf[b] = tok
+                req = slot.req
+                if (req.eos_id is not None and tok == req.eos_id) or (
+                        len(slot.tokens) >= self._budget(req)):
+                    results.append(finish(slot, now))
+                    slots[b] = None      # retired mid-decode; refilled
+                    token_buf[b] = 0     # next loop iteration
+        self._stats["wall_s"] += time.perf_counter() - t_run0
+        return results
+
+    # ------------------------------------------------------------------
+    # wave mode (compatibility shim)
+    # ------------------------------------------------------------------
     def run_wave(self) -> list[Result]:
         """Serve one wave: take up to max_batch queued requests, prefill
-        (padded to a common length), decode until all finish."""
+        (one batched right-padded call), decode until all finish. Finished
+        rows stay resident to the end of the wave (counted in `steps` so
+        energy attribution reflects the waste)."""
         if not self.queue:
             return []
+        t_run0 = time.perf_counter()
         batch_reqs = [self.queue.popleft()
                       for _ in range(min(self.max_batch, len(self.queue)))]
         B = len(batch_reqs)
-        S = max(len(r.prompt) for r in batch_reqs)
+        lens = np.array([len(r.prompt) for r in batch_reqs], np.int32)
+        S = int(lens.max())
+        use_lengths = self.cfg.kind in CONTINUOUS_KINDS
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(batch_reqs):
-            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
-        logits, state = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            if use_lengths:
+                toks[i, :lens[i]] = r.prompt       # right-pad + lengths
+            else:
+                toks[i, S - lens[i]:] = r.prompt   # legacy left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if use_lengths:
+            batch["lengths"] = jnp.asarray(lens)
+        t0 = time.perf_counter()
+        logits, state = self._prefill(self.params, batch)
         logits = np.asarray(logits, np.float32)
+        t_first = time.perf_counter()
+        prefill_j = self._prefill_energy_j(B * S, head_rows=B)
 
-        budget = max(r.max_new_tokens for r in batch_reqs)
-        out = [[] for _ in range(B)]
+        budgets = np.array([self._budget(r) for r in batch_reqs])
+        if not use_lengths and not self.cfg.attention_free:
+            # left-padded rows share the scalar cache index starting at the
+            # padded length S, so every row's KV room is max_len - S (not
+            # max_len - its own prompt length); without this clamp decode
+            # writes past max_len and dynamic_update_slice silently
+            # corrupts the last cache slot for the whole batch
+            budgets = np.minimum(budgets, self.max_len - S)
+        out: list[list[int]] = [[] for _ in range(B)]
         done = np.zeros(B, bool)
         steps = 0
-        cur = self._sample(logits)
-        for i in range(B):
-            out[i].append(int(cur[i]))
-        while steps < budget - 1 and not done.all():
+        rngs = [None if self.greedy else self._req_rng(r.uid)
+                for r in batch_reqs]
+        cur = self._sample(logits, rngs)
+        for i, r in enumerate(batch_reqs):
+            tok = int(cur[i])
+            out[i].append(tok)
+            # honor EOS / a 1-token budget on the first sampled token
+            if (r.eos_id is not None and tok == r.eos_id) or (
+                    budgets[i] <= 1):
+                done[i] = True
+        while not done.all():
             logits, state = self._decode(self.params, jnp.asarray(cur), state)
             logits = np.asarray(logits, np.float32)
-            cur = self._sample(logits)
+            cur = self._sample(
+                logits, [None if done[i] else rngs[i] for i in range(B)])
             steps += 1
             for i, r in enumerate(batch_reqs):
                 if done[i]:
@@ -121,16 +504,77 @@ class ServingEngine:
                 tok = int(cur[i])
                 out[i].append(tok)
                 if (r.eos_id is not None and tok == r.eos_id) or (
-                        len(out[i]) >= r.max_new_tokens):
+                        len(out[i]) >= budgets[i]):
                     done[i] = True
-        return [
-            Result(uid=r.uid, tokens=np.array(out[i], np.int32),
-                   prompt_len=len(r.prompt), steps=len(out[i]))
-            for i, r in enumerate(batch_reqs)
-        ]
+        t_end = time.perf_counter()
+        est = self._step_energy(("decode", B), B, batch_rows=B)
+        decode_energy_j = est.energy_j if est is not None else 0.0
+        self._stats["decode_steps"] += steps
+        self._stats["slot_steps"] += steps * B
+        self._stats["resident_slot_steps"] += steps * B
+        results = []
+        for i, r in enumerate(batch_reqs):
+            n_tok = len(out[i])
+            # resident until the wave drains — the Racing-to-Idle cost
+            energy = prefill_j / B + steps * decode_energy_j / B
+            decode_s = max(t_end - t_first, 0.0)
+            self._stats["generated_tokens"] += n_tok
+            self._stats["energy_j"] += energy
+            self._stats["requests"] += 1
+            results.append(Result(
+                uid=r.uid, tokens=np.array(out[i], np.int32),
+                prompt_len=len(r.prompt), steps=steps, n_tokens=n_tok,
+                queue_s=max(t0 - r.submit_s, 0.0),
+                ttft_s=max(t_first - r.submit_s, 0.0),
+                decode_s=decode_s,
+                tokens_per_s=n_tok / decode_s if decode_s > 0 else 0.0,
+                energy_j=energy,
+                energy_per_token_j=energy / max(n_tok, 1)))
+        self._stats["wall_s"] += time.perf_counter() - t_run0
+        return results
+
+    # ------------------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the cumulative counters behind `report()` — e.g. after a
+        warm-up pass, so throughput excludes jit compilation time."""
+        for k, v in self._stats.items():
+            self._stats[k] = type(v)(0)
 
     def run_until_empty(self) -> list[Result]:
+        mode = self.mode
+        if mode == "auto":
+            mode = ("continuous" if self._continuous_supported()
+                    else "wave")
+        if mode == "continuous":
+            return self.run_continuous()
         results = []
         while self.queue:
             results.extend(self.run_wave())
         return results
+
+    def report(self) -> dict:
+        """Engine-level serving report: throughput, energy, occupancy.
+
+        `energy_j` / `j_per_token` count *total* spend — per-request
+        attributed energy plus the idle share of decode steps executed
+        with dead slots — so continuous and wave modes compare
+        like-for-like."""
+        s = self._stats
+        toks = s["generated_tokens"]
+        slot_steps = s["slot_steps"]
+        total_j = s["energy_j"] + s["idle_energy_j"]
+        return {
+            "requests": s["requests"],
+            "generated_tokens": toks,
+            "decode_steps": s["decode_steps"],
+            "slot_steps": slot_steps,
+            "resident_slot_steps": s["resident_slot_steps"],
+            "slot_occupancy": (s["resident_slot_steps"] / slot_steps
+                               if slot_steps else 0.0),
+            "wall_s": s["wall_s"],
+            "tokens_per_s": toks / s["wall_s"] if s["wall_s"] > 0 else 0.0,
+            "energy_j": total_j,
+            "attributed_energy_j": s["energy_j"],
+            "idle_energy_j": s["idle_energy_j"],
+            "j_per_token": total_j / toks if toks else 0.0,
+        }
