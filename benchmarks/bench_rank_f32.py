@@ -1,0 +1,94 @@
+"""f32 in-graph ranking: quantify winner drift vs scoped-x64 (ROADMAP
+follow-up from PR 3).
+
+`GemmAutotuner.rank_in_graph` defaults to scoped float64, which is
+bit-identical to the trace-time `rank()` path. The f32 mode embeds in
+fp32 jitted programs (no x64 scope) and is faster to lower — but only
+serves if it picks the *same winners*. This bench ranks the serving GEMM
+fleet (decode + batched prefill + the chunked-admission width x bucket
+grid) through each shipped golden artifact (`tests/fixtures/`) in both
+precisions and counts top-1 / top-3 winner mismatches, plus wall time.
+
+Measured result (recorded in README): zero winner drift across every
+family — tree-ensemble scores are coarse and linreg margins wide, so f32
+rounding never crosses an argmin boundary on these artifacts. x64 stays
+the default (it carries the bit-parity guarantee); f32 is a safe opt-in
+where an x64 scope is unavailable.
+
+Run:  PYTHONPATH=src python benchmarks/bench_rank_f32.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import dump, row  # noqa: E402
+
+FIXTURE_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "fixtures")
+FAMILIES = ("rf", "gbdt", "linreg", "stacking")
+TOP_K = 3
+
+
+def _fleet():
+    from repro.kernels import ops
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="drift-bench", kind="dense", n_layers=2,
+                      d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                      vocab=4096)
+    return ops.serving_gemm_fleet(cfg, max_batch=8, max_len=512,
+                                  chunk_tokens=64, lane_width=16)
+
+
+def _keys(cfgs):
+    return [(c.block_m, c.block_n, c.block_k) for c in cfgs]
+
+
+def run(smoke: bool | None = None) -> list[dict]:
+    from repro.core.autotuner import GemmAutotuner
+    from repro.core.hwsim import TpuGemmSimulator
+    from repro.core.predictor import PerfPredictor
+
+    shapes = _fleet()
+    rows = []
+    payload = {"n_shapes": len(shapes), "top_k": TOP_K, "families": {}}
+    for fam in FAMILIES:
+        pred = PerfPredictor.load(
+            os.path.join(FIXTURE_DIR, f"golden_{fam}.npz"))
+        tuner = GemmAutotuner(pred, TpuGemmSimulator(seed=0), scorer="jit")
+        t0 = time.perf_counter()
+        tops64, _ = tuner.rank_in_graph(shapes, top_k=TOP_K, x64=True)
+        t64 = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tops32, _ = tuner.rank_in_graph(shapes, top_k=TOP_K, x64=False)
+        t32 = time.perf_counter() - t0
+        top1 = sum(1 for a, b in zip(tops64, tops32)
+                   if _keys(a[:1]) != _keys(b[:1]))
+        topk = sum(1 for a, b in zip(tops64, tops32)
+                   if _keys(a) != _keys(b))
+        payload["families"][fam] = {
+            "top1_mismatches": top1, "topk_mismatches": topk,
+            "x64_s": t64, "f32_s": t32,
+        }
+        rows.append(row(
+            f"rank_f32_drift_{fam}", t32 * 1e6,
+            f"top1 drift {top1}/{len(shapes)}, top{TOP_K} {topk}/"
+            f"{len(shapes)}; x64 {t64 * 1e3:.0f}ms vs f32 "
+            f"{t32 * 1e3:.0f}ms"))
+    dump("rank_f32_drift", payload)
+    return rows
+
+
+def main(argv: list[str]) -> int:
+    for r in run():
+        print(f"{r['name']}: {r['derived']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,10 +1,22 @@
-"""Serving-engine benchmark: continuous batching vs the legacy wave loop.
+"""Serving-engine benchmark: chunked admission vs serial slot prefill vs
+the legacy wave loop.
 
-Serves one mixed-budget workload (max_new_tokens drawn from {4, 8, 64} —
-the Racing-to-Idle shape) through both engine modes over the same tiny
-dense LM and reports tokens/s, attributed J/token, slot occupancy, and the
-executed decode-step*slot totals. The JSON artifact
-(artifacts/bench/serving.json) is the regression surface CI uploads.
+Serves one adversarial mixed workload — long prompts queued *ahead of* a
+burst of short ones (the shape that makes serialized slot prefill stall
+TTFT hardest) with mixed decode budgets (the Racing-to-Idle shape) —
+through three engine configurations over the same tiny dense LM:
+
+  * ``wave``: legacy batch-of-waves loop;
+  * ``serial``: continuous batching, PR 4 single-shot slot prefill;
+  * ``chunked``: continuous batching, chunked admission fused into the
+    decode loop (this PR's tentpole).
+
+Reports tokens/s, J/token, slot occupancy, executed step totals, and
+TTFT / queue-time **percentiles** (mean, p50, p95) per mode. The JSON
+artifact (artifacts/bench/serving.json) is the regression surface CI
+uploads; with ``--smoke`` the run exits non-zero if chunked-admission
+mean TTFT regresses past the pinned threshold vs serial admission
+(``SMOKE_TTFT_RATIO_MAX``).
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
 """
@@ -23,7 +35,17 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import dump, row  # noqa: E402
 
-BUDGETS = (4, 8, 64)
+BUDGETS = (4, 8, 32)
+MAX_BATCH = 4
+MAX_LEN = 512
+CHUNK_TOKENS = 64
+SHORT_LEN = (8, 16)       # short-prompt length range (inclusive)
+LONG_LEN = 384            # adversarial long prompt (6 chunk calls)
+
+# CI gate: chunked-admission mean TTFT must stay at or below this
+# fraction of serial-admission mean TTFT on the smoke mix (the tentpole
+# acceptance is >= 2x lower, i.e. ratio <= 0.5)
+SMOKE_TTFT_RATIO_MAX = float(os.environ.get("SMOKE_TTFT_RATIO_MAX", "0.5"))
 
 
 def _build(smoke: bool):
@@ -32,12 +54,15 @@ def _build(smoke: bool):
     from repro.models.config import ModelConfig
     from repro.models.registry import get_model
 
+    # the smoke model must make a long-prompt prefill *compute-bound*
+    # (a stall worth killing), not dispatch-bound, while staying small
+    # enough for CPU CI
     cfg = ModelConfig(
         name="serve-bench", kind="dense",
-        n_layers=2 if smoke else 4,
-        d_model=64 if smoke else 256,
+        n_layers=3 if smoke else 4,
+        d_model=128 if smoke else 256,
         n_heads=4 if smoke else 8, n_kv_heads=2 if smoke else 4,
-        d_ff=128 if smoke else 1024, vocab=256 if smoke else 4096,
+        d_ff=256 if smoke else 1024, vocab=512 if smoke else 4096,
         param_dtype="float32", activation_dtype="float32", remat=False,
     )
     model = get_model(cfg)
@@ -45,34 +70,48 @@ def _build(smoke: bool):
     return cfg, model, params
 
 
-PROMPT_LEN = 16   # fixed so one wave prefill trace serves every wave and
-                  # the warm-up pass can cover both modes' jit shapes
-
-
-def _workload(cfg, n_requests: int, seed: int = 0):
+def _workload(cfg, n_long: int, n_short: int, seed: int = 0):
+    """Long prompts first — the adversarial ordering for serialized
+    admission — then a burst of short prompts with mixed budgets."""
     rng = np.random.default_rng(seed)
-    return [
-        (uid, rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
-         int(rng.choice(BUDGETS)))
-        for uid in range(n_requests)
-    ]
+    reqs = []
+    for uid in range(n_long):
+        reqs.append((uid, rng.integers(0, cfg.vocab, LONG_LEN)
+                     .astype(np.int32), int(rng.choice(BUDGETS))))
+    for uid in range(n_long, n_long + n_short):
+        n = int(rng.integers(SHORT_LEN[0], SHORT_LEN[1] + 1))
+        reqs.append((uid, rng.integers(0, cfg.vocab, n).astype(np.int32),
+                     int(rng.choice(BUDGETS))))
+    return reqs
 
 
-def _serve(cfg, model, params, reqs, mode: str, max_batch: int):
+def _percentiles(values) -> dict:
+    v = np.asarray(sorted(values), np.float64)
+    if len(v) == 0:
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+    return {"mean": float(v.mean()),
+            "p50": float(np.percentile(v, 50)),
+            "p95": float(np.percentile(v, 95))}
+
+
+def _serve(cfg, model, params, reqs, label: str):
     from repro.serving.engine import Request, ServingEngine
 
-    eng = ServingEngine(model, params, cfg, max_batch=max_batch,
-                        max_len=128, mode=mode)
-    # warm-up pass covering every jit shape the timed region traces —
-    # a full wave of PROMPT_LEN prompts (wave prefill (B, S) + decode
-    # (B,)) which in continuous mode also compiles the slot-prefill
-    # bucket and the insert fn — then reset counters so the tok/s
-    # comparison charges compilation to neither mode
-    for i in range(max_batch):
-        eng.submit(Request(uid=10_000 + i,
-                           prompt=np.arange(1, PROMPT_LEN + 1,
-                                            dtype=np.int32),
-                           max_new_tokens=2))
+    mode, admission = {
+        "wave": ("wave", "serial"),
+        "serial": ("continuous", "serial"),
+        "chunked": ("continuous", "chunked"),
+    }[label]
+    eng = ServingEngine(model, params, cfg, max_batch=MAX_BATCH,
+                        max_len=MAX_LEN, mode=mode, admission=admission,
+                        chunk_tokens=CHUNK_TOKENS)
+    # warm-up pass over the identical workload so every jit shape the
+    # timed region traces (wave prefill, slot/chunk buckets, admission
+    # widths, splices, decode) is compiled — then reset counters so the
+    # comparison charges compilation to no mode
+    for uid, prompt, mnt in reqs:
+        eng.submit(Request(uid=100_000 + uid, prompt=prompt.copy(),
+                           max_new_tokens=mnt))
     eng.run_until_empty()
     eng.reset_stats()
     for uid, prompt, mnt in reqs:
@@ -82,10 +121,13 @@ def _serve(cfg, model, params, reqs, mode: str, max_batch: int):
     results = eng.run_until_empty()
     wall = time.perf_counter() - t0
     rep = eng.report()
-    rep["mode"] = mode
+    rep["mode"] = label
     rep["wall_s"] = wall
     rep["tokens_per_s"] = (rep["generated_tokens"] / wall if wall > 0
                            else 0.0)
+    rep["ttft_s"] = _percentiles([r.ttft_s for r in results])
+    rep["ttft_model_s"] = _percentiles([r.ttft_model_s for r in results])
+    rep["queue_s"] = _percentiles([r.queue_s for r in results])
     return results, rep
 
 
@@ -94,46 +136,79 @@ def run(smoke: bool | None = None) -> list[dict]:
         # mirror benchmarks.common.default_n_configs: unset env = full scale
         smoke = int(os.environ.get("BENCH_N_CONFIGS", "16128")) <= 256
     cfg, model, params = _build(smoke)
-    n_requests = 12 if smoke else 24
-    max_batch = 4
-    reqs = _workload(cfg, n_requests)
+    n_long, n_short = (2, 10) if smoke else (4, 20)
+    reqs = _workload(cfg, n_long, n_short)
 
-    res_c, rep_c = _serve(cfg, model, params, reqs, "continuous", max_batch)
-    res_w, rep_w = _serve(cfg, model, params, reqs, "wave", max_batch)
+    out = {}
+    reports = {}
+    for label in ("chunked", "serial", "wave"):
+        out[label], reports[label] = _serve(cfg, model, params, reqs, label)
 
     # identical greedy streams is a hard invariant, not a benchmark stat
-    by_uid = {r.uid: r for r in res_w}
-    for r in res_c:
-        if not np.array_equal(r.tokens, by_uid[r.uid].tokens):
-            raise AssertionError(f"stream mismatch for request {r.uid}")
+    by_uid = {r.uid: r for r in out["wave"]}
+    for label in ("chunked", "serial"):
+        for r in out[label]:
+            if not np.array_equal(r.tokens, by_uid[r.uid].tokens):
+                raise AssertionError(
+                    f"stream mismatch for request {r.uid} ({label})")
 
+    rc, rs, rw = reports["chunked"], reports["serial"], reports["wave"]
+    # the gated ratio uses the *model clock* (predicted step_s of every
+    # dispatched call — deterministic, CI-machine independent); wall-clock
+    # TTFT percentiles are reported alongside for the curious
+    ttft_ratio = (rc["ttft_model_s"]["mean"] / rs["ttft_model_s"]["mean"]
+                  if rs["ttft_model_s"]["mean"] > 0 else 0.0)
+    ttft_wall_ratio = (rc["ttft_s"]["mean"] / rs["ttft_s"]["mean"]
+                       if rs["ttft_s"]["mean"] > 0 else 0.0)
     payload = {
-        "n_requests": n_requests,
-        "max_batch": max_batch,
+        "n_requests": len(reqs),
+        "n_long": n_long,
+        "max_batch": MAX_BATCH,
+        "max_len": MAX_LEN,
+        "chunk_tokens": CHUNK_TOKENS,
         "budgets": list(BUDGETS),
-        "continuous": rep_c,
-        "wave": rep_w,
+        "chunked": rc,
+        "serial": rs,
+        "wave": rw,
+        "ttft_ratio_chunked_vs_serial": ttft_ratio,
+        "ttft_wall_ratio_chunked_vs_serial": ttft_wall_ratio,
+        "ttft_gate_max_ratio": SMOKE_TTFT_RATIO_MAX,
         "slot_step_reduction": (
-            1.0 - rep_c["slot_steps"] / rep_w["slot_steps"]
-            if rep_w["slot_steps"] else 0.0),
+            1.0 - rc["slot_steps"] / rw["slot_steps"]
+            if rw["slot_steps"] else 0.0),
         "j_per_token_reduction": (
-            1.0 - rep_c["j_per_token"] / rep_w["j_per_token"]
-            if rep_w["j_per_token"] else 0.0),
+            1.0 - rc["j_per_token"] / rw["j_per_token"]
+            if rw["j_per_token"] else 0.0),
     }
     dump("serving", payload)
+    run.last_payload = payload
+    # the chunked-mode report is also dumped standalone so CI artifact
+    # diffs of the fused-admission path stay one file
+    dump("serving_chunked", {"workload": payload["n_requests"],
+                             "report": rc})
+    dump("serving_wave", {"workload": payload["n_requests"],
+                          "report": rw})
 
     def derived(rep):
         return (f"tok/s={rep['tokens_per_s']:.0f} "
                 f"J/tok={rep['j_per_token']:.2e} "
                 f"occ={rep['slot_occupancy']:.2f} "
-                f"slot_steps={rep['slot_steps']:.0f}")
+                f"ttft(mean/p50/p95)="
+                f"{rep['ttft_s']['mean'] * 1e3:.1f}/"
+                f"{rep['ttft_s']['p50'] * 1e3:.1f}/"
+                f"{rep['ttft_s']['p95'] * 1e3:.1f}ms "
+                f"model-ttft={rep['ttft_model_s']['mean'] * 1e3:.2f}ms")
 
     return [
-        row("serve_continuous", rep_c["wall_s"] * 1e6, derived(rep_c)),
-        row("serve_wave", rep_w["wall_s"] * 1e6, derived(rep_w)),
-        row("serve_slot_step_reduction", 0.0,
+        row("serve_chunked", rc["wall_s"] * 1e6, derived(rc)),
+        row("serve_serial", rs["wall_s"] * 1e6, derived(rs)),
+        row("serve_wave", rw["wall_s"] * 1e6, derived(rw)),
+        row("serve_ttft_ratio", 0.0,
+            f"chunked/serial mean TTFT ratio={ttft_ratio:.3f} "
+            f"(model clock; wall={ttft_wall_ratio:.3f}; "
+            f"gate <= {SMOKE_TTFT_RATIO_MAX}); "
             f"{100 * payload['slot_step_reduction']:.1f}% fewer "
-            f"decode-step*slots; J/tok "
+            f"decode-step*slots vs wave; J/tok "
             f"-{100 * payload['j_per_token_reduction']:.1f}%"),
     ]
 
@@ -143,6 +218,22 @@ def main(argv: list[str]) -> int:
     rows = run(smoke=smoke or None)
     for r in rows:
         print(f"{r['name']}: {r['derived']}")
+    if smoke:
+        payload = run.last_payload
+        ratio = payload["ttft_ratio_chunked_vs_serial"]
+        if payload["serial"]["ttft_model_s"]["mean"] <= 0.0:
+            # a broken/unavailable energy model zeroes the model clock —
+            # that must fail the gate loudly, not pass it vacuously
+            print("TTFT GATE FAILED: serial model-clock TTFT is 0 "
+                  "(energy model unavailable?) — gate cannot assess")
+            return 1
+        if ratio > SMOKE_TTFT_RATIO_MAX:
+            print(f"TTFT GATE FAILED: chunked/serial mean TTFT ratio "
+                  f"{ratio:.3f} > {SMOKE_TTFT_RATIO_MAX} — chunked "
+                  f"admission has regressed on the prefill-stall mix")
+            return 1
+        print(f"TTFT gate ok: ratio {ratio:.3f} <= "
+              f"{SMOKE_TTFT_RATIO_MAX}")
     return 0
 
 

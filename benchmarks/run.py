@@ -29,7 +29,8 @@ BENCHES = [
     "bench_model_comparison",# Table VI
     "bench_autotune",        # §Abstract 3.2x / 22% claims
     "bench_kernel",          # Pallas kernel micro
-    "bench_serving",         # continuous batching vs wave (tok/s, J/token)
+    "bench_rank_f32",        # f32 vs x64 in-graph ranking winner drift
+    "bench_serving",         # chunked/serial/wave serving (TTFT, J/token)
 ]
 
 

@@ -1,7 +1,9 @@
-"""Serving example: continuous batching with per-request energy accounting
-over a small dense LM (random weights — the point is the serving machinery:
-per-slot prefill-and-insert, mid-decode slot retire/refill, telemetry, and
-the J/token report).
+"""Serving example: continuous batching with chunked admission prefill
+and per-request energy accounting over a small dense LM (random weights —
+the point is the serving machinery: prompts chunk-prefill through the
+decode loop in bucketed lane calls, finished rows splice into decode
+slots, finished slots retire mid-decode and refill, telemetry + J/token
+report).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -29,15 +31,21 @@ def main():
     def submit_all(engine, n_requests=10, seed=0):
         rng = np.random.default_rng(seed)
         for uid in range(n_requests):
-            prompt = rng.integers(0, cfg.vocab, rng.integers(4, 24))
+            # one long prompt up front — the shape that used to stall
+            # every other request behind its serialized prefill
+            n = 96 if uid == 0 else int(rng.integers(4, 24))
+            prompt = rng.integers(0, cfg.vocab, n)
             engine.submit(Request(
                 uid=uid, prompt=prompt.astype(np.int32),
                 # mixed budgets — the shape where continuous batching wins
                 max_new_tokens=int(rng.choice([4, 8, 32]))))
 
-    # continuous mode (the default for attention families): finished slots
-    # retire mid-decode and refill from the queue
-    engine = ServingEngine(model, params, cfg, max_batch=4, max_len=128)
+    # continuous mode (the default for every LM family, SSM included):
+    # prompts chunk-prefill through the decode loop (chunk_tokens per
+    # step, queued admissions batched per call), finished slots retire
+    # mid-decode and refill from the queue
+    engine = ServingEngine(model, params, cfg, max_batch=4, max_len=128,
+                           chunk_tokens=32)
     submit_all(engine)
     t0 = time.perf_counter()
     results = engine.run_until_empty()
@@ -52,7 +60,8 @@ def main():
           f"{rep['generated_tokens']} tokens in {dt:.2f}s | "
           f"occupancy={rep['slot_occupancy']:.2f} "
           f"J/token={rep['j_per_token']:.2e} "
-          f"slot_steps={rep['slot_steps']:.0f}")
+          f"slot_steps={rep['slot_steps']:.0f} "
+          f"chunk_steps={rep['chunk_steps']}")
 
     # same workload through the legacy wave loop: identical greedy streams,
     # strictly more executed decode-step*slots ("Racing to Idle")

@@ -65,6 +65,34 @@ class StepEnergyEstimate:
         return dataclasses.asdict(self)
 
 
+def combine_shape_counts(
+    *maps: Mapping[tuple[int, int, int], float]
+) -> dict[tuple[int, int, int], float]:
+    """Merge GEMM shape->count maps by summing counts — the fleet of a
+    *fused* serving step that issues several sub-steps back-to-back (e.g.
+    one admission-prefill chunk + one lockstep decode)."""
+    out: dict[tuple[int, int, int], float] = {}
+    for m in maps:
+        for shape, w in m.items():
+            out[shape] = out.get(shape, 0.0) + float(w)
+    return out
+
+
+def fused_step_energy(*shape_counts: Mapping[tuple[int, int, int], float],
+                      chip: ChipSpec | str = TPU_V5E,
+                      dtype: str = "bf16",
+                      configs: Mapping[tuple[int, int, int], object]
+                      | None = None,
+                      name: str = "fused_step") -> StepEnergyEstimate:
+    """Price one fused serving step: the union of several sub-step GEMM
+    fleets (decode rows + chunk rows) run back-to-back through one
+    duty-cycle power model, so chunked-admission serving is accounted as
+    a single engine step rather than separately-idling phases."""
+    return gemm_fleet_energy(combine_shape_counts(*shape_counts),
+                             chip=chip, dtype=dtype, configs=configs,
+                             name=name)
+
+
 def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
                       chip: ChipSpec | str = TPU_V5E,
                       dtype: str = "bf16",

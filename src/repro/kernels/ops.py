@@ -101,26 +101,46 @@ def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
     return dict(zip(shapes, best))
 
 
-def prefill_buckets(max_len: int, min_bucket: int = 8) -> list[int]:
-    """Power-of-two row buckets the serving engine pads slot prefills to,
-    so distinct prompt lengths share jit traces and tuned GEMM shapes."""
+SSM_SERVE_GRAIN = 8  # min prefill bucket == SSM serve-scan block (ssm.SERVE_CHUNK)
+
+
+@functools.lru_cache(maxsize=None)
+def prefill_buckets(max_len: int, min_bucket: int = SSM_SERVE_GRAIN
+                    ) -> tuple[int, ...]:
+    """Power-of-two row buckets the serving engine pads prefill chunks to,
+    so distinct prompt/chunk lengths share jit traces and tuned GEMM
+    shapes. Memoized per (max_len, min_bucket): the engine's per-admission
+    bucket lookup bisects this tuple instead of rebuilding a list."""
     buckets, b = [], min_bucket
     while b < max_len:
         buckets.append(b)
         b *= 2
     buckets.append(max_len)
-    return buckets
+    return tuple(buckets)
+
+
+def chunk_buckets(max_len: int, chunk_tokens: int) -> tuple[int, ...]:
+    """The chunk sizes an engine's chunked-admission prefill may trace:
+    the prefill buckets capped at `chunk_tokens` (a prompt longer than the
+    cap is fed through the decode loop `chunk_tokens` tokens per step)."""
+    caps = [b for b in prefill_buckets(max_len) if b <= chunk_tokens]
+    return tuple(caps) if caps else prefill_buckets(max_len)[:1]
 
 
 def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
-                       include_slot_prefill: bool = True
+                       include_slot_prefill: bool = True,
+                       chunk_tokens: int | None = None,
+                       lane_width: int | None = None
                        ) -> list[tuple[int, int, int]]:
     """Every GEMM shape a serving engine will trace: the batched prefill
     (max_batch * max_len rows, LM head over max_batch last positions), the
     lockstep decode step (max_batch rows), and — for continuous batching —
-    each power-of-two slot-prefill bucket (1 row-batch of `bucket` tokens,
-    head over 1 row). Feed to `warm_gemm_cache` so neither the first wave
-    nor the first mid-decode slot refill pays per-shape tuning latency."""
+    the chunked-admission prefill grid: each (admission-width, chunk-
+    bucket) pair the chunk scheduler can issue (pow2 widths up to
+    max_batch x pow2 chunk buckets, LM head over the admission rows), plus
+    the legacy single-slot buckets for `admission="serial"`. Feed to
+    `warm_gemm_cache` so neither the first wave nor the first fused
+    chunk+decode step pays per-shape tuning latency."""
     from repro.models.config import gemm_shape_counts
 
     fleet = set(gemm_shape_counts(cfg, max_batch * max_len,
@@ -129,9 +149,28 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
     fleet |= set(gemm_shape_counts(cfg, max_batch,
                                    kv_rows=max_batch * max_len))
     if include_slot_prefill:
-        for b in prefill_buckets(max_len):
-            fleet |= set(gemm_shape_counts(cfg, b, head_tokens=1,
-                                           kv_rows=max_len))
+        if chunk_tokens is None:
+            # serial admission / legacy callers: single-shot slot prefills
+            # only ever trace width 1
+            widths = {1}
+            chunks = prefill_buckets(max_len)
+        else:
+            # chunked admission rounds the lane up to the next pow2, so
+            # pre-tune the full pow2 ladder through the lane cap
+            cap = lane_width if lane_width is not None else max_batch
+            widths = {1}
+            a = 1
+            while a < cap:
+                a *= 2
+                widths.add(a)
+            chunks = chunk_buckets(max_len, chunk_tokens)
+        for b in set(chunks) | set(prefill_buckets(max_len)):
+            # buckets past the chunk cap are only ever traced by width-1
+            # serial slot prefills — don't pre-tune wide variants of them
+            ws = sorted(widths) if b in chunks else [1]
+            for w in ws:
+                fleet |= set(gemm_shape_counts(cfg, w * b, head_tokens=w,
+                                               kv_rows=w * max_len))
     return sorted(fleet)
 
 

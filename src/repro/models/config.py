@@ -5,6 +5,7 @@ One dataclass, many families. `kind` selects the forward function:
   moe          - dense attention + mixture-of-experts FFN (top-k routing)
   mla_moe      - DeepSeek-V2: multi-head latent attention + shared+routed MoE
   mamba1       - attention-free selective-SSM stack (Falcon-Mamba)
+  mamba2       - attention-free SSD stack (Mamba2 blocks, no shared attn)
   hybrid       - Mamba2 backbone with shared attention blocks (Zamba2)
   encdec       - encoder-decoder with cross attention (Seamless-M4T)
   vlm          - decoder-only with M-RoPE + patch-embedding input (Qwen2-VL)
@@ -15,7 +16,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
-Kind = Literal["dense", "moe", "mla_moe", "mamba1", "hybrid", "encdec", "vlm"]
+Kind = Literal["dense", "moe", "mla_moe", "mamba1", "mamba2", "hybrid",
+               "encdec", "vlm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,11 +87,11 @@ class ModelConfig:
 
     @property
     def attention_free(self) -> bool:
-        return self.kind == "mamba1"
+        return self.kind in ("mamba1", "mamba2")
 
     @property
     def sub_quadratic(self) -> bool:
-        return self.kind in ("mamba1", "hybrid")
+        return self.kind in ("mamba1", "mamba2", "hybrid")
 
     def n_params(self) -> int:
         """Approximate parameter count (for roofline MODEL_FLOPS)."""
@@ -103,6 +105,15 @@ class ModelConfig:
                    + di * (2 * ds + 2) # x_proj(B,C,dt) approx + dt_proj
                    + di * ds + di      # A, D
                    + di * d)           # out_proj
+            return emb + L * per + d
+        if self.kind == "mamba2":
+            di, ds = self.d_inner, self.ssm_state
+            H = di // max(self.ssm_headdim, 1)
+            conv_ch = di + 2 * self.ssm_ngroups * ds
+            per = (d * (2 * di + 2 * self.ssm_ngroups * ds + H)  # in_proj
+                   + conv_ch * (self.d_conv + 1)                 # conv w+b
+                   + 3 * H + di                                  # A/D/dt/norm
+                   + di * d)                                     # out_proj
             return emb + L * per + d
         attn = d * (H * hd) + d * (KV * hd) * 2 + (H * hd) * d
         if self.kind == "mla_moe":
@@ -165,10 +176,11 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
     t = int(n_tokens)
     d, hd, kv = cfg.d_model, cfg.hd, cfg.kv_heads
     L = cfg.n_layers
-    # mamba1 is attention-free (no Q/K/V/O projections at all); hybrid
-    # (Zamba2) runs one shared attention block every attn_every layers,
-    # the backbone being SSM (no ops.matmul work beyond projections)
-    if cfg.kind == "mamba1":
+    # mamba1/mamba2 are attention-free (no Q/K/V/O projections at all);
+    # hybrid (Zamba2) runs one shared attention block every attn_every
+    # layers, the backbone being SSM (no ops.matmul work beyond
+    # projections)
+    if cfg.kind in ("mamba1", "mamba2"):
         attn_layers = 0
     elif cfg.kind == "hybrid":
         attn_layers = max(L // max(cfg.attn_every, 1), 1)
@@ -209,7 +221,7 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
     if cfg.kind == "mamba1":
         add((t, 2 * cfg.d_inner, d), L)              # SSM in_proj
         add((t, d, cfg.d_inner), L)                  # SSM out_proj
-    elif cfg.kind == "hybrid":
+    elif cfg.kind in ("mamba2", "hybrid"):
         # mamba2/SSD in_proj also carries B/C state projections and the
         # per-head dt channel (see ssm.mamba2_block_init)
         di = cfg.d_inner

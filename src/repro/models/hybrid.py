@@ -48,7 +48,8 @@ def hybrid_init(key, cfg: ModelConfig) -> Params:
 
 
 def _hybrid_backbone(params: Params, x: jax.Array, cfg: ModelConfig, *,
-                     positions, cache: dict | None = None, cache_index=None):
+                     positions, cache: dict | None = None, cache_index=None,
+                     seq_lens=None):
     """cache: {"mamba": leaves (G, E, B, ...), "attn": {"k","v"} (G, B, ...)}"""
     shared = params["shared_attn"]
 
@@ -68,12 +69,14 @@ def _hybrid_backbone(params: Params, x: jax.Array, cfg: ModelConfig, *,
             blk, c = xs
             hh, nc, _ = ssm.mamba2_block_apply(blk, hh, cfg,
                                                positions=positions, cache=c,
-                                               cache_index=cache_index)
+                                               cache_index=cache_index,
+                                               seq_lens=seq_lens)
             return hh, nc
         h, new_mamba = jax.lax.scan(inner, h, (mamba_grp, mamba_cache_grp))
         h, new_attn, _ = dense_block_apply(shared, h, cfg, positions=positions,
                                            cache=attn_cache,
-                                           cache_index=cache_index)
+                                           cache_index=cache_index,
+                                           seq_lens=seq_lens)
         return h, (new_mamba, new_attn)
 
     if cfg.remat:
@@ -121,25 +124,69 @@ def hybrid_loss(params: Params, batch: dict, cfg: ModelConfig):
 
 def hybrid_prefill(params: Params, batch: dict, cfg: ModelConfig,
                    max_len: int | None = None):
+    """Serving prefill. ``batch["lengths"]`` selects the right-padded
+    contract (`transformer.lm_prefill`): per-row last-logit gather and a
+    per-row ``index``, with `seq_lens` threaded into the SSD blocks so
+    conv/scan state stops exactly at each row's last valid token — pad
+    rows are bit-invisible even for the recurrent state."""
     tokens = batch["tokens"]
     B, S = tokens.shape
+    lengths = batch.get("lengths")
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     cache = batch.get("cache") or init_hybrid_cache(cfg, B, max_len or S)
     x = params["embed"]["table"][tokens].astype(
         jnp.dtype(cfg.activation_dtype))
+    lens32 = (None if lengths is None
+              else jnp.asarray(lengths, jnp.int32))
     x, cache = _hybrid_backbone(params, x, cfg, positions=positions,
-                                cache=cache, cache_index=jnp.int32(0))
+                                cache=cache, cache_index=jnp.int32(0),
+                                seq_lens=lens32)
     x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     from repro.kernels import ops
-    logits = ops.matmul(x[:, -1:], params["head"]["w"], out_dtype=jnp.float32)
-    return logits[:, 0], {"cache": cache, "index": jnp.int32(S)}
+    if lens32 is None:
+        logits = ops.matmul(x[:, -1:], params["head"]["w"],
+                            out_dtype=jnp.float32)
+        return logits[:, 0], {"cache": cache, "index": jnp.int32(S)}
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to((lens32 - 1)[:, None, None],
+                            (B, 1, x.shape[-1])), axis=1)
+    logits = ops.matmul(last, params["head"]["w"], out_dtype=jnp.float32)
+    return logits[:, 0], {"cache": cache, "index": lens32}
+
+
+def hybrid_prefill_chunk(params: Params, tokens: jax.Array,
+                         lengths: jax.Array, state: dict, cfg: ModelConfig):
+    """One admission-prefill chunk (see `transformer.lm_prefill_chunk`):
+    per-row base offsets in ``state["index"]``, right-padded rows, SSD
+    state carried across chunk boundaries bit-exactly."""
+    B, S = tokens.shape
+    base = jnp.asarray(state["index"], jnp.int32)
+    lens32 = jnp.asarray(lengths, jnp.int32)
+    positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = params["embed"]["table"][tokens].astype(
+        jnp.dtype(cfg.activation_dtype))
+    x, cache = _hybrid_backbone(params, x, cfg, positions=positions,
+                                cache=state["cache"], cache_index=base,
+                                seq_lens=lens32)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    from repro.kernels import ops
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(jnp.maximum(lens32 - 1, 0)[:, None, None],
+                            (B, 1, x.shape[-1])), axis=1)
+    logits = ops.matmul(last, params["head"]["w"], out_dtype=jnp.float32)
+    return logits[:, 0], {"cache": cache, "index": base + lens32}
 
 
 def hybrid_decode_step(params: Params, token: jax.Array, state: dict,
                        cfg: ModelConfig):
+    """One-token decode; ``index`` is a scalar (wave) or (B,) (continuous
+    — each slot at its own position; see `transformer.lm_decode_step`)."""
     B = token.shape[0]
     idx = state["index"]
-    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    if jnp.ndim(idx) == 0:
+        positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.asarray(idx)[:, None].astype(jnp.int32)
     x = params["embed"]["table"][token[:, None]].astype(
         jnp.dtype(cfg.activation_dtype))
     x, cache = _hybrid_backbone(params, x, cfg, positions=positions,

@@ -185,10 +185,20 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
 
 
 def cache_update(cache: jax.Array, update: jax.Array,
-                 index: jax.Array) -> jax.Array:
+                 index: jax.Array,
+                 update_lens: jax.Array | None = None) -> jax.Array:
     """Write `update` (B, S, ...) into `cache` (B, L, ...) at sequence
     position `index` — scalar (all rows at one position) or (B,) (each row
     at its own position; the continuous-batching decode contract).
+
+    `update_lens` (B,), with a per-row `index`, limits each row's write to
+    its first `update_lens[b]` update rows — the chunked-prefill contract.
+    This matters beyond tidiness: `dynamic_update_slice` *clamps*
+    out-of-range starts instead of failing, so an unmasked bucket-padded
+    write whose junk tail crosses the cache end would silently shift the
+    whole window back over valid earlier keys. The masked write merges
+    only valid rows (valid data always fits: index + update_lens <= L),
+    so pad junk can never land in — or displace — the cache.
 
     Literal 0s must match index's dtype: under JAX_ENABLE_X64 they'd
     otherwise promote to int64 next to an int32 index, which
@@ -200,11 +210,33 @@ def cache_update(cache: jax.Array, update: jax.Array,
         starts = (zero, index) + (zero,) * (cache.ndim - 2)
         return jax.lax.dynamic_update_slice(cache, update, starts)
 
-    def row(c, u, i):
-        starts = (i,) + (zero,) * (c.ndim - 1)
-        return jax.lax.dynamic_update_slice(c, u, starts)
+    if update_lens is None:
+        def row(c, u, i):
+            starts = (i,) + (zero,) * (c.ndim - 1)
+            return jax.lax.dynamic_update_slice(c, u, starts)
 
-    return jax.vmap(row)(cache, update, index)
+        return jax.vmap(row)(cache, update, index)
+
+    L, C = cache.shape[1], update.shape[1]
+
+    def row_masked(c, u, i, n):
+        # window start clamped exactly like dynamic_update_slice would;
+        # `shift` realigns update rows to their true positions inside it
+        start = jnp.clip(i, zero, jnp.asarray(max(L - C, 0), index.dtype))
+        shift = i - start
+        pos = jnp.arange(C, dtype=index.dtype)
+        window = jax.lax.dynamic_slice(
+            c, (start,) + (zero,) * (c.ndim - 1),
+            (C,) + c.shape[1:])
+        shifted = jnp.roll(u.astype(c.dtype), shift, axis=0)
+        mask = (pos >= shift) & (pos < shift + n)
+        merged = jnp.where(mask.reshape((C,) + (1,) * (c.ndim - 1)),
+                           shifted, window)
+        return jax.lax.dynamic_update_slice(
+            c, merged, (start,) + (zero,) * (c.ndim - 1))
+
+    return jax.vmap(row_masked)(cache, update, index,
+                                jnp.asarray(update_lens, index.dtype))
 
 
 def attention_apply(
@@ -216,9 +248,14 @@ def attention_apply(
     causal: bool = True,
     kv_cache: dict | None = None,
     cache_index: jax.Array | None = None,
+    seq_lens: jax.Array | None = None,    # per-row valid rows of a chunk
     xa: jax.Array | None = None,          # cross-attention memory
 ) -> tuple[jax.Array, dict | None]:
-    """Standard (GQA) attention with optional KV cache and cross-attention."""
+    """Standard (GQA) attention with optional KV cache and cross-attention.
+
+    `seq_lens` (with a per-row `cache_index`) masks the KV write to each
+    row's valid tokens — the chunked-prefill junk-free write contract
+    (see `cache_update`)."""
     B, S, d = x.shape
     H, KV, hd = config.n_heads, config.kv_heads, config.hd
     from repro.distributed.tp import tp_column, tp_row
@@ -250,8 +287,10 @@ def attention_apply(
         # cache_index is a scalar (whole batch at one position — wave
         # serving) or (B,) (per-slot positions — continuous batching).
         ck, cv = kv_cache["k"], kv_cache["v"]
-        ck = cache_update(ck, k.astype(ck.dtype), cache_index)
-        cv = cache_update(cv, v.astype(cv.dtype), cache_index)
+        ck = cache_update(ck, k.astype(ck.dtype), cache_index,
+                          update_lens=seq_lens)
+        cv = cache_update(cv, v.astype(cv.dtype), cache_index,
+                          update_lens=seq_lens)
         new_cache = {"k": ck, "v": cv}
         # quantized caches (e.g. fp8) convert at read; on TPU the convert
         # fuses into the attention loads
@@ -338,18 +377,22 @@ def state_batch_axes(tree_b1, tree_b2):
     return jax.tree.map(axis, tree_b1, tree_b2)
 
 
-def expand_slot_state(slot_state, axes, n_slots: int):
-    """Zero-initialized batched state of `n_slots` slots with the same
-    structure/dtypes as a single-slot (batch 1) `slot_state`."""
+def take_slot_state(batch_state, axes, slot: jax.Array):
+    """Extract slot `slot` of `batch_state` as a batch-1 state — the
+    inverse of `insert_slot_state` (pure `dynamic_slice` along each leaf's
+    batch axis; `slot` may be traced). The chunked-admission prefill uses
+    it to move a finished admission row into its decode slot."""
+    slot = jnp.asarray(slot)
 
-    def expand(leaf, ax):
+    def take(big, ax):
         if ax < 0:
-            return leaf
-        shape = list(leaf.shape)
-        shape[ax] = n_slots
-        return jnp.zeros(shape, leaf.dtype)
+            return big
+        zero = jnp.zeros((), dtype=slot.dtype)
+        starts = tuple(slot if i == ax else zero for i in range(big.ndim))
+        sizes = tuple(1 if i == ax else d for i, d in enumerate(big.shape))
+        return jax.lax.dynamic_slice(big, starts, sizes)
 
-    return jax.tree.map(expand, slot_state, axes)
+    return jax.tree.map(take, batch_state, axes)
 
 
 def insert_slot_state(batch_state, slot_state, axes, slot: jax.Array):

@@ -279,11 +279,14 @@ def moe_block_init(key, cfg: ModelConfig) -> Params:
 
 
 def moe_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
-                    positions, cache=None, cache_index=None):
+                    positions, cache=None, cache_index=None,
+                    seq_lens=None):
+    # seq_lens masks the chunked KV write to valid rows (clamp-proof
+    # cache_update); MoE routing itself is per-token
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     attn_out, new_cache = L.attention_apply(
         p["attn"], h, cfg, positions=positions, kv_cache=cache,
-        cache_index=cache_index)
+        cache_index=cache_index, seq_lens=seq_lens)
     x = x + attn_out
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     moe_out, aux = moe_ffn(p["moe"], h, cfg)
@@ -316,8 +319,8 @@ def mla_init(key, cfg: ModelConfig) -> Params:
 
 
 def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
-              kv_cache: dict | None = None, cache_index=None
-              ) -> tuple[jax.Array, dict | None]:
+              kv_cache: dict | None = None, cache_index=None,
+              seq_lens=None) -> tuple[jax.Array, dict | None]:
     """Multi-head latent attention. The cache stores the *latent* c_kv
     (rank r) and the shared RoPE key (rank pe) — the MLA memory win."""
     B, S, d = x.shape
@@ -340,10 +343,11 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
         # cache_index: scalar (wave serving) or (B,) per-slot positions
         # (continuous batching) — L.cache_update handles both
         cc = L.cache_update(kv_cache["c_kv"],
-                            c_kv.astype(kv_cache["c_kv"].dtype), cache_index)
+                            c_kv.astype(kv_cache["c_kv"].dtype), cache_index,
+                            update_lens=seq_lens)
         cp = L.cache_update(kv_cache["k_pe"],
                             k_pe[:, :, 0].astype(kv_cache["k_pe"].dtype),
-                            cache_index)
+                            cache_index, update_lens=seq_lens)
         new_cache = {"c_kv": cc, "k_pe": cp}
         c_kv_full, k_pe_full = cc, cp[:, :, None]
         kv_len = cache_index + S
@@ -403,10 +407,11 @@ def mla_moe_block_init(key, cfg: ModelConfig) -> Params:
 
 
 def mla_moe_block_apply(p, x, cfg, *, positions, cache=None,
-                        cache_index=None):
+                        cache_index=None, seq_lens=None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     attn_out, new_cache = mla_apply(p["attn"], h, cfg, positions=positions,
-                                    kv_cache=cache, cache_index=cache_index)
+                                    kv_cache=cache, cache_index=cache_index,
+                                    seq_lens=seq_lens)
     x = x + attn_out
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     moe_out, aux = moe_ffn(p["moe"], h, cfg)

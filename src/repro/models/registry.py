@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable
 
+import jax.numpy as jnp
 
 from repro.models import encdec, hybrid, moe, ssm, vlm
 from repro.models.config import ModelConfig
@@ -27,6 +28,19 @@ class ModelApi:
     prefill: Callable
     decode_step: Callable
     init_cache: Callable | None = None   # (cfg, batch, max_len) -> cache
+    # chunked-admission prefill: (params, tokens (B, C), lengths (B,),
+    # state, cfg) -> (last-valid logits (B, V), state); state carries a
+    # per-row base ``index``. `init_state` builds the zeroed decode-state
+    # pytree the first chunk writes into: (cfg, batch, max_len) -> state.
+    prefill_chunk: Callable | None = None
+    init_state: Callable | None = None
+
+
+def _zero_index_state(init_cache, key: str = "kv"):
+    def init_state(cfg, batch: int, max_len: int):
+        return {key: init_cache(cfg, batch, max_len),
+                "index": jnp.zeros((batch,), jnp.int32)}
+    return init_state
 
 
 # ---- per-family wiring ----
@@ -40,6 +54,10 @@ def _dense_api() -> ModelApi:
         decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
             p, t, s, cfg, tfm.dense_block_apply),
         init_cache=lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml),
+        prefill_chunk=lambda p, t, ln, s, cfg: tfm.lm_prefill_chunk(
+            p, t, ln, s, cfg, tfm.dense_block_apply),
+        init_state=_zero_index_state(
+            lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml)),
     )
 
 
@@ -52,6 +70,10 @@ def _moe_api() -> ModelApi:
         decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
             p, t, s, cfg, moe.moe_block_apply),
         init_cache=lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml),
+        prefill_chunk=lambda p, t, ln, s, cfg: tfm.lm_prefill_chunk(
+            p, t, ln, s, cfg, moe.moe_block_apply),
+        init_state=_zero_index_state(
+            lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml)),
     )
 
 
@@ -75,6 +97,9 @@ def _mla_moe_api() -> ModelApi:
         decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
             p, t, s, cfg, moe.mla_moe_block_apply),
         init_cache=ic,
+        prefill_chunk=lambda p, t, ln, s, cfg: tfm.lm_prefill_chunk(
+            p, t, ln, s, cfg, moe.mla_moe_block_apply),
+        init_state=_zero_index_state(ic),
     )
 
 
@@ -88,6 +113,25 @@ def _mamba1_api() -> ModelApi:
         decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
             p, t, s, cfg, ssm.mamba1_block_apply),
         init_cache=ic,
+        prefill_chunk=lambda p, t, ln, s, cfg: tfm.lm_prefill_chunk(
+            p, t, ln, s, cfg, ssm.mamba1_block_apply),
+        init_state=_zero_index_state(ic),
+    )
+
+
+def _mamba2_api() -> ModelApi:
+    ic = lambda cfg, b, ml: ssm.init_mamba2_cache(cfg, b)
+    return ModelApi(
+        init=lambda key, cfg: tfm.lm_init(key, cfg, ssm.mamba2_block_init),
+        loss=lambda p, b, cfg: tfm.lm_loss(p, b, cfg, ssm.mamba2_block_apply),
+        prefill=lambda p, b, cfg, max_len=None: tfm.lm_prefill(
+            p, _with_cache(b, cfg, ic, max_len), cfg, ssm.mamba2_block_apply),
+        decode_step=lambda p, t, s, cfg: tfm.lm_decode_step(
+            p, t, s, cfg, ssm.mamba2_block_apply),
+        init_cache=ic,
+        prefill_chunk=lambda p, t, ln, s, cfg: tfm.lm_prefill_chunk(
+            p, t, ln, s, cfg, ssm.mamba2_block_apply),
+        init_state=_zero_index_state(ic),
     )
 
 
@@ -98,6 +142,10 @@ def _hybrid_api() -> ModelApi:
         prefill=hybrid.hybrid_prefill,
         decode_step=hybrid.hybrid_decode_step,
         init_cache=lambda cfg, b, ml: hybrid.init_hybrid_cache(cfg, b, ml),
+        prefill_chunk=hybrid.hybrid_prefill_chunk,
+        init_state=_zero_index_state(
+            lambda cfg, b, ml: hybrid.init_hybrid_cache(cfg, b, ml),
+            key="cache"),
     )
 
 
@@ -125,6 +173,7 @@ _FAMILIES: dict[str, Callable[[], ModelApi]] = {
     "moe": _moe_api,
     "mla_moe": _mla_moe_api,
     "mamba1": _mamba1_api,
+    "mamba2": _mamba2_api,
     "hybrid": _hybrid_api,
     "encdec": _encdec_api,
     "vlm": _vlm_api,

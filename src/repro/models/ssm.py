@@ -30,6 +30,18 @@ Params = dict[str, Any]
 
 CHUNK = 128
 
+# Serving-prefill scan block. Chunked admission prefill feeds a prompt
+# through the decode loop in pow2-bucket chunks and must carry the SSM
+# state across chunk boundaries *bit-exactly* (the engine's parity
+# contract). A first-order/SSD scan split at a multiple of its inner block
+# size (with the carried state threaded through) executes the identical
+# op sequence, and identity-padded tails (decay=1 / input=0) are
+# bit-transparent — so every serving-path scan uses this block size, which
+# divides every chunk bucket (`ops.prefill_buckets(min_bucket=8)`), and an
+# unchunked serve prefill is bit-identical to any chunking of it. Training
+# (no cache) keeps the wide CHUNK blocks.
+SERVE_CHUNK = 8
+
 
 # ---------------- causal depthwise conv ----------------
 
@@ -47,6 +59,28 @@ def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
             jnp.float32)
     out = out + b.astype(jnp.float32)
     return out.astype(x.dtype)
+
+
+def conv_history(history: jax.Array, x: jax.Array,
+                 seq_lens: jax.Array) -> jax.Array:
+    """Carried conv state over a right-padded chunk: the last K-1 *valid*
+    inputs per row (pad positions must not enter the next chunk's
+    receptive field). `seq_lens`: (B,) valid token count per row; a row
+    with 0 valid tokens keeps its history unchanged."""
+    Km1 = history.shape[1]
+    xp = jnp.concatenate([history, x], axis=1)          # (B, Km1+S, C)
+    lens = jnp.asarray(seq_lens, jnp.int32)
+
+    def row(xp_b, n):
+        return jax.lax.dynamic_slice_in_dim(xp_b, n, Km1, axis=0)
+
+    return jax.vmap(row)(xp, lens)
+
+
+def _seq_mask(seq_lens, S: int) -> jax.Array:
+    """(B, S) validity mask for right-padded chunk rows."""
+    lens = jnp.asarray(seq_lens, jnp.int32)
+    return jnp.arange(S, dtype=jnp.int32)[None, :] < lens[:, None]
 
 
 # ---------------- first-order recurrence (chunked) ----------------
@@ -70,11 +104,21 @@ def mamba1_scan(decay: jax.Array, inp: jax.Array, C: jax.Array,
                 h0: jax.Array, chunk: int = CHUNK
                 ) -> tuple[jax.Array, jax.Array]:
     """decay/inp: (B, S, di, ds); C: (B, S, ds); h0: (B, di, ds).
-    Returns y: (B, S, di) = C_t . h_t, and final state."""
+    Returns y: (B, S, di) = C_t . h_t, and final state.
+
+    A non-divisible tail is identity-padded (decay=1, input=0) to a
+    multiple of the block size — bit-transparent to the recurrence, so
+    arbitrary lengths scan without changing any real position's value."""
     B, S, di, ds = decay.shape
     q = min(chunk, S)
-    nc = S // q
-    assert S % q == 0, f"seq {S} not divisible by chunk {q}"
+    pad = (-S) % q
+    if pad:
+        decay = jnp.concatenate(
+            [decay, jnp.ones((B, pad, di, ds), decay.dtype)], axis=1)
+        inp = jnp.concatenate(
+            [inp, jnp.zeros((B, pad, di, ds), inp.dtype)], axis=1)
+        C = jnp.concatenate([C, jnp.zeros((B, pad, ds), C.dtype)], axis=1)
+    nc = (S + pad) // q
     dec = decay.reshape(B, nc, q, di, ds).swapaxes(0, 1)   # (nc,B,q,di,ds)
     ip = inp.reshape(B, nc, q, di, ds).swapaxes(0, 1)
     Cm = C.reshape(B, nc, q, ds).swapaxes(0, 1)            # (nc,B,q,ds)
@@ -88,8 +132,8 @@ def mamba1_scan(decay: jax.Array, inp: jax.Array, C: jax.Array,
         return h_last, y
 
     h_final, ys = jax.lax.scan(body, h0, (dec, ip, Cm))
-    y = ys.swapaxes(0, 1).reshape(B, S, di)
-    return y, h_final
+    y = ys.swapaxes(0, 1).reshape(B, S + pad, di)
+    return y[:, :S], h_final
 
 
 # ---------------- Mamba1 block ----------------
@@ -119,8 +163,15 @@ def mamba1_block_init(key, cfg: ModelConfig) -> Params:
 
 
 def _mamba1_core(p: Params, x_conv: jax.Array, cfg: ModelConfig,
-                 h0: jax.Array, *, single_step: bool = False):
-    """x_conv: post-conv activations (B, S, di). Returns (y, h_final)."""
+                 h0: jax.Array, *, single_step: bool = False,
+                 seq_mask: jax.Array | None = None, chunk: int = CHUNK):
+    """x_conv: post-conv activations (B, S, di). Returns (y, h_final).
+
+    `seq_mask` (B, S) marks valid positions of a right-padded chunk: pad
+    steps become the identity update (decay=1, input=0), so the carried
+    state stops exactly at each row's last valid token. `chunk` sets the
+    scan block size (serving paths use SERVE_CHUNK so chunked prefill is
+    bit-identical to an unchunked serve — see SERVE_CHUNK)."""
     s = p["ssm"]
     di, ds = cfg.d_inner, cfg.ssm_state
     r = max(1, cfg.d_model // 16)
@@ -132,20 +183,28 @@ def _mamba1_core(p: Params, x_conv: jax.Array, cfg: ModelConfig,
     decay = jnp.exp(dtv[..., None] * A)                            # (B,S,di,ds)
     xf = x_conv.astype(jnp.float32)
     inp = (dtv * xf)[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    if seq_mask is not None:
+        decay = jnp.where(seq_mask[..., None, None], decay, 1.0)
+        inp = jnp.where(seq_mask[..., None, None], inp, 0.0)
     if single_step:
         h = decay[:, 0] * h0 + inp[:, 0]                           # (B,di,ds)
         y = jnp.einsum("bds,bs->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
         h_final = h
     else:
-        y, h_final = mamba1_scan(decay, inp, Cm.astype(jnp.float32), h0)
+        y, h_final = mamba1_scan(decay, inp, Cm.astype(jnp.float32), h0,
+                                 chunk=chunk)
     y = y + s["D"].astype(jnp.float32) * xf
     return y, h_final
 
 
 def mamba1_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                        positions=None, cache: dict | None = None,
-                       cache_index=None):
-    """cache: {"conv": (B, K-1, di), "ssm": (B, di, ds)} or None."""
+                       cache_index=None, seq_lens=None):
+    """cache: {"conv": (B, K-1, di), "ssm": (B, di, ds)} or None.
+
+    `seq_lens` (B,) marks each row's valid token count in a right-padded
+    prefill chunk: conv history and SSM state advance only over valid
+    positions (the chunked-admission contract)."""
     B, S, d = x.shape
     di = cfg.d_inner
     s = p["ssm"]
@@ -157,11 +216,17 @@ def mamba1_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     new_cache = None
     if cache is not None:
         x_conv = causal_conv(x_, s["conv_w"], s["conv_b"], cache["conv"])
-        hist = jnp.concatenate([cache["conv"], x_], axis=1)[:, -(cfg.d_conv - 1):]
+        if seq_lens is None:
+            hist = jnp.concatenate([cache["conv"], x_],
+                                   axis=1)[:, -(cfg.d_conv - 1):]
+        else:
+            hist = conv_history(cache["conv"], x_, seq_lens)
         x_conv = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
-        y, h_final = _mamba1_core(p, x_conv, cfg,
-                                  cache["ssm"].astype(jnp.float32),
-                                  single_step=(S == 1))
+        y, h_final = _mamba1_core(
+            p, x_conv, cfg, cache["ssm"].astype(jnp.float32),
+            single_step=(S == 1),
+            seq_mask=None if seq_lens is None else _seq_mask(seq_lens, S),
+            chunk=SERVE_CHUNK)
         new_cache = {"conv": hist.astype(cache["conv"].dtype),
                      "ssm": h_final.astype(cache["ssm"].dtype)}
     else:
@@ -225,8 +290,19 @@ def ssd_scan(x: jax.Array, a_log: jax.Array, Bm: jax.Array, Cm: jax.Array,
     Bsz, S, H, P_ = x.shape
     N = Bm.shape[-1]
     q = min(chunk, S)
-    nc = S // q
-    assert S % q == 0
+    pad = (-S) % q
+    if pad:
+        # identity tail: zero input/B kills state updates, zero log-decay
+        # keeps the carried state — bit-transparent to real positions
+        x = jnp.concatenate(
+            [x, jnp.zeros((Bsz, pad, H, P_), x.dtype)], axis=1)
+        a_log = jnp.concatenate(
+            [a_log, jnp.zeros((Bsz, pad, H), a_log.dtype)], axis=1)
+        Bm = jnp.concatenate(
+            [Bm, jnp.zeros((Bsz, pad, N), Bm.dtype)], axis=1)
+        Cm = jnp.concatenate(
+            [Cm, jnp.zeros((Bsz, pad, N), Cm.dtype)], axis=1)
+    nc = (S + pad) // q
     xr = x.reshape(Bsz, nc, q, H, P_).swapaxes(0, 1)
     ar = a_log.reshape(Bsz, nc, q, H).swapaxes(0, 1)
     Br = Bm.reshape(Bsz, nc, q, N).swapaxes(0, 1)
@@ -251,8 +327,8 @@ def ssd_scan(x: jax.Array, a_log: jax.Array, Bm: jax.Array, Cm: jax.Array,
         return h_next, y_intra + y_inter
 
     h_final, ys = jax.lax.scan(body, h0, (xr, ar, Br, Cr))
-    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P_)
-    return y, h_final
+    y = ys.swapaxes(0, 1).reshape(Bsz, S + pad, H, P_)
+    return y[:, :S], h_final
 
 
 def _mamba2_split(cfg: ModelConfig, proj: jax.Array):
@@ -264,8 +340,13 @@ def _mamba2_split(cfg: ModelConfig, proj: jax.Array):
 
 def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                        positions=None, cache: dict | None = None,
-                       cache_index=None):
-    """cache: {"conv": (B, K-1, conv_ch), "ssm": (B, H, N, P)}."""
+                       cache_index=None, seq_lens=None):
+    """cache: {"conv": (B, K-1, conv_ch), "ssm": (B, H, N, P)}.
+
+    `seq_lens` (B,) marks each row's valid token count in a right-padded
+    prefill chunk: conv history and SSD state advance only over valid
+    positions (pad steps carry zero input/B and zero log-decay — the
+    identity update)."""
     B, S, d = x.shape
     di, ds, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
     P_ = cfg.ssm_headdim
@@ -280,7 +361,11 @@ def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     if cache is not None:
         conv_hist = cache["conv"]
         xBC_c = causal_conv(xBC, s["conv_w"], s["conv_b"], conv_hist)
-        hist = jnp.concatenate([conv_hist, xBC], axis=1)[:, -(cfg.d_conv - 1):]
+        if seq_lens is None:
+            hist = jnp.concatenate([conv_hist, xBC],
+                                   axis=1)[:, -(cfg.d_conv - 1):]
+        else:
+            hist = conv_history(conv_hist, xBC, seq_lens)
     else:
         xBC_c = causal_conv(xBC, s["conv_w"], s["conv_b"])
         hist = None
@@ -291,20 +376,27 @@ def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                           + s["dt_bias"].astype(jnp.float32))    # (B,S,H)
     a_log = -jnp.exp(s["A_log"].astype(jnp.float32)) * dtv        # (B,S,H)
     x_dt = xs.astype(jnp.float32) * dtv[..., None]
+    Bm_f = Bm.astype(jnp.float32)
+    if seq_lens is not None:
+        mask = _seq_mask(seq_lens, S)
+        a_log = jnp.where(mask[..., None], a_log, 0.0)
+        x_dt = jnp.where(mask[..., None, None], x_dt, 0.0)
+        Bm_f = jnp.where(mask[..., None], Bm_f, 0.0)
 
     h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
           else jnp.zeros((B, H, ds, P_), jnp.float32))
     if cache is not None and S == 1:
         decay = jnp.exp(a_log[:, 0])                              # (B,H)
-        upd = jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
-                         x_dt[:, 0])
+        upd = jnp.einsum("bn,bhp->bhnp", Bm_f[:, 0], x_dt[:, 0])
         h1 = decay[:, :, None, None] * h0 + upd
         y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h1)
         y = y[:, None]                                            # (B,1,H,P)
         h_final = h1
     else:
-        y, h_final = ssd_scan(x_dt, a_log, Bm.astype(jnp.float32),
-                              Cm.astype(jnp.float32), h0)
+        y, h_final = ssd_scan(x_dt, a_log, Bm_f,
+                              Cm.astype(jnp.float32), h0,
+                              chunk=SERVE_CHUNK if cache is not None
+                              else CHUNK)
     if cache is not None:
         new_cache = {"conv": hist.astype(cache["conv"].dtype),
                      "ssm": h_final.astype(cache["ssm"].dtype)}

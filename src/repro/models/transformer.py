@@ -46,8 +46,14 @@ def residual_spec(cfg: ModelConfig, x: jax.Array) -> tuple:
 
 def dense_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
                       positions: jax.Array, cache: dict | None = None,
-                      cache_index=None):
+                      cache_index=None, seq_lens=None):
     """Uniform block API across families: returns (x, cache, aux_loss).
+
+    `seq_lens` (the per-row valid-token counts of a right-padded prefill
+    chunk) masks the chunked KV write to valid rows (`cache_update`
+    clamp-proofing); masking beyond that is unnecessary here — with
+    causal attention + per-row cache indices, right-pad rows are already
+    invisible to every real query.
 
     With sequence parallelism the canonical Megatron-SP structure applies:
     the residual stream and norms stay seq-sharded over TP; activations are
@@ -61,7 +67,7 @@ def dense_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
         h = shard_activation(h, "batch", None, None)   # all-gather point
     attn_out, new_cache = L.attention_apply(
         p["attn"], h, cfg, positions=positions, kv_cache=cache,
-        cache_index=cache_index)
+        cache_index=cache_index, seq_lens=seq_lens)
     if sp:
         attn_out = shard_activation(attn_out, *rs)     # reduce-scatter point
     x = x + attn_out
@@ -179,9 +185,11 @@ def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
       ``index = lengths``. Right-padding is causal-safe — pad keys sit
       after every valid query, so no real token ever attends to padding,
       and decode overwrites pad cache rows before its per-row ``kv_len``
-      mask can reach them. A padded row is therefore bit-identical to the
-      same prompt served unpadded (the continuous-batching slot-prefill
-      contract).
+      mask can reach them. SSM blocks additionally receive the lengths as
+      `seq_lens`, so conv/scan state stops exactly at each row's last
+      valid token. A padded row is therefore bit-identical to the same
+      prompt served unpadded (the continuous-batching slot-prefill
+      contract), for attention and recurrent families alike.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -197,7 +205,15 @@ def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
     # the launcher's explicit in_shardings (see launch/dryrun.py)
     cache = jax.tree.map(lambda c: shard_activation(c, None, "batch"), cache)
     x = _embed(params, tokens, cfg)
-    x, cache, _ = _scan_blocks(params, x, cfg, block_apply,
+    if lengths is not None:
+        lens32 = jnp.asarray(lengths, jnp.int32)
+
+        def ba(bp, h, c, **kw):
+            return block_apply(bp, h, c, seq_lens=lens32, **kw)
+    else:
+        ba = block_apply
+
+    x, cache, _ = _scan_blocks(params, x, cfg, ba,
                                positions=positions, cache=cache,
                                cache_index=jnp.int32(0))
     x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
@@ -210,6 +226,48 @@ def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
                             (B, 1, x.shape[-1])), axis=1)
     logits = _unembed(params, last, cfg)
     return logits[:, 0], {"kv": cache, "index": lengths}
+
+
+def lm_prefill_chunk(params: Params, tokens: jax.Array, lengths: jax.Array,
+                     state: dict, cfg: ModelConfig,
+                     block_apply: Callable = dense_block_apply
+                     ) -> tuple[jax.Array, dict]:
+    """One admission-prefill chunk, fused into the serving loop.
+
+    tokens: (B, S) — each row's next `lengths[b]` prompt tokens, right-
+    padded to the shared chunk bucket S; state: {"kv", "index"} with a
+    per-row ``index`` holding each row's chunk base offset (tokens already
+    written; 0 on the first chunk). KV rows are written at
+    ``index[b] .. index[b]+S`` (`layers.cache_update` per-row contract),
+    attention masks use the per-row base as ``q_offset``, and SSM blocks
+    receive `seq_lens` so conv/scan state advances only over valid
+    positions. Returns each row's logits at its last valid position
+    (meaningful on a row's final chunk) and the advanced state
+    (``index + lengths``).
+
+    A prompt prefilled in chunks is bit-identical to `lm_prefill` over the
+    whole (bucketed) prompt: attention reads the same cache with the same
+    masks, and the SSM serve-scan block size divides every chunk bucket
+    (see `ssm.SERVE_CHUNK`).
+    """
+    B, S = tokens.shape
+    base = jnp.asarray(state["index"], jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = _embed(params, tokens, cfg)
+
+    def chunk_block(bp, h, c, **kw):
+        return block_apply(bp, h, c, seq_lens=lengths, **kw)
+
+    x, cache, _ = _scan_blocks(params, x, cfg, chunk_block,
+                               positions=positions, cache=state["kv"],
+                               cache_index=base)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, jnp.broadcast_to(jnp.maximum(lengths - 1, 0)[:, None, None],
+                            (B, 1, x.shape[-1])), axis=1)
+    logits = _unembed(params, last, cfg)
+    return logits[:, 0], {"kv": cache, "index": base + lengths}
 
 
 def lm_decode_step(params: Params, token: jax.Array, state: dict,

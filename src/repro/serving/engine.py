@@ -1,22 +1,32 @@
-"""Continuous-batching serving engine with per-request energy accounting.
+"""Continuous-batching serving engine with chunked admission prefill and
+per-request energy accounting.
 
-The engine keeps one batched decode state of ``max_batch`` fixed slots. A
-request is prefilled *alone* (batch 1, right-padded to a power-of-two
-bucket so prompt lengths share jit traces) and spliced into a free slot of
-the batched state mid-decode (`layers.insert_slot_state` — pure
-`dynamic_update_slice` surgery over the decode-state pytree). The jitted
-decode step therefore always runs at full static shape, but a finished
-slot is retired the step it finishes and immediately refilled from the
-queue — no slot ever burns decode steps on a dead request, the
-"Racing to Idle" energy waste the paper's energy axis quantifies.
+The engine keeps one batched decode state of ``max_batch`` fixed slots.
+Admission is **chunked and fused into the decode loop**: queued prompts
+are split into power-of-two chunk buckets (`ops.chunk_buckets`) and every
+engine step processes one chunk call over the whole *admission lane* — a
+compact pow2-width batch of all in-flight admissions — alongside the
+lockstep decode step of the resident slots. A long prompt therefore never
+stops the world (resident slots keep generating between its chunks), and
+queued short prompts prefill together in one bucketed call instead of N
+serial traces — the TTFT stall under load that serialized slot prefill
+produced. KV rows are written at per-row cache offsets (chunk base +
+row index — `layers.cache_update` / `attention_mask` per-row contract),
+and SSM/SSD conv+scan state is carried across chunk boundaries
+bit-exactly (`ssm.SERVE_CHUNK`), which promotes mamba1/mamba2/hybrid out
+of the wave-mode fallback. A finished admission row is spliced into its
+reserved decode slot (`layers.take_slot_state` + `insert_slot_state`).
 
-Each request carries telemetry (queue time, TTFT, resident decode steps,
-tokens/s) and an energy estimate: the engine prices one decode step of the
-whole batch (and each prefill bucket) via `core.energy.gemm_fleet_energy`
-— the pretuned GEMM fleet's predicted runtimes under the duty-cycle power
-model — and attributes each resident step's 1/max_batch share to the
-request occupying the slot. `report()` aggregates tokens/s, J/token and
-slot occupancy for benchmarks to regress.
+Bit parity is the hard contract: a prompt prefilled in chunks produces
+the identical greedy stream to a single-shot prefill
+(``admission="serial"``, the PR 4 path, kept as a baseline) and to the
+wave loop. Each request carries telemetry (queue time, TTFT, resident
+decode steps, tokens/s) and an energy estimate: the engine prices each
+chunk call and each decode step via `core.energy.gemm_fleet_energy` (a
+fused engine step is decode rows + chunk rows —
+`core.energy.fused_step_energy` combines the fleets) and attributes each
+call's per-row share to the occupying request. `report()` aggregates
+tokens/s, J/token and slot occupancy for benchmarks to regress.
 
 The legacy wave API (`run_wave`) remains as a compatibility shim: one
 batched right-padded prefill, lockstep decode until every request in the
@@ -28,6 +38,7 @@ modes.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from collections import deque
@@ -38,14 +49,16 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 
-# families whose decode state supports per-row indices + slot surgery
-# (attention KV caches; SSM/hybrid/encdec states thread a shared scalar
-# position and are served in wave mode). MoE families note: rows are
-# batch-independent — and continuous/wave token streams bit-identical —
-# only while expert capacity doesn't bind (capacity-factor token dropping
-# is first-come-first-served across the flattened batch); serve MoE with a
-# capacity_factor sized for the decode batch.
-CONTINUOUS_KINDS = ("dense", "moe", "mla_moe")
+# families whose decode state supports per-row indices + slot surgery and
+# whose prefill honors the right-padded `lengths` contract (attention KV
+# caches via per-row cache_update/attention_mask; SSM/SSD state via
+# seq_lens pad-skipping — encdec/vlm thread extra inputs and are served in
+# wave mode). MoE families note: rows are batch-independent — and
+# continuous/wave token streams bit-identical — only while expert capacity
+# doesn't bind (capacity-factor token dropping is first-come-first-served
+# across the flattened batch); serve MoE with a capacity_factor sized for
+# the decode batch.
+CONTINUOUS_KINDS = ("dense", "moe", "mla_moe", "mamba1", "mamba2", "hybrid")
 
 
 @dataclasses.dataclass
@@ -55,6 +68,7 @@ class Request:
     max_new_tokens: int = 32
     eos_id: int | None = None
     submit_s: float = 0.0       # stamped by ServingEngine.submit
+    submit_model_s: float = 0.0  # engine model-clock at submission
 
 
 @dataclasses.dataclass
@@ -66,6 +80,7 @@ class Result:
     n_tokens: int = 0           # generated-token count (energy denominator)
     queue_s: float = 0.0        # submit -> prefill start
     ttft_s: float = 0.0         # submit -> first token
+    ttft_model_s: float = 0.0   # submit -> first token, model clock
     decode_s: float = 0.0       # first token -> last token
     tokens_per_s: float = 0.0
     energy_j: float = 0.0       # attributed prefill + resident-step energy
@@ -79,8 +94,27 @@ class _Slot:
     prefill_energy_j: float
     t_start: float              # prefill start (wall)
     t_first: float              # first-token time (wall)
+    t_first_model: float = 0.0  # first-token time (model clock)
     steps: int = 0              # resident decode iterations so far
     rng: np.random.Generator | None = None   # per-request sampling stream
+
+
+@dataclasses.dataclass
+class _Admission:
+    """A request mid-chunked-prefill: `row` in the admission-lane state,
+    `base` prompt tokens written. Admission is decoupled from decode-slot
+    availability: the first token is sampled when the last chunk lands
+    (TTFT is lane-bound, not slot-bound), after which the finished row
+    *parks* in the lane (`ready`/`first_tok`) until a decode slot frees
+    and it is spliced in."""
+    req: Request
+    row: int = -1
+    base: int = 0
+    chunk_energy_j: float = 0.0
+    t_start: float = 0.0        # first chunk dispatch (wall)
+    rng: np.random.Generator | None = None
+    ready: "_Slot | None" = None  # prefilled + first token sampled
+    first_tok: int = 0
 
 
 class ServingEngine:
@@ -88,6 +122,7 @@ class ServingEngine:
                  max_batch: int = 8, max_len: int = 512,
                  greedy: bool = True, seed: int = 0,
                  mode: str = "auto",
+                 admission: str = "chunked", chunk_tokens: int = 64,
                  pretune: bool = False, tune_objective: str = "runtime",
                  tune_rank_mode: str = "auto",
                  chip: str | None = None):
@@ -96,17 +131,27 @@ class ServingEngine:
         "auto" (continuous for the families that support per-slot decode
         state — see CONTINUOUS_KINDS — wave otherwise).
 
+        `admission` picks how continuous mode prefills: "chunked"
+        (default — prompts feed through the decode loop `chunk_tokens`
+        tokens per engine step, queued admissions batched into one
+        bucketed call) or "serial" (the PR 4 baseline: each request
+        prefills alone in one single-shot call, stalling the loop for the
+        whole prompt). Both produce bit-identical token streams.
+
         `pretune=True` batch-tunes the engine's GEMM fleet up front:
         every projection/FFN/head shape the batched prefill (max_batch *
         max_len rows), the decode step (max_batch rows), and each
-        slot-prefill bucket will trace goes through one
-        `ops.warm_gemm_cache` pass (predictor-ranked, substrate-verified,
-        cached per chip + artifact version), so the first request pays no
-        per-shape autotuning. `tune_objective` picks the paper's serving
-        objective ("runtime", "energy", "power", "edp"); `tune_rank_mode`
-        picks the candidate-ranking path ("auto" ranks fully in-graph on
-        accelerator backends, at trace time on CPU).
+        (admission-width x chunk-bucket) chunk call will trace goes
+        through one `ops.warm_gemm_cache` pass (predictor-ranked,
+        substrate-verified, cached per chip + artifact version), so the
+        first request pays no per-shape autotuning. `tune_objective`
+        picks the paper's serving objective ("runtime", "energy",
+        "power", "edp"); `tune_rank_mode` picks the candidate-ranking
+        path ("auto" ranks fully in-graph on accelerator backends, at
+        trace time on CPU).
         """
+        from repro.kernels import ops
+
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -115,7 +160,31 @@ class ServingEngine:
         self.greedy = greedy
         if mode not in ("auto", "continuous", "wave"):
             raise ValueError(f"unknown serving mode {mode!r}")
+        if admission not in ("chunked", "serial"):
+            raise ValueError(f"unknown admission mode {admission!r}")
         self.mode = mode
+        self.admission = admission
+        if (admission == "chunked" and chunk_tokens < max_len
+                and chunk_tokens % ops.SSM_SERVE_GRAIN):
+            # chunk boundaries must stay multiples of the SSM serve-scan
+            # block or chunked prefill loses bit parity for SSM families
+            raise ValueError(
+                f"chunk_tokens={chunk_tokens} must be a multiple of "
+                f"{ops.SSM_SERVE_GRAIN} (or >= max_len)")
+        if (admission == "chunked" and cfg.sub_quadratic
+                and cfg.attention_free and max_len < ops.SSM_SERVE_GRAIN):
+            # attention-free prompts may exceed max_len (multi-chunk), and
+            # non-final chunk boundaries then need an SSM-grain-aligned
+            # bucket, which a sub-grain bucket ladder cannot provide
+            raise ValueError(
+                f"max_len={max_len} < {ops.SSM_SERVE_GRAIN} cannot serve "
+                f"chunked SSM prefill; raise max_len or use wave mode")
+        self.chunk_tokens = chunk_tokens
+        # admission-lane capacity: prefill (and first-token sampling) for
+        # up to this many in-flight requests is decoupled from decode-slot
+        # availability — finished admissions park in the lane until a slot
+        # frees, so TTFT under a burst is lane-bound, not retirement-bound
+        self.lane_width = 2 * max_batch
         self.queue: deque[Request] = deque()
         self.seed = seed
         if chip is not None:
@@ -127,11 +196,13 @@ class ServingEngine:
         self.chip = chip
         self.pretuned: dict[tuple, object] = {}
         if pretune:
-            from repro.kernels import ops
-
             fleet = ops.serving_gemm_fleet(
                 cfg, max_batch=max_batch, max_len=max_len,
-                include_slot_prefill=self._continuous_supported())
+                include_slot_prefill=self._continuous_supported(),
+                chunk_tokens=(chunk_tokens if admission == "chunked"
+                              else None),
+                lane_width=(self.lane_width if admission == "chunked"
+                            else None))
             self.pretuned = ops.warm_gemm_cache(
                 fleet, dtype=cfg.activation_dtype,
                 objective=tune_objective, chip=chip,
@@ -157,15 +228,29 @@ class ServingEngine:
                 stacklevel=2)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg, max_len=max_len))
+        # decode/chunk/splice rebind their state output over the input:
+        # donating the input state lets XLA update the KV caches in place
+        # instead of copying the whole decode state every step
         self._decode = jax.jit(
-            lambda p, t, s: model.decode_step(p, t, s, cfg))
-        self._insert_fn = None          # built lazily with the axes spec
+            lambda p, t, s: model.decode_step(p, t, s, cfg),
+            donate_argnums=(2,))
+        self._chunk = (jax.jit(
+            lambda p, t, ln, s: model.prefill_chunk(p, t, ln, s, cfg),
+            donate_argnums=(3,))
+            if model.prefill_chunk is not None else None)
+        self._splice_fn = None          # built lazily with the axes spec
         self._state_axes = None
-        self._step_energy_cache: dict[str | int, object] = {}
+        # model clock: predicted seconds of dispatched engine calls (the
+        # analytical GEMM model's step_s), advanced per prefill/chunk/
+        # decode call. TTFT measured against it is deterministic and
+        # hardware-independent — the regression surface CI gates on.
+        self._clock = 0.0
+        self._step_energy_cache: dict[tuple | str | int, object] = {}
         # engine-level counters (reset per run_* call family, reported
         # cumulatively)
         self._stats = {
-            "decode_steps": 0, "resident_slot_steps": 0.0,
+            "decode_steps": 0, "chunk_steps": 0,
+            "resident_slot_steps": 0.0,
             "slot_steps": 0.0, "generated_tokens": 0, "energy_j": 0.0,
             "idle_energy_j": 0.0, "requests": 0, "wall_s": 0.0,
         }
@@ -182,6 +267,7 @@ class ServingEngine:
                 f"max_len={self.max_len} (need >= 1 decode position)")
         if req.submit_s == 0.0:
             req.submit_s = time.perf_counter()
+        req.submit_model_s = self._clock
         self.queue.append(req)
 
     # ------------------------------------------------------------------
@@ -199,8 +285,7 @@ class ServingEngine:
         """Next token per row. Greedy is a single vectorized argmax.
         Non-greedy draws a per-request Gumbel-max (`_req_rng` streams;
         `rngs[b] is None` marks a finished/dead row) — dead slots neither
-        advance any RNG nor influence live rows, and the old per-row
-        O(B*V)-work `np.random.choice` probability loop is gone."""
+        advance any RNG nor influence live rows."""
         if self.greedy:
             return logits.argmax(-1).astype(np.int32)
         out = np.zeros(logits.shape[0], np.int32)
@@ -217,9 +302,9 @@ class ServingEngine:
     def _step_energy(self, key, n_rows: int, head_rows: int | None = None,
                      batch_rows: int | None = None):
         """Predicted StepEnergyEstimate for a step over `n_rows` GEMM rows
-        (decode: max_batch; prefill: padded token count, with the LM head
-        sized to the rows actually unembedded and MLA's cache-wide K/V
-        decompression sized to batch_rows * max_len), cached per key.
+        (decode: max_batch; prefill/chunk: padded token count, with the LM
+        head sized to the rows actually unembedded and MLA's cache-wide
+        K/V decompression sized to batch_rows * max_len), cached per key.
         Returns None (once, with a warning) when the energy model is
         unavailable."""
         hit = self._step_energy_cache.get(key, "miss")
@@ -249,38 +334,89 @@ class ServingEngine:
         self._step_energy_cache[key] = est
         return est
 
-    def _decode_energy_j(self) -> float:
-        est = self._step_energy(("decode", self.max_batch), self.max_batch,
-                                batch_rows=self.max_batch)
-        return est.energy_j if est is not None else 0.0
+    @staticmethod
+    def _cost(est) -> tuple[float, float]:
+        return (est.energy_j, est.step_s) if est is not None else (0.0, 0.0)
 
-    def _prefill_energy_j(self, n_tokens: int, head_rows: int) -> float:
-        """Energy of one prefill over `n_tokens` padded rows unembedding
-        `head_rows` last positions (1 for slot prefill, B for a wave).
-        `head_rows` is also the prefill's batch-row count, which sizes
-        MLA's cache-wide decompression."""
-        est = self._step_energy(("prefill", int(n_tokens), int(head_rows)),
-                                int(n_tokens), int(head_rows),
-                                batch_rows=int(head_rows))
-        return est.energy_j if est is not None else 0.0
+    def _decode_cost(self) -> tuple[float, float]:
+        """(energy_j, predicted step_s) of one lockstep decode step."""
+        return self._cost(self._step_energy(
+            ("decode", self.max_batch), self.max_batch,
+            batch_rows=self.max_batch))
+
+    def _prefill_cost(self, n_tokens: int, head_rows: int
+                      ) -> tuple[float, float]:
+        """(energy_j, step_s) of one prefill over `n_tokens` padded rows
+        unembedding `head_rows` last positions (1 for slot prefill, B for
+        a wave). `head_rows` is also the prefill's batch-row count, which
+        sizes MLA's cache-wide decompression."""
+        return self._cost(self._step_energy(
+            ("prefill", int(n_tokens), int(head_rows)),
+            int(n_tokens), int(head_rows), batch_rows=int(head_rows)))
+
+    def _chunk_cost(self, width: int, chunk: int) -> tuple[float, float]:
+        """(energy_j, step_s) of one admission chunk call: `width` lane
+        rows of `chunk` tokens, LM head over the last-valid positions."""
+        return self._cost(self._step_energy(
+            ("chunk", int(width), int(chunk)),
+            int(width * chunk), int(width), batch_rows=int(width)))
+
+    def fused_step_estimate(self, width: int, chunk: int):
+        """Predicted cost of one *fused* engine step — the decode fleet
+        (max_batch rows) plus one chunk call's fleet (`width` x `chunk`
+        rows) priced through a single duty-cycle power model
+        (`core.energy.fused_step_energy`)."""
+        from repro.core.energy import fused_step_energy
+        from repro.models.config import gemm_shape_counts
+
+        decode = gemm_shape_counts(self.cfg, self.max_batch,
+                                   kv_rows=self.max_batch * self.max_len)
+        ch = gemm_shape_counts(self.cfg, width * chunk, head_tokens=width,
+                               kv_rows=width * self.max_len)
+        return fused_step_energy(
+            decode, ch, chip=self.chip or "tpu_v5e",
+            dtype=self.cfg.activation_dtype,
+            configs=self.pretuned or None,
+            name=f"{self.cfg.name}:fused:{width}x{chunk}")
 
     # ------------------------------------------------------------------
     # continuous batching
     # ------------------------------------------------------------------
     def _continuous_supported(self) -> bool:
-        return (self.cfg.kind in CONTINUOUS_KINDS
-                and self.model.init_cache is not None)
+        if self.cfg.kind not in CONTINUOUS_KINDS:
+            return False
+        if self.admission == "chunked":
+            return (self.model.prefill_chunk is not None
+                    and self.model.init_state is not None)
+        return (self.model.init_cache is not None
+                and self.model.init_state is not None)
 
     def _bucket(self, n: int) -> int:
-        """Smallest slot-prefill bucket holding `n` prompt tokens — the
-        same `ops.prefill_buckets` list `serving_gemm_fleet` pre-tunes, so
-        slot prefills only ever trace pre-warmed shapes."""
+        """Smallest prefill bucket holding `n` prompt tokens — a bisect
+        over the memoized `ops.prefill_buckets` tuple (the same list
+        `serving_gemm_fleet` pre-tunes, so prefills only ever trace
+        pre-warmed shapes). Attention-free prompts may exceed max_len;
+        the bucket ladder keeps doubling past it."""
         from repro.kernels import ops
 
-        for b in ops.prefill_buckets(self.max_len):
-            if b >= n:
-                return b
-        return self.max_len
+        buckets = ops.prefill_buckets(self.max_len)
+        i = bisect.bisect_left(buckets, n)
+        if i < len(buckets):
+            return buckets[i]
+        b = buckets[-1]
+        while b < n:
+            b *= 2
+        return b
+
+    def _chunk_bucket(self, n: int) -> int:
+        """Smallest chunk bucket holding `n` remaining prompt tokens,
+        capped at `chunk_tokens` (longer remainders feed through the
+        decode loop one chunk per step)."""
+        from repro.kernels import ops
+
+        buckets = ops.chunk_buckets(self.max_len, self.chunk_tokens)
+        i = bisect.bisect_left(buckets, n)
+        return buckets[min(i, len(buckets) - 1)]
 
     def _budget(self, req: Request) -> int:
         """Effective token budget: >= 1, bounded by KV-cache room for
@@ -291,10 +427,37 @@ class ServingEngine:
         return max(1, min(req.max_new_tokens,
                           self.max_len - len(req.prompt)))
 
+    def _init_state(self, batch: int):
+        """Zeroed decode-state pytree of `batch` rows. Not cached: the
+        jitted consumers donate their state argument, so a shared zero
+        state would be consumed by its first use."""
+        return self.model.init_state(self.cfg, batch, self.max_len)
+
+    def _ensure_splice(self) -> None:
+        """Discover the decode-state batch-axis spec (state shapes at
+        batch 1 vs 2, via eval_shape — no allocation) and jit the row
+        splice: take row `i` of `src`, insert as row `j` of `dst`."""
+        if self._splice_fn is not None:
+            return
+        from repro.models import layers as L
+
+        # bypass the zero-state cache: eval_shape traces, and caching a
+        # traced pytree would leak tracers into later real calls
+        s1 = jax.eval_shape(
+            lambda: self.model.init_state(self.cfg, 1, self.max_len))
+        s2 = jax.eval_shape(
+            lambda: self.model.init_state(self.cfg, 2, self.max_len))
+        axes = L.state_batch_axes(s1, s2)
+        self._state_axes = axes
+        self._splice_fn = jax.jit(
+            lambda dst, src, i, j: L.insert_slot_state(
+                dst, L.take_slot_state(src, axes, i), axes, j),
+            donate_argnums=(0,))
+
     def _prefill_slot(self, req: Request, rng) -> tuple[int, dict, float]:
-        """Prefill one request alone (right-padded to a pow2 bucket) and
-        sample its first token. Returns (first_token, slot_state,
-        prefill_energy_j)."""
+        """Single-shot slot prefill (`admission="serial"`): one request
+        alone, right-padded to a pow2 bucket; samples its first token.
+        Returns (first_token, slot_state, prefill_energy_j)."""
         n = len(req.prompt)
         bucket = self._bucket(n)
         toks = np.zeros((1, bucket), np.int32)
@@ -304,35 +467,72 @@ class ServingEngine:
                           "lengths": jnp.asarray([n], np.int32)})
         logits = np.asarray(logits, np.float32)
         tok = int(self._sample(logits, [rng])[0])
-        return tok, state, self._prefill_energy_j(bucket, head_rows=1)
+        pre_j, pre_s = self._prefill_cost(bucket, head_rows=1)
+        self._clock += pre_s
+        return tok, state, pre_j
 
-    def _make_insert(self, slot_state) -> None:
-        """Discover the decode-state batch-axis spec (shapes at batch 1 vs
-        max_batch, via eval_shape — no allocation) and jit the splice."""
-        from repro.models import layers as L
+    def _finish(self, slot: _Slot, now: float, decode_energy_j: float,
+                results: list[Result]) -> None:
+        req = slot.req
+        n_tok = len(slot.tokens)
+        decode_s = max(now - slot.t_first, 0.0)
+        energy = (slot.prefill_energy_j
+                  + slot.steps * decode_energy_j / self.max_batch)
+        self._stats["generated_tokens"] += n_tok
+        self._stats["energy_j"] += energy
+        self._stats["requests"] += 1
+        results.append(Result(
+            uid=req.uid, tokens=np.array(slot.tokens, np.int32),
+            prompt_len=len(req.prompt), steps=slot.steps,
+            n_tokens=n_tok,
+            queue_s=max(slot.t_start - req.submit_s, 0.0),
+            ttft_s=max(slot.t_first - req.submit_s, 0.0),
+            ttft_model_s=max(slot.t_first_model - req.submit_model_s, 0.0),
+            decode_s=decode_s,
+            tokens_per_s=(n_tok / decode_s if decode_s > 0 else 0.0),
+            energy_j=energy,
+            energy_per_token_j=energy / max(n_tok, 1)))
 
-        if self.max_batch == 1:
-            self._state_axes = jax.tree.map(lambda _: -1, slot_state)
-            self._insert_fn = lambda big, small, b: small
-            return
-        s1 = jax.eval_shape(lambda s: s, slot_state)
-        probe_len = self._bucket(1)    # smallest real slot-prefill shape
-
-        def shape_at(bs: int):
-            toks = jnp.zeros((bs, probe_len), jnp.int32)
-            lens = jnp.full((bs,), probe_len, jnp.int32)
-            return jax.eval_shape(
-                lambda p: self.model.prefill(
-                    p, {"tokens": toks, "lengths": lens}, self.cfg,
-                    max_len=self.max_len)[1], self.params)
-
-        sb = shape_at(self.max_batch)
-        axes = L.state_batch_axes(shape_at(1), sb)
-        # sanity: the slot state we actually produced must match the probe
-        jax.tree.map(lambda a, b: None, s1, axes)
-        self._state_axes = axes
-        self._insert_fn = jax.jit(
-            lambda big, small, b: L.insert_slot_state(big, small, axes, b))
+    def _decode_step(self, slots, batch_state, token_buf, decode_cost,
+                     results):
+        """One lockstep decode step over the slot table; retires finished
+        slots in place. Returns the new batch state."""
+        decode_energy_j, decode_step_s = decode_cost
+        B = self.max_batch
+        active = np.array([s is not None for s in slots])
+        if not active.any():
+            return batch_state
+        self._clock += decode_step_s
+        logits, batch_state = self._decode(
+            self.params, jnp.asarray(token_buf), batch_state)
+        logits = np.asarray(logits, np.float32)
+        cur = self._sample(
+            logits, [s.rng if s is not None else None for s in slots])
+        now = time.perf_counter()
+        n_active = int(active.sum())
+        self._stats["decode_steps"] += 1
+        self._stats["slot_steps"] += B
+        self._stats["resident_slot_steps"] += n_active
+        # dead slots still execute: their energy share is real spend,
+        # charged to the engine (idle) rather than to any request, so
+        # report()'s J/token stays comparable with wave mode
+        self._stats["idle_energy_j"] += (
+            (B - n_active) * decode_energy_j / B)
+        for b in range(B):
+            slot = slots[b]
+            if slot is None:
+                continue
+            tok = int(cur[b])
+            slot.tokens.append(tok)
+            slot.steps += 1
+            token_buf[b] = tok
+            req = slot.req
+            if (req.eos_id is not None and tok == req.eos_id) or (
+                    len(slot.tokens) >= self._budget(req)):
+                self._finish(slot, now, decode_energy_j, results)
+                slots[b] = None      # retired mid-decode; refilled
+                token_buf[b] = 0     # next loop iteration
+        return batch_state
 
     def run_continuous(self) -> list[Result]:
         """Drain the queue with true continuous batching: retire finished
@@ -340,37 +540,182 @@ class ServingEngine:
         if not self._continuous_supported():
             raise ValueError(
                 f"continuous batching unsupported for kind="
-                f"{self.cfg.kind!r} (needs per-slot KV decode state); "
-                f"use wave mode")
-        from repro.models import layers as L
+                f"{self.cfg.kind!r} (needs the per-row decode-state "
+                f"contract); use wave mode")
+        if self.admission == "serial":
+            return self._run_serial()
+        return self._run_chunked()
 
+    def _run_chunked(self) -> list[Result]:
+        """Chunked admission fused into the decode loop: each engine step
+        runs one bucketed chunk call over the admission lane (all
+        in-flight prompts, compact pow2 width) alongside one lockstep
+        decode step over the residents. Admission is decoupled from slot
+        availability — a queued prompt starts chunking as soon as a lane
+        row is free, samples its first token when its last chunk lands
+        (TTFT is lane-bound), and parks in the lane until a decode slot
+        frees."""
+        self._ensure_splice()
         t_run0 = time.perf_counter()
         B = self.max_batch
         results: list[Result] = []
         slots: list[_Slot | None] = [None] * B
         batch_state = None
         token_buf = np.zeros(B, np.int32)
-        decode_energy_j = self._decode_energy_j()
+        decode_cost = self._decode_cost()
+        decode_energy_j = decode_cost[0]
+        adm: list[_Admission] = []
+        adm_state = None
+        adm_w = 0
 
-        def finish(slot: _Slot, now: float) -> Result:
-            req = slot.req
-            n_tok = len(slot.tokens)
-            decode_s = max(now - slot.t_first, 0.0)
-            energy = (slot.prefill_energy_j
-                      + slot.steps * decode_energy_j / B)
-            self._stats["generated_tokens"] += n_tok
-            self._stats["energy_j"] += energy
-            self._stats["requests"] += 1
-            return Result(
-                uid=req.uid, tokens=np.array(slot.tokens, np.int32),
-                prompt_len=len(req.prompt), steps=slot.steps,
-                n_tokens=n_tok,
-                queue_s=max(slot.t_start - req.submit_s, 0.0),
-                ttft_s=max(slot.t_first - req.submit_s, 0.0),
-                decode_s=decode_s,
-                tokens_per_s=(n_tok / decode_s if decode_s > 0 else 0.0),
-                energy_j=energy,
-                energy_per_token_j=energy / max(n_tok, 1))
+        def splice_ready() -> None:
+            """Move parked (prefilled) admissions into free decode slots,
+            FIFO by first-token time."""
+            nonlocal adm, batch_state
+            free = [b for b in range(B) if slots[b] is None]
+            if not free:
+                return
+            keep: list[_Admission] = []
+            for a in adm:
+                if a.ready is None or not free:
+                    keep.append(a)
+                    continue
+                b = free.pop(0)
+                if batch_state is None:
+                    batch_state = self._init_state(B)
+                batch_state = self._splice_fn(
+                    batch_state, adm_state, jnp.int32(a.row),
+                    jnp.int32(b))
+                slots[b] = a.ready
+                token_buf[b] = a.first_tok
+            adm = keep
+
+        def chunk_stage() -> bool:
+            """Pack the lane and run one chunk call over the rows still
+            prefilling (parked rows ride along as zero-length identity
+            rows). Samples first tokens for rows whose last chunk landed.
+            Returns True when a request finished outright on its first
+            sampled token (a lane row freed — the caller re-admits in
+            the same pass)."""
+            nonlocal adm, adm_state, adm_w
+            W = 1
+            while W < len(adm):
+                W *= 2
+            if (adm_state is None or W != adm_w
+                    or any(a.row != i for i, a in enumerate(adm))):
+                new_state = self._init_state(W)
+                for i, a in enumerate(adm):
+                    if a.row >= 0 and a.base > 0:
+                        new_state = self._splice_fn(
+                            new_state, adm_state, jnp.int32(a.row),
+                            jnp.int32(i))
+                    a.row = i
+                adm_state, adm_w = new_state, W
+            pending = [a for a in adm if a.ready is None]
+            rem = [len(a.req.prompt) - a.base for a in pending]
+            # shortest-remainder-first bucket: short admissions finish in
+            # cheap narrow calls (their TTFT is the point); long prompts
+            # still progress min(C, rem) tokens per step and get full
+            # chunks once the lane holds only longs
+            C = self._chunk_bucket(min(rem))
+            if self.cfg.sub_quadratic and any(r > C for r in rem):
+                # a *non-final* chunk boundary must stay a multiple of the
+                # SSM serve-scan block or the carried scan state loses bit
+                # parity with the unchunked prefill; the only unaligned
+                # bucket is a non-multiple max_len, so drop to the widest
+                # aligned one (validated to exist at construction)
+                from repro.kernels import ops
+
+                while C % ops.SSM_SERVE_GRAIN:
+                    C = self._chunk_bucket(C // 2)
+            toks = np.zeros((W, C), np.int32)
+            lens = np.zeros(W, np.int32)
+            t_disp = time.perf_counter()
+            for a in pending:
+                n = min(C, len(a.req.prompt) - a.base)
+                toks[a.row, :n] = a.req.prompt[a.base:a.base + n]
+                lens[a.row] = n
+                if a.t_start == 0.0:
+                    a.t_start = t_disp
+            logits, adm_state = self._chunk(
+                self.params, jnp.asarray(toks), jnp.asarray(lens),
+                adm_state)
+            logits = np.asarray(logits, np.float32)
+            now = time.perf_counter()
+            est_j, est_s = self._chunk_cost(W, C)
+            self._clock += est_s
+            self._stats["chunk_steps"] += 1
+            # lane pad/parked rows are executed spend with no owner
+            self._stats["idle_energy_j"] += (W - len(pending)) * est_j / W
+            keep: list[_Admission] = []
+            freed = False
+            for a in adm:
+                if a.ready is not None:
+                    keep.append(a)
+                    continue
+                a.base += int(lens[a.row])
+                a.chunk_energy_j += est_j / W
+                if a.base < len(a.req.prompt):
+                    keep.append(a)
+                    continue
+                tok = int(self._sample(logits[a.row:a.row + 1],
+                                       [a.rng])[0])
+                srec = _Slot(req=a.req, tokens=[tok],
+                             prefill_energy_j=a.chunk_energy_j,
+                             t_start=a.t_start, t_first=now,
+                             t_first_model=self._clock, rng=a.rng)
+                # EOS or a 1-token budget on the first sampled token:
+                # finished before ever occupying a decode slot
+                if (a.req.eos_id is not None and tok == a.req.eos_id) or (
+                        self._budget(a.req) <= 1):
+                    self._finish(srec, now, decode_energy_j, results)
+                    freed = True
+                    continue
+                a.ready = srec
+                a.first_tok = tok
+                keep.append(a)
+            adm = keep
+            if not adm:
+                adm_state, adm_w = None, 0
+            return freed
+
+        while self.queue or adm or any(s is not None for s in slots):
+            # ---- admit + chunk: fill free lane rows from the queue and
+            # run one chunk call; a request finishing on its first
+            # sampled token frees its lane row again, so keep admitting
+            # until the lane is full of live work or the queue drains ----
+            splice_ready()
+            while True:
+                while self.queue and len(adm) < self.lane_width:
+                    req = self.queue.popleft()
+                    rng = None if self.greedy else self._req_rng(req.uid)
+                    adm.append(_Admission(req=req, rng=rng))
+                if not any(a.ready is None for a in adm):
+                    break
+                freed = chunk_stage()
+                if not (freed and self.queue):
+                    break
+            splice_ready()
+            # ---- one lockstep decode step over the residents ----
+            batch_state = self._decode_step(
+                slots, batch_state, token_buf, decode_cost, results)
+        self._stats["wall_s"] += time.perf_counter() - t_run0
+        return results
+
+    def _run_serial(self) -> list[Result]:
+        """PR 4-style admission: each request prefills alone (single-shot
+        bucketed call) and is spliced into a free slot — kept as the
+        stall-prone baseline `benchmarks/bench_serving.py` regresses
+        chunked admission against."""
+        self._ensure_splice()
+        t_run0 = time.perf_counter()
+        B = self.max_batch
+        results: list[Result] = []
+        slots: list[_Slot | None] = [None] * B
+        batch_state = None
+        token_buf = np.zeros(B, np.int32)
+        decode_cost = self._decode_cost()
+        decode_energy_j = decode_cost[0]
 
         while self.queue or any(s is not None for s in slots):
             # ---- refill free slots from the queue (a request finishing
@@ -387,55 +732,25 @@ class ServingEngine:
                     t1 = time.perf_counter()
                     slot = _Slot(req=req, tokens=[tok],
                                  prefill_energy_j=pre_j,
-                                 t_start=t0, t_first=t1, rng=rng)
+                                 t_start=t0, t_first=t1,
+                                 t_first_model=self._clock, rng=rng)
                     # EOS or a 1-token budget on the *first* sampled
                     # token: finished before ever occupying a decode slot
                     if (req.eos_id is not None and tok == req.eos_id) or (
                             self._budget(req) <= 1):
-                        results.append(finish(slot, t1))
+                        self._finish(slot, t1, decode_energy_j, results)
                         continue
-                    if self._insert_fn is None:
-                        self._make_insert(slot_state)
                     if batch_state is None:
-                        batch_state = L.expand_slot_state(
-                            slot_state, self._state_axes, B)
-                    batch_state = self._insert_fn(
-                        batch_state, slot_state, jnp.int32(b))
+                        batch_state = self._init_state(B)
+                    batch_state = self._splice_fn(
+                        batch_state, slot_state, jnp.int32(0),
+                        jnp.int32(b))
                     slots[b] = slot
                     token_buf[b] = tok
-            active = np.array([s is not None for s in slots])
-            if not active.any():
+            if not any(s is not None for s in slots):
                 break                  # queue drained, no live slots
-            # ---- one lockstep decode step over all slots ----
-            logits, batch_state = self._decode(
-                self.params, jnp.asarray(token_buf), batch_state)
-            logits = np.asarray(logits, np.float32)
-            cur = self._sample(
-                logits, [s.rng if s is not None else None for s in slots])
-            now = time.perf_counter()
-            n_active = int(active.sum())
-            self._stats["decode_steps"] += 1
-            self._stats["slot_steps"] += B
-            self._stats["resident_slot_steps"] += n_active
-            # dead slots still execute: their energy share is real spend,
-            # charged to the engine (idle) rather than to any request, so
-            # report()'s J/token stays comparable with wave mode
-            self._stats["idle_energy_j"] += (
-                (B - n_active) * decode_energy_j / B)
-            for b in range(B):
-                slot = slots[b]
-                if slot is None:
-                    continue
-                tok = int(cur[b])
-                slot.tokens.append(tok)
-                slot.steps += 1
-                token_buf[b] = tok
-                req = slot.req
-                if (req.eos_id is not None and tok == req.eos_id) or (
-                        len(slot.tokens) >= self._budget(req)):
-                    results.append(finish(slot, now))
-                    slots[b] = None      # retired mid-decode; refilled
-                    token_buf[b] = 0     # next loop iteration
+            batch_state = self._decode_step(
+                slots, batch_state, token_buf, decode_cost, results)
         self._stats["wall_s"] += time.perf_counter() - t_run0
         return results
 
@@ -469,7 +784,11 @@ class ServingEngine:
         logits, state = self._prefill(self.params, batch)
         logits = np.asarray(logits, np.float32)
         t_first = time.perf_counter()
-        prefill_j = self._prefill_energy_j(B * S, head_rows=B)
+        prefill_j, prefill_s = self._prefill_cost(B * S, head_rows=B)
+        self._clock += prefill_s
+        t_first_model = self._clock
+        est = self._step_energy(("decode", B), B, batch_rows=B)
+        decode_energy_j, decode_step_s = self._cost(est)
 
         budgets = np.array([self._budget(r) for r in batch_reqs])
         if not use_lengths and not self.cfg.attention_free:
@@ -493,6 +812,7 @@ class ServingEngine:
                     budgets[i] <= 1):
                 done[i] = True
         while not done.all():
+            self._clock += decode_step_s
             logits, state = self._decode(self.params, jnp.asarray(cur), state)
             logits = np.asarray(logits, np.float32)
             cur = self._sample(
@@ -507,8 +827,6 @@ class ServingEngine:
                         len(out[i]) >= budgets[i]):
                     done[i] = True
         t_end = time.perf_counter()
-        est = self._step_energy(("decode", B), B, batch_rows=B)
-        decode_energy_j = est.energy_j if est is not None else 0.0
         self._stats["decode_steps"] += steps
         self._stats["slot_steps"] += steps * B
         self._stats["resident_slot_steps"] += steps * B
@@ -526,6 +844,7 @@ class ServingEngine:
                 prompt_len=len(r.prompt), steps=steps, n_tokens=n_tok,
                 queue_s=max(t0 - r.submit_s, 0.0),
                 ttft_s=max(t_first - r.submit_s, 0.0),
+                ttft_model_s=max(t_first_model - r.submit_model_s, 0.0),
                 decode_s=decode_s,
                 tokens_per_s=n_tok / decode_s if decode_s > 0 else 0.0,
                 energy_j=energy,
@@ -557,8 +876,8 @@ class ServingEngine:
 
         `energy_j` / `j_per_token` count *total* spend — per-request
         attributed energy plus the idle share of decode steps executed
-        with dead slots — so continuous and wave modes compare
-        like-for-like."""
+        with dead slots (and of chunk-call pad rows) — so continuous and
+        wave modes compare like-for-like."""
         s = self._stats
         toks = s["generated_tokens"]
         slot_steps = s["slot_steps"]
@@ -567,6 +886,7 @@ class ServingEngine:
             "requests": s["requests"],
             "generated_tokens": toks,
             "decode_steps": s["decode_steps"],
+            "chunk_steps": s["chunk_steps"],
             "slot_steps": slot_steps,
             "resident_slot_steps": s["resident_slot_steps"],
             "slot_occupancy": (s["resident_slot_steps"] / slot_steps

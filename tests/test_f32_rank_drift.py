@@ -1,0 +1,53 @@
+"""f32 in-graph ranking drift vs scoped-x64 on the shipped artifacts.
+
+ROADMAP follow-up (PR 3): quantify whether the approximate f32
+`rank_in_graph` mode picks different winners than the bit-parity x64
+default. On every committed golden artifact, over the serving GEMM fleet
+(decode + prefill + chunked-admission grid), the measured drift is zero —
+pinned here so a scorer/feature change that *introduces* f32 drift fails
+loudly and the serve-f32 decision (README) gets revisited.
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from gen_golden_fixtures import FIXTURE_DIR, GOLDEN_FAMILIES
+
+
+def _keys(cfgs):
+    return [(c.block_m, c.block_n, c.block_k) for c in cfgs]
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    from repro.kernels import ops
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="drift", kind="dense", n_layers=2, d_model=256,
+                      n_heads=8, n_kv_heads=4, d_ff=1024, vocab=4096)
+    shapes = ops.serving_gemm_fleet(cfg, max_batch=8, max_len=512,
+                                    chunk_tokens=64, lane_width=16)
+    assert len(shapes) >= 32          # a real fleet, not a toy list
+    return shapes
+
+
+@pytest.mark.parametrize("family", GOLDEN_FAMILIES)
+def test_f32_winners_match_x64_on_golden_artifacts(family, fleet):
+    from repro.core.autotuner import GemmAutotuner
+    from repro.core.hwsim import TpuGemmSimulator
+    from repro.core.predictor import PerfPredictor
+
+    pred = PerfPredictor.load(
+        os.path.join(FIXTURE_DIR, f"golden_{family}.npz"))
+    tuner = GemmAutotuner(pred, TpuGemmSimulator(seed=0), scorer="jit")
+    tops64, _ = tuner.rank_in_graph(fleet, top_k=3, x64=True)
+    tops32, _ = tuner.rank_in_graph(fleet, top_k=3, x64=False)
+    mismatches = [s for s, a, b in zip(fleet, tops64, tops32)
+                  if _keys(a) != _keys(b)]
+    assert mismatches == [], (
+        f"{family}: f32 in-graph ranking drifted from x64 on "
+        f"{len(mismatches)}/{len(fleet)} fleet shapes — revisit the "
+        f"serve-f32 decision in README")

@@ -345,32 +345,42 @@ class TestMoEFamilies:
         assert (4, cfg.kv_heads * hd, d) not in counts        # no K/V proj
 
 
-class TestSsmFallback:
+class TestSsmFamilies:
+    """mamba1/mamba2/hybrid are promoted out of the wave-mode fallback:
+    chunked admission carries conv/scan state across chunk boundaries
+    bit-exactly, so they serve continuously with wave-parity streams."""
+
     def _mamba(self):
         cfg = tiny_cfg(kind="mamba1", n_layers=2, d_ff=0, ssm_state=8,
                        expand=2, d_conv=4)
         model = get_model(cfg)
         return cfg, model, model.init(jax.random.key(0), cfg)
 
-    def test_mamba_serves_in_wave_mode(self):
+    def test_mamba_serves_continuously_with_wave_parity(self):
         cfg, model, params = self._mamba()
-        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32)
-        assert not eng._continuous_supported()
-        for uid in range(3):
-            eng.submit(Request(uid=uid, prompt=prompt(uid, 6, cfg.vocab),
-                               max_new_tokens=4))
-        res = eng.run_until_empty()
-        assert len(res) == 3
-        assert all(r.n_tokens == 4 for r in res)
-        with pytest.raises(ValueError):
-            eng.run_continuous()
+        reqs = [(uid, prompt(uid, 6, cfg.vocab), 4) for uid in range(3)]
+        outs = {}
+        for mode in ("continuous", "wave"):
+            eng = ServingEngine(model, params, cfg, max_batch=2,
+                                max_len=32, mode=mode)
+            assert eng._continuous_supported()
+            for uid, p, mnt in reqs:
+                eng.submit(Request(uid=uid, prompt=p.copy(),
+                                   max_new_tokens=mnt))
+            outs[mode] = {r.uid: r for r in eng.run_until_empty()}
+        for uid, _, mnt in reqs:
+            assert outs["continuous"][uid].n_tokens == mnt
+            np.testing.assert_array_equal(
+                outs["continuous"][uid].tokens, outs["wave"][uid].tokens)
 
-    def test_attention_free_budget_not_clamped_by_max_len(self):
+    @pytest.mark.parametrize("mode", ["wave", "continuous"])
+    def test_attention_free_budget_not_clamped_by_max_len(self, mode):
         """SSM decode state is O(1) per token — no KV cache to run out
         of — so neither the prompt-length check nor the KV-room budget
         clamp applies to mamba1, even in a padded batch."""
         cfg, model, params = self._mamba()
-        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32)
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32,
+                            mode=mode)
         eng.submit(Request(uid=0, prompt=prompt(0, 28, cfg.vocab),
                            max_new_tokens=20))
         eng.submit(Request(uid=1, prompt=prompt(1, 6, cfg.vocab),
@@ -379,26 +389,26 @@ class TestSsmFallback:
         assert res[0].n_tokens == 20
         assert res[1].n_tokens == 20
 
-    def test_left_pad_wave_budget_clamped_to_padded_room(self):
-        """Left-padded rows share the scalar cache index starting at the
-        padded length S: for a length-bounded family (hybrid) a short
-        prompt batched with a near-max_len one only has max_len - S KV
-        room, and must be clamped to it rather than clamp-writing past
-        the cache end."""
+    def test_hybrid_budgets_clamp_per_row(self):
+        """Hybrid now follows the right-padded `lengths` contract in both
+        modes: each row's KV room is max_len - its *own* prompt length
+        (the legacy left-pad shared-index clamp no longer applies)."""
         cfg = tiny_cfg(kind="hybrid", n_layers=2, d_ff=128, ssm_state=8,
                        expand=2, ssm_headdim=16, ssm_ngroups=1,
                        attn_every=2)
         model = get_model(cfg)
         params = model.init(jax.random.key(0), cfg)
-        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32)
-        assert not eng._continuous_supported()
-        eng.submit(Request(uid=0, prompt=prompt(0, 28, cfg.vocab),
-                           max_new_tokens=20))
-        eng.submit(Request(uid=1, prompt=prompt(1, 6, cfg.vocab),
-                           max_new_tokens=20))
-        res = {r.uid: r for r in eng.run_until_empty()}
-        assert res[0].n_tokens == 32 - 28
-        assert res[1].n_tokens == 32 - 28
+        for mode in ("wave", "continuous"):
+            eng = ServingEngine(model, params, cfg, max_batch=2,
+                                max_len=32, mode=mode)
+            assert eng._continuous_supported()
+            eng.submit(Request(uid=0, prompt=prompt(0, 28, cfg.vocab),
+                               max_new_tokens=20))
+            eng.submit(Request(uid=1, prompt=prompt(1, 6, cfg.vocab),
+                               max_new_tokens=20))
+            res = {r.uid: r for r in eng.run_until_empty()}
+            assert res[0].n_tokens == 32 - 28, mode
+            assert res[1].n_tokens == 20, mode
 
 
 # ---------------------------------------------------------------------------
