@@ -18,6 +18,16 @@ uploads; with ``--smoke`` the run exits non-zero if chunked-admission
 mean TTFT regresses past the pinned threshold vs serial admission
 (``SMOKE_TTFT_RATIO_MAX``).
 
+A second comparison serves a **shared-prefix workload** (every request
+starts with one of a few long system prompts) through the dense and the
+paged KV layouts *at the same KV HBM byte budget*: the dense engine
+spends a full ``max_len`` row per in-flight request, the paged engine
+spends pages proportional to actual length and maps shared prefixes
+copy-on-write, so the same bytes sustain strictly more concurrent
+requests. Smoke gates: paged concurrency > dense, paged mean TTFT
+(model clock) below ``PAGED_TTFT_RATIO_MAX`` x dense, and paged J/token
+within ``PAGED_JTOK_RATIO_MAX`` x dense.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
 """
 
@@ -46,6 +56,16 @@ LONG_LEN = 384            # adversarial long prompt (6 chunk calls)
 # fraction of serial-admission mean TTFT on the smoke mix (the tentpole
 # acceptance is >= 2x lower, i.e. ratio <= 0.5)
 SMOKE_TTFT_RATIO_MAX = float(os.environ.get("SMOKE_TTFT_RATIO_MAX", "0.5"))
+
+# ---- paged-vs-dense shared-prefix comparison (fixed KV HBM budget) ----
+PAGE_SIZE = 32
+PREFIX_LEN = 64           # shared system-prompt length (2 full pages)
+TAIL_LEN = (16, 32)       # per-request unique suffix range (inclusive)
+PAGED_BUDGETS = (4, 8, 16)
+# paged mean model-clock TTFT must beat dense by this factor, and J/token
+# must stay within this factor of dense, on the shared-prefix mix
+PAGED_TTFT_RATIO_MAX = float(os.environ.get("PAGED_TTFT_RATIO_MAX", "0.75"))
+PAGED_JTOK_RATIO_MAX = float(os.environ.get("PAGED_JTOK_RATIO_MAX", "1.0"))
 
 
 def _build(smoke: bool):
@@ -131,6 +151,129 @@ def _serve(cfg, model, params, reqs, label: str):
     return results, rep
 
 
+def _prefix_workload(cfg, n_reqs: int, n_prefixes: int, seed: int = 1):
+    """Every request opens with one of ``n_prefixes`` shared system
+    prompts (round-robin) followed by a unique tail — the workload shape
+    shared-prefix page reuse exists for."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab, PREFIX_LEN).astype(np.int32)
+                for _ in range(n_prefixes)]
+    reqs = []
+    for uid in range(n_reqs):
+        tail = rng.integers(0, cfg.vocab,
+                            int(rng.integers(TAIL_LEN[0], TAIL_LEN[1] + 1)))
+        reqs.append((uid,
+                     np.concatenate([prefixes[uid % n_prefixes],
+                                     tail]).astype(np.int32),
+                     int(rng.choice(PAGED_BUDGETS))))
+    return reqs
+
+
+def _serve_layout(cfg, model, params, reqs, *, max_batch: int,
+                  max_len: int, label: str, **engine_kw):
+    """One warmed + timed pass of the shared-prefix workload through a
+    continuous chunked-admission engine in the given KV layout."""
+    from repro.serving.engine import Request, ServingEngine
+
+    eng = ServingEngine(model, params, cfg, max_batch=max_batch,
+                        max_len=max_len, mode="continuous",
+                        admission="chunked", chunk_tokens=CHUNK_TOKENS,
+                        **engine_kw)
+    for uid, prompt, mnt in reqs:
+        eng.submit(Request(uid=100_000 + uid, prompt=prompt.copy(),
+                           max_new_tokens=mnt))
+    eng.run_until_empty()
+    eng.reset_stats()
+    for uid, prompt, mnt in reqs:
+        eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                           max_new_tokens=mnt))
+    t0 = time.perf_counter()
+    results = eng.run_until_empty()
+    wall = time.perf_counter() - t0
+    rep = eng.report()
+    rep["mode"] = label
+    rep["wall_s"] = wall
+    rep["tokens_per_s"] = (rep["generated_tokens"] / wall if wall > 0
+                           else 0.0)
+    rep["ttft_s"] = _percentiles([r.ttft_s for r in results])
+    rep["ttft_model_s"] = _percentiles([r.ttft_model_s for r in results])
+    rep["concurrency"] = max_batch + eng.lane_width
+    return results, rep
+
+
+def run_paged(smoke: bool, cfg, model, params) -> tuple[list[dict], dict]:
+    """Paged vs dense KV layout on the shared-prefix mix at one fixed KV
+    HBM byte budget: the dense engine's budget is (max_batch + lane) full
+    ``max_len`` rows; the paged engine gets exactly those bytes as pages
+    and spends them on twice the decode slots + lane width."""
+    from repro.models.config import kv_cache_bytes
+
+    n_reqs, n_prefixes = (16, 2) if smoke else (32, 4)
+    dense_batch = 2 if smoke else 4
+    dense_rows = 3 * dense_batch             # max_batch + 2x admission lane
+    hbm_budget = kv_cache_bytes(cfg, dense_rows * MAX_LEN)
+    num_pages = dense_rows * MAX_LEN // PAGE_SIZE   # same bytes, in pages
+    reqs = _prefix_workload(cfg, n_reqs, n_prefixes)
+
+    dense_out, rd = _serve_layout(cfg, model, params, reqs,
+                                  max_batch=dense_batch, max_len=MAX_LEN,
+                                  label="dense")
+    paged_out, rp = _serve_layout(cfg, model, params, reqs,
+                                  max_batch=2 * dense_batch,
+                                  max_len=MAX_LEN, label="paged",
+                                  kv_layout="paged", page_size=PAGE_SIZE,
+                                  num_pages=num_pages + 1)
+
+    # layout parity is a hard invariant: same greedy streams, per request
+    by_uid = {r.uid: r for r in dense_out}
+    for r in paged_out:
+        if not np.array_equal(r.tokens, by_uid[r.uid].tokens):
+            raise AssertionError(
+                f"paged stream mismatch for request {r.uid}")
+
+    paged_hbm = (rp["paging"]["peak_in_use"]
+                 * kv_cache_bytes(cfg, PAGE_SIZE))
+    ttft_ratio = (rp["ttft_model_s"]["mean"] / rd["ttft_model_s"]["mean"]
+                  if rd["ttft_model_s"]["mean"] > 0 else 0.0)
+    jtok_ratio = (rp["j_per_token"] / rd["j_per_token"]
+                  if rd["j_per_token"] else 0.0)
+    payload = {
+        "n_requests": n_reqs,
+        "n_prefixes": n_prefixes,
+        "prefix_len": PREFIX_LEN,
+        "page_size": PAGE_SIZE,
+        "max_len": MAX_LEN,
+        "kv_hbm_budget_bytes": float(hbm_budget),
+        "paged_peak_hbm_bytes": float(paged_hbm),
+        "dense": rd,
+        "paged": rp,
+        "concurrency_dense": rd["concurrency"],
+        "concurrency_paged": rp["concurrency"],
+        "ttft_ratio_paged_vs_dense": ttft_ratio,
+        "jtok_ratio_paged_vs_dense": jtok_ratio,
+        "paged_ttft_gate_max_ratio": PAGED_TTFT_RATIO_MAX,
+        "paged_jtok_gate_max_ratio": PAGED_JTOK_RATIO_MAX,
+    }
+    dump("serving_paged", payload)
+    rows = [
+        row("serve_paged", rp["wall_s"] * 1e6,
+            f"tok/s={rp['tokens_per_s']:.0f} "
+            f"J/tok={rp['j_per_token']:.2e} "
+            f"conc={rp['concurrency']} "
+            f"model-ttft={rp['ttft_model_s']['mean'] * 1e3:.2f}ms "
+            f"prefix-hits={rp['paging']['prefix_hits']} "
+            f"hit-tokens={rp['paging']['prefix_hit_tokens']}"),
+        row("serve_paged_vs_dense", 0.0,
+            f"fixed KV budget={hbm_budget / 1e6:.2f}MB: concurrency "
+            f"{rd['concurrency']} -> {rp['concurrency']}, paged/dense "
+            f"mean TTFT ratio={ttft_ratio:.3f} (model clock, gate <= "
+            f"{PAGED_TTFT_RATIO_MAX}), J/tok ratio={jtok_ratio:.3f} "
+            f"(gate <= {PAGED_JTOK_RATIO_MAX}), paged peak HBM "
+            f"{paged_hbm / 1e6:.2f}MB"),
+    ]
+    return rows, payload
+
+
 def run(smoke: bool | None = None) -> list[dict]:
     if smoke is None:
         # mirror benchmarks.common.default_n_configs: unset env = full scale
@@ -199,6 +342,9 @@ def run(smoke: bool | None = None) -> list[dict]:
                 f"{rep['ttft_s']['p95'] * 1e3:.1f}ms "
                 f"model-ttft={rep['ttft_model_s']['mean'] * 1e3:.2f}ms")
 
+    paged_rows, paged_payload = run_paged(smoke, cfg, model, params)
+    run.last_paged_payload = paged_payload
+
     return [
         row("serve_chunked", rc["wall_s"] * 1e6, derived(rc)),
         row("serve_serial", rs["wall_s"] * 1e6, derived(rs)),
@@ -210,7 +356,7 @@ def run(smoke: bool | None = None) -> list[dict]:
             f"{100 * payload['slot_step_reduction']:.1f}% fewer "
             f"decode-step*slots vs wave; J/tok "
             f"-{100 * payload['j_per_token_reduction']:.1f}%"),
-    ]
+    ] + paged_rows
 
 
 def main(argv: list[str]) -> int:
@@ -234,6 +380,36 @@ def main(argv: list[str]) -> int:
             return 1
         print(f"TTFT gate ok: ratio {ratio:.3f} <= "
               f"{SMOKE_TTFT_RATIO_MAX}")
+        pp = run.last_paged_payload
+        if pp["concurrency_paged"] <= pp["concurrency_dense"]:
+            print("PAGED GATE FAILED: paged concurrency "
+                  f"{pp['concurrency_paged']} not above dense "
+                  f"{pp['concurrency_dense']} at the fixed KV budget")
+            return 1
+        if pp["paged_peak_hbm_bytes"] > pp["kv_hbm_budget_bytes"]:
+            print("PAGED GATE FAILED: paged peak HBM "
+                  f"{pp['paged_peak_hbm_bytes']:.0f}B exceeds the dense "
+                  f"budget {pp['kv_hbm_budget_bytes']:.0f}B")
+            return 1
+        if pp["dense"]["ttft_model_s"]["mean"] <= 0.0:
+            print("PAGED GATE FAILED: dense model-clock TTFT is 0 "
+                  "(energy model unavailable?) — gate cannot assess")
+            return 1
+        pr = pp["ttft_ratio_paged_vs_dense"]
+        if pr > PAGED_TTFT_RATIO_MAX:
+            print(f"PAGED GATE FAILED: paged/dense mean TTFT ratio "
+                  f"{pr:.3f} > {PAGED_TTFT_RATIO_MAX} on the "
+                  f"shared-prefix mix")
+            return 1
+        jr = pp["jtok_ratio_paged_vs_dense"]
+        if jr > PAGED_JTOK_RATIO_MAX:
+            print(f"PAGED GATE FAILED: paged/dense J/token ratio "
+                  f"{jr:.3f} > {PAGED_JTOK_RATIO_MAX}")
+            return 1
+        print(f"paged gates ok: concurrency {pp['concurrency_dense']} -> "
+              f"{pp['concurrency_paged']}, TTFT ratio {pr:.3f} <= "
+              f"{PAGED_TTFT_RATIO_MAX}, J/tok ratio {jr:.3f} <= "
+              f"{PAGED_JTOK_RATIO_MAX}")
     return 0
 
 

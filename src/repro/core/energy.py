@@ -18,6 +18,9 @@ from repro.core.roofline import RooflineReport
 
 @dataclasses.dataclass
 class EnergyReport:
+    """Per-step energy telemetry derived from a roofline report: system
+    power, J/step, J/token, and the energy-delay product."""
+
     name: str
     n_chips: int
     step_s: float
@@ -29,6 +32,7 @@ class EnergyReport:
     edp: float                      # energy-delay product (J*s)
 
     def as_row(self) -> dict:
+        """Flatten to a plain dict (CSV/markdown table row)."""
         return dataclasses.asdict(self)
 
 
@@ -62,6 +66,7 @@ class StepEnergyEstimate:
     n_gemms: float                 # weighted GEMM count
 
     def as_row(self) -> dict:
+        """Flatten to a plain dict (CSV/markdown table row)."""
         return dataclasses.asdict(self)
 
 
@@ -83,6 +88,7 @@ def fused_step_energy(*shape_counts: Mapping[tuple[int, int, int], float],
                       dtype: str = "bf16",
                       configs: Mapping[tuple[int, int, int], object]
                       | None = None,
+                      extra_hbm_bytes: float = 0.0,
                       name: str = "fused_step") -> StepEnergyEstimate:
     """Price one fused serving step: the union of several sub-step GEMM
     fleets (decode rows + chunk rows) run back-to-back through one
@@ -90,7 +96,7 @@ def fused_step_energy(*shape_counts: Mapping[tuple[int, int, int], float],
     a single engine step rather than separately-idling phases."""
     return gemm_fleet_energy(combine_shape_counts(*shape_counts),
                              chip=chip, dtype=dtype, configs=configs,
-                             name=name)
+                             extra_hbm_bytes=extra_hbm_bytes, name=name)
 
 
 def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
@@ -98,6 +104,7 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
                       dtype: str = "bf16",
                       configs: Mapping[tuple[int, int, int], object]
                       | None = None,
+                      extra_hbm_bytes: float = 0.0,
                       name: str = "step") -> StepEnergyEstimate:
     """Energy of one step built from its GEMM fleet (the paper's per-kernel
     model lifted to a serving step).
@@ -109,6 +116,12 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
     from the measurement substrate's analytical model; power comes from
     `step_power_w` over the fleet's aggregate duty cycles (no collective
     term — single-chip serving).
+
+    `extra_hbm_bytes` charges non-GEMM HBM traffic the step issues on top
+    of the fleet — the paged-KV engine's page-table gather/scatter (cache
+    bytes read into the dense per-layer view and written back), priced at
+    the chip's HBM bandwidth and folded into both the memory duty cycle
+    and the step's wall time.
     """
     from repro.core.hwsim import GemmConfig, TpuGemmSimulator
     from repro.kernels.tiled_matmul import DEFAULT_CONFIG
@@ -145,9 +158,14 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
             compute_s += w * float(tel["compute_time_ms"][i]) * 1e-3
             memory_s += w * float(tel["memory_time_ms"][i]) * 1e-3
         step_s += w * rt
+    if extra_hbm_bytes > 0.0:
+        gather_s = float(extra_hbm_bytes) / chip.hbm_bw
+        memory_s += gather_s
+        step_s += gather_s
     flops = sum(2.0 * m * n * k * w for (m, n, k), w in zip(shapes, weights))
-    byts = sum((m * k + k * n + m * n) * bytes_per * w
-               for (m, n, k), w in zip(shapes, weights))
+    byts = (sum((m * k + k * n + m * n) * bytes_per * w
+                for (m, n, k), w in zip(shapes, weights))
+            + float(extra_hbm_bytes))
     # the fleet runs kernels back-to-back, so duty cycles are relative to
     # total step time: setting collective_s = step_s (with zero ICI power)
     # pins `step_power_w`'s bound to the step without adding power
@@ -166,6 +184,8 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
 def energy_report(report: RooflineReport, *, tokens_per_step: float,
                   chip: ChipSpec = TPU_V5E,
                   step_s: float | None = None) -> EnergyReport:
+    """Price one step of a roofline report on `chip`: duty-cycle power
+    times step time, normalized to J/token and EDP."""
     step = step_s if step_s is not None else report.bound_s
     p_chip = step_power_w(report, chip)
     p_sys = p_chip * report.n_chips

@@ -52,6 +52,42 @@ class ArtifactError(ValueError):
     """A predictor artifact is malformed, tampered, or schema-incompatible."""
 
 
+def artifact_fingerprint(meta: dict, state: dict) -> str:
+    """Content hash of an artifact's (meta flags, state arrays) — the
+    exact digest `PerfPredictor.fingerprint` would produce for a loaded
+    copy. Schema upgraders use this to restamp ``meta["fingerprint"]``
+    after transforming arrays (see docs/artifacts.md)."""
+    h = hashlib.sha256()
+    h.update(json.dumps({
+        "model": meta["model"],
+        "chip": meta.get("chip"),
+        "nominal_power_w": meta.get("nominal_power_w"),
+        "feature_names": list(meta["feature_names"]),
+        "target_names": list(meta["target_names"]),
+        "log_targets": bool(meta["log_targets"]),
+        "residual": bool(meta["residual"]),
+    }, sort_keys=True).encode())
+    for key, arr in sorted(state.items()):
+        h.update(key.encode())
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+# Schema migrations: version N -> a callable producing the version-N+1
+# (meta, state) pair. When ARTIFACT_SCHEMA_VERSION is bumped, register the
+# v(N-1) -> v(N) upgrader here so existing artifacts load without a
+# retrain; `load` walks the chain until it reaches the current version and
+# refuses artifacts with no path. An upgrader must bump
+# meta["schema_version"] itself and restamp meta["fingerprint"] via
+# `artifact_fingerprint` whenever it rewrites arrays or flag fields —
+# the tamper check runs after the chain. Contract + example in
+# docs/artifacts.md.
+_SCHEMA_UPGRADERS: dict[int, object] = {}
+
+
 def make_model(name: str, random_state: int = 0, fast: bool = False):
     """Table VI model zoo. `fast` shrinks ensembles for unit tests."""
     ne = 24 if fast else 100
@@ -371,8 +407,7 @@ class PerfPredictor:
         so retraining — or any array tampering — invalidates them.
         """
         if self._fingerprint is None:
-            h = hashlib.sha256()
-            h.update(json.dumps({
+            self._fingerprint = artifact_fingerprint({
                 "model": self.model_name,
                 "chip": self.chip_name,
                 "nominal_power_w": self.nominal_power_w,
@@ -380,14 +415,7 @@ class PerfPredictor:
                 "target_names": list(self.target_names),
                 "log_targets": bool(self.log_targets),
                 "residual": bool(self.residual),
-            }, sort_keys=True).encode())
-            for key, arr in sorted(self.to_state().items()):
-                h.update(key.encode())
-                a = np.ascontiguousarray(arr)
-                h.update(str(a.dtype).encode())
-                h.update(str(a.shape).encode())
-                h.update(a.tobytes())
-            self._fingerprint = h.hexdigest()[:16]
+            }, self.to_state())
         return self._fingerprint
 
     def save(self, path: str) -> None:
@@ -417,10 +445,22 @@ class PerfPredictor:
         if meta.get("format") != ARTIFACT_FORMAT:
             raise ArtifactError(
                 f"{path}: unexpected artifact format {meta.get('format')!r}")
-        if meta.get("schema_version") != ARTIFACT_SCHEMA_VERSION:
+        version = meta.get("schema_version")
+        while (isinstance(version, int)
+               and version < ARTIFACT_SCHEMA_VERSION
+               and version in _SCHEMA_UPGRADERS):
+            meta, state = _SCHEMA_UPGRADERS[version](meta, state)
+            if meta.get("schema_version") != version + 1:
+                raise ArtifactError(
+                    f"{path}: schema upgrader for v{version} produced "
+                    f"version {meta.get('schema_version')}, expected "
+                    f"{version + 1}")
+            version = meta["schema_version"]
+        if version != ARTIFACT_SCHEMA_VERSION:
             raise ArtifactError(
-                f"{path}: schema version {meta.get('schema_version')} != "
-                f"supported {ARTIFACT_SCHEMA_VERSION}")
+                f"{path}: schema version {meta.get('schema_version')} has "
+                f"no upgrade path to supported {ARTIFACT_SCHEMA_VERSION} — "
+                "retrain the predictor")
         if list(meta.get("feature_names", [])) != list(NUMERIC_FEATURES):
             raise ArtifactError(
                 f"{path}: feature schema mismatch — artifact was trained on "

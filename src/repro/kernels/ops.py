@@ -130,7 +130,8 @@ def chunk_buckets(max_len: int, chunk_tokens: int) -> tuple[int, ...]:
 def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
                        include_slot_prefill: bool = True,
                        chunk_tokens: int | None = None,
-                       lane_width: int | None = None
+                       lane_width: int | None = None,
+                       kv_cap: int | None = None
                        ) -> list[tuple[int, int, int]]:
     """Every GEMM shape a serving engine will trace: the batched prefill
     (max_batch * max_len rows, LM head over max_batch last positions), the
@@ -140,14 +141,22 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
     max_batch x pow2 chunk buckets, LM head over the admission rows), plus
     the legacy single-slot buckets for `admission="serial"`. Feed to
     `warm_gemm_cache` so neither the first wave nor the first fused
-    chunk+decode step pays per-shape tuning latency."""
+    chunk+decode step pays per-shape tuning latency.
+
+    `kv_cap` overrides the per-row cached-token capacity that sizes MLA's
+    whole-cache `w_uk`/`w_uv` decompression rows (default `max_len`): the
+    paged engine's gathered view spans `n_row_pages * page_size` logical
+    positions per row, which is what the decompress GEMMs actually run
+    over there.
+    """
     from repro.models.config import gemm_shape_counts
 
+    cap_len = kv_cap if kv_cap is not None else max_len
     fleet = set(gemm_shape_counts(cfg, max_batch * max_len,
                                   head_tokens=max_batch,
-                                  kv_rows=max_batch * max_len))
+                                  kv_rows=max_batch * cap_len))
     fleet |= set(gemm_shape_counts(cfg, max_batch,
-                                   kv_rows=max_batch * max_len))
+                                   kv_rows=max_batch * cap_len))
     if include_slot_prefill:
         if chunk_tokens is None:
             # serial admission / legacy callers: single-shot slot prefills
@@ -170,7 +179,7 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
             ws = sorted(widths) if b in chunks else [1]
             for w in ws:
                 fleet |= set(gemm_shape_counts(cfg, w * b, head_tokens=w,
-                                               kv_rows=w * max_len))
+                                               kv_rows=w * cap_len))
     return sorted(fleet)
 
 

@@ -149,6 +149,30 @@ class ModelConfig:
         return full - all_experts + active_experts
 
 
+def kv_cache_bytes(cfg: ModelConfig, tokens: int,
+                   dtype_bytes: int = 2) -> int:
+    """Bytes of KV (or MLA latent) cache for `tokens` cached positions,
+    summed over layers.
+
+    The HBM-pricing primitive behind the paged-KV energy model: a paged
+    attention step gathers (and re-reads) exactly this many bytes for the
+    tokens it touches, so `ops.serving_gemm_fleet` charges the gather as
+    `extra_hbm_bytes` in `energy.gemm_fleet_energy`. Attention-free
+    families cache O(1) state per row, not per token — 0 here; hybrid
+    counts only its shared attention blocks.
+    """
+    if cfg.attention_free:
+        return 0
+    L = cfg.n_layers
+    if cfg.kind == "hybrid":
+        L = max(cfg.n_layers // max(cfg.attn_every, 1), 1)
+    if cfg.kind == "mla_moe" and cfg.kv_lora_rank:
+        per_tok = cfg.kv_lora_rank + cfg.rope_head_dim
+    else:
+        per_tok = 2 * cfg.kv_heads * cfg.hd
+    return int(tokens) * per_tok * L * int(dtype_bytes)
+
+
 def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
                       head_tokens: int | None = None,
                       kv_rows: int | None = None

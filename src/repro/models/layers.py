@@ -24,12 +24,14 @@ def _dt(config: ModelConfig):
 
 def dense_init(key, d_in: int, d_out: int, config: ModelConfig,
                scale: float | None = None) -> jax.Array:
+    """Init a (d_in, d_out) weight matrix (default 1/sqrt(d_in) scale)."""
     scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(
         _dt(config))
 
 
 def embed_init(key, vocab: int, d: int, config: ModelConfig) -> jax.Array:
+    """Init a (vocab, d) embedding table (N(0, 0.02))."""
     return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(
         _dt(config))
 
@@ -37,10 +39,12 @@ def embed_init(key, vocab: int, d: int, config: ModelConfig) -> jax.Array:
 # ---------------- norms ----------------
 
 def rmsnorm_init(d: int, config: ModelConfig) -> Params:
+    """RMSNorm params: a unit scale vector."""
     return {"scale": jnp.ones((d,), _dt(config))}
 
 
 def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    """RMS-normalize in f32, apply the learned scale, cast back."""
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     out = xf * jax.lax.rsqrt(var + eps)
@@ -50,6 +54,7 @@ def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
 # ---------------- rotary embeddings ----------------
 
 def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Rotary base frequencies for a head dim (theta^(-2i/hd))."""
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
                             / head_dim))
 
@@ -95,6 +100,7 @@ def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
 
 def attention_init(key, config: ModelConfig, d_model: int | None = None
                    ) -> Params:
+    """Init q/k/v/o projections for (possibly grouped-query) attention."""
     d = d_model or config.d_model
     hd, H, KV = config.hd, config.n_heads, config.kv_heads
     ks = jax.random.split(key, 4)
@@ -139,11 +145,13 @@ def attention_mask(Sq: int, Sk: int, *, causal: bool,
 
 def _sdpa_block(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
                 q_offset: jax.Array | int = 0,
-                kv_len: jax.Array | None = None) -> jax.Array:
+                kv_len: jax.Array | None = None,
+                kv_valid: jax.Array | None = None) -> jax.Array:
     """One query block. q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).
 
     Matmuls stay in the input dtype (bf16 on TPU -> MXU) with fp32
-    accumulation; softmax in fp32.
+    accumulation; softmax in fp32. `kv_valid` (B, Sk) ANDs an extra
+    key-validity mask in — the paged-KV page-table mask.
     """
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
@@ -153,6 +161,9 @@ def _sdpa_block(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
                         preferred_element_type=jnp.float32) / math.sqrt(hd)
     mask = attention_mask(Sq, Sk, causal=causal, q_offset=q_offset,
                           kv_len=kv_len)
+    if kv_valid is not None:
+        kvm = kv_valid[:, None, :]                       # (B, 1, Sk)
+        mask = kvm if mask is None else (mask & kvm)
     if mask is not None:
         scores = jnp.where(mask[:, None, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
@@ -163,21 +174,23 @@ def _sdpa_block(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
 
 def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
           q_offset: jax.Array | int = 0,
-          kv_len: jax.Array | None = None) -> jax.Array:
+          kv_len: jax.Array | None = None,
+          kv_valid: jax.Array | None = None) -> jax.Array:
     """Exact attention, query-chunked so peak score memory is
     O(Q_CHUNK x Sk) instead of O(Sq x Sk) — required for the 32k/500k cells.
     """
     B, Sq, H, hd = q.shape
     if Sq <= Q_CHUNK or Sq % Q_CHUNK != 0:
         return _sdpa_block(q, k, v, causal=causal, q_offset=q_offset,
-                           kv_len=kv_len)
+                           kv_len=kv_len, kv_valid=kv_valid)
     nb = Sq // Q_CHUNK
     qb = q.reshape(B, nb, Q_CHUNK, H, hd).swapaxes(0, 1)  # (nb, B, qc, H, hd)
 
     def body(_, xs):
         blk, i = xs
         off = q_offset + i * Q_CHUNK
-        o = _sdpa_block(blk, k, v, causal=causal, q_offset=off, kv_len=kv_len)
+        o = _sdpa_block(blk, k, v, causal=causal, q_offset=off, kv_len=kv_len,
+                        kv_valid=kv_valid)
         return None, o
 
     _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nb)))
@@ -239,6 +252,108 @@ def cache_update(cache: jax.Array, update: jax.Array,
                                 jnp.asarray(update_lens, index.dtype))
 
 
+# ---------------- paged KV cache ----------------
+#
+# The paged layout replaces each row's dense (max_len, ...) cache with a
+# shared pool of fixed-size pages, (P, T, ...) per layer, plus a per-row
+# page table (B, n) of physical page ids mapping logical page slot j to
+# pool page table[b, j]. Page 0 is the reserved null page (see
+# `repro.serving.paging.NULL_PAGE`): rows point unreserved slots — and
+# dead/padded rows their whole table — at it, writes through it are
+# dropped, and reads from it are masked by `page_valid_mask`. Attention
+# gathers each row's pages back into a dense (B, n*T, ...) view per layer,
+# so with n*T == max_len the post-mask score tensor is bit-identical to
+# the dense path (junk behind the mask is replaced wholly by -1e30 either
+# way) — the engine's paged-vs-dense parity contract rests on this.
+
+
+def paged_gather(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather a dense per-row view from the page pool.
+
+    pages: (P, T, ...) one layer's pool; table: (B, n) int32 physical page
+    ids. Returns (B, n*T, ...) — row b's logical positions in order. The
+    view is a transient (one layer at a time under the block scan); the
+    resident footprint stays the pool's.
+    """
+    B, n = table.shape
+    T = pages.shape[1]
+    out = jnp.take(pages, table, axis=0)                 # (B, n, T, ...)
+    return out.reshape((B, n * T) + pages.shape[2:])
+
+
+def paged_cache_update(pages: jax.Array, update: jax.Array,
+                       table: jax.Array, index: jax.Array,
+                       update_lens: jax.Array | None = None) -> jax.Array:
+    """Scatter `update` (B, S, ...) into the page pool at each row's
+    logical positions ``index[b] .. index[b]+S`` (table-translated).
+
+    The paged counterpart of `cache_update`: `index` is scalar or (B,),
+    `update_lens` (B,) limits each row's write to its valid tokens.
+    Invalid positions — beyond `update_lens`, past the table, or mapping
+    to the null page (dead rows) — are routed out of bounds and dropped,
+    so a shared page can never be corrupted by pad junk or dead slots.
+    Live rows write only pages they own exclusively (the allocator's
+    copy-on-write contract), hence no scatter collisions.
+    """
+    B, S = update.shape[:2]
+    P, T = pages.shape[:2]
+    n = table.shape[1]
+    index = jnp.asarray(index)
+    if index.ndim == 0:
+        index = jnp.broadcast_to(index, (B,))
+    pos = index[:, None] + jnp.arange(S, dtype=index.dtype)[None, :]
+    slot = pos // T                                      # logical page slot
+    phys = jnp.take_along_axis(table, jnp.clip(slot, 0, n - 1), axis=1)
+    flat = phys.astype(index.dtype) * T + pos % T
+    valid = (slot < n) & (phys != 0)
+    if update_lens is not None:
+        lens = jnp.asarray(update_lens, index.dtype)
+        valid = valid & (jnp.arange(S, dtype=index.dtype)[None, :]
+                         < lens[:, None])
+    flat = jnp.where(valid, flat, P * T)                 # OOB -> dropped
+    flat_pool = pages.reshape((P * T,) + pages.shape[2:])
+    upd = update.reshape((B * S,) + update.shape[2:]).astype(pages.dtype)
+    new = flat_pool.at[flat.reshape(B * S)].set(upd, mode="drop")
+    return new.reshape(pages.shape)
+
+
+def page_valid_mask(table: jax.Array, Sk: int) -> jax.Array:
+    """(B, Sk) bool — True where a gathered view position maps to a real
+    (non-null) page. Sk must equal n*T for the (B, n) table."""
+    B, n = table.shape
+    T = Sk // n
+    return jnp.repeat(table != 0, T, axis=1)
+
+
+def paged_attention_mask(Sq: int, Sk: int, table: jax.Array, *,
+                         causal: bool, q_offset: jax.Array | int = 0,
+                         kv_len: jax.Array | None = None) -> jax.Array:
+    """`attention_mask` AND page-table validity — the paged-KV mask.
+
+    Where every in-range logical position has a real page (the allocator
+    reserves full capacity up front), this equals the dense mask on all
+    unmasked positions, which is what makes paged attention bit-identical
+    to dense.
+    """
+    mask = attention_mask(Sq, Sk, causal=causal, q_offset=q_offset,
+                          kv_len=kv_len)
+    pv = page_valid_mask(table, Sk)[:, None, :]          # (B, 1, Sk)
+    return pv if mask is None else (mask & pv)
+
+
+def copy_pool_pages(pool: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Copy pool pages src[i] -> dst[i] on every leaf (and every layer).
+
+    The device half of the allocator's copy-on-write fork and partial-page
+    snapshot: leaves are (L, P, T, ...), src/dst are (C,) int32. Padding
+    entries with src == dst == 0 is a harmless null-page self-copy (the
+    engine pads copy batches to a bucketed size to bound jit variants).
+    """
+
+    return {k: (v if k == "table" else v.at[:, dst].set(v[:, src]))
+            for k, v in pool.items()}
+
+
 def attention_apply(
     p: Params,
     x: jax.Array,
@@ -282,7 +397,28 @@ def attention_apply(
             k = apply_rope(k, positions, config.rope_theta)
 
     new_cache = None
-    if kv_cache is not None and xa is None:
+    if kv_cache is not None and xa is None and "k_pages" in kv_cache:
+        # paged decode/chunk: scatter new k/v through the page table, then
+        # gather the dense per-row view back for exact attention. Same
+        # contracts as the dense branch (scalar/per-row cache_index,
+        # seq_lens-masked chunk writes); bit-identical outputs when the
+        # table spans max_len (see the paged-KV section above).
+        table = kv_cache["table"]
+        ck = paged_cache_update(kv_cache["k_pages"],
+                                k.astype(kv_cache["k_pages"].dtype),
+                                table, cache_index, update_lens=seq_lens)
+        cv = paged_cache_update(kv_cache["v_pages"],
+                                v.astype(kv_cache["v_pages"].dtype),
+                                table, cache_index, update_lens=seq_lens)
+        new_cache = {"k_pages": ck, "v_pages": cv, "table": table}
+        ck_d = paged_gather(ck, table)
+        cv_d = paged_gather(cv, table)
+        ck_c = ck_d if ck_d.dtype == q.dtype else ck_d.astype(q.dtype)
+        cv_c = cv_d if cv_d.dtype == q.dtype else cv_d.astype(q.dtype)
+        out = _sdpa(q, ck_c, cv_c, causal=True, q_offset=cache_index,
+                    kv_len=cache_index + S,
+                    kv_valid=page_valid_mask(table, ck_d.shape[1]))
+    elif kv_cache is not None and xa is None:
         # decode: write new k/v at cache_index, attend over the prefix.
         # cache_index is a scalar (whole batch at one position — wave
         # serving) or (B,) (per-slot positions — continuous batching).
@@ -326,6 +462,8 @@ def swiglu_init(key, config: ModelConfig, d_ff: int | None = None,
 
 def swiglu_apply(p: Params, x: jax.Array,
                  config: ModelConfig | None = None) -> jax.Array:
+    """SwiGLU / MLP forward (gated when `w_gate` is present); routes
+    through explicit TP collectives when the config asks for them."""
     if config is not None and config.tp_collectives == "explicit":
         from repro.distributed.tp import tp_column, tp_row
 

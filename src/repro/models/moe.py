@@ -339,7 +339,26 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
     k_pe = L.apply_rope(k_pe, positions, cfg.rope_theta)
 
     new_cache = None
-    if kv_cache is not None:
+    kv_valid = None
+    if kv_cache is not None and "c_kv_pages" in kv_cache:
+        # paged latent cache: scatter c_kv/k_pe through the page table,
+        # gather the dense per-row view back (same bit-parity contract as
+        # layers.attention_apply's paged branch)
+        table = kv_cache["table"]
+        cc = L.paged_cache_update(kv_cache["c_kv_pages"],
+                                  c_kv.astype(kv_cache["c_kv_pages"].dtype),
+                                  table, cache_index, update_lens=seq_lens)
+        cp = L.paged_cache_update(kv_cache["k_pe_pages"],
+                                  k_pe[:, :, 0].astype(
+                                      kv_cache["k_pe_pages"].dtype),
+                                  table, cache_index, update_lens=seq_lens)
+        new_cache = {"c_kv_pages": cc, "k_pe_pages": cp, "table": table}
+        c_kv_full = L.paged_gather(cc, table)
+        k_pe_full = L.paged_gather(cp, table)[:, :, None]
+        kv_valid = L.page_valid_mask(table, c_kv_full.shape[1])
+        kv_len = cache_index + S
+        q_offset = cache_index
+    elif kv_cache is not None:
         # cache_index: scalar (wave serving) or (B,) per-slot positions
         # (continuous batching) — L.cache_update handles both
         cc = L.cache_update(kv_cache["c_kv"],
@@ -373,6 +392,8 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
         scores *= scale
         mask = L.attention_mask(Sq, Sk, causal=True, q_offset=off,
                                 kv_len=kv_len)
+        if kv_valid is not None:
+            mask = mask & kv_valid[:, None, :]
         scores = jnp.where(mask[:, None], scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1)
         return jnp.einsum("bhqk,bkhd->bqhd", w.astype(x.dtype), v,
@@ -428,4 +449,16 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
                           dtype),
         "k_pe": jnp.zeros((cfg.n_layers, batch, max_len, cfg.rope_head_dim),
                           dtype),
+    }
+
+
+def init_mla_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                       dtype=jnp.bfloat16) -> dict:
+    """Paged MLA latent pool (the rank-r/pe analogue of
+    `transformer.init_kv_page_pool`; page 0 reserved as the null page)."""
+    return {
+        "c_kv_pages": jnp.zeros(
+            (cfg.n_layers, num_pages, page_size, cfg.kv_lora_rank), dtype),
+        "k_pe_pages": jnp.zeros(
+            (cfg.n_layers, num_pages, page_size, cfg.rope_head_dim), dtype),
     }

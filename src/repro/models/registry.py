@@ -34,6 +34,10 @@ class ModelApi:
     # pytree the first chunk writes into: (cfg, batch, max_len) -> state.
     prefill_chunk: Callable | None = None
     init_state: Callable | None = None
+    # paged-KV pool for families the engine can serve paged:
+    # (cfg, num_pages, page_size) -> pool leaves (L, P, T, ...); the
+    # engine pairs it with a per-row page table (see repro.serving.paging)
+    init_page_pool: Callable | None = None
 
 
 def _zero_index_state(init_cache, key: str = "kv"):
@@ -58,6 +62,7 @@ def _dense_api() -> ModelApi:
             p, t, ln, s, cfg, tfm.dense_block_apply),
         init_state=_zero_index_state(
             lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml)),
+        init_page_pool=tfm.init_kv_page_pool,
     )
 
 
@@ -74,6 +79,7 @@ def _moe_api() -> ModelApi:
             p, t, ln, s, cfg, moe.moe_block_apply),
         init_state=_zero_index_state(
             lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml)),
+        init_page_pool=tfm.init_kv_page_pool,
     )
 
 
@@ -100,6 +106,7 @@ def _mla_moe_api() -> ModelApi:
         prefill_chunk=lambda p, t, ln, s, cfg: tfm.lm_prefill_chunk(
             p, t, ln, s, cfg, moe.mla_moe_block_apply),
         init_state=_zero_index_state(ic),
+        init_page_pool=moe.init_mla_page_pool,
     )
 
 

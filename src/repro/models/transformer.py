@@ -171,6 +171,19 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def init_kv_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Paged KV pool: `num_pages` shared pages of `page_size` tokens per
+    layer (page 0 reserved as the null page — see `repro.serving.paging`).
+    The engine pairs this with a per-row page table to form the paged
+    decode cache `{"k_pages", "v_pages", "table"}`."""
+    shape = (cfg.n_layers, num_pages, page_size, cfg.kv_heads, cfg.hd)
+    return {
+        "k_pages": jnp.zeros(shape, dtype),
+        "v_pages": jnp.zeros(shape, dtype),
+    }
+
+
 def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
                block_apply: Callable = dense_block_apply,
                max_len: int | None = None) -> tuple[jax.Array, dict]:

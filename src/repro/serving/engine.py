@@ -63,6 +63,8 @@ CONTINUOUS_KINDS = ("dense", "moe", "mla_moe", "mamba1", "mamba2", "hybrid")
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: a prompt, a budget, an optional EOS id."""
+
     uid: int
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int = 32
@@ -73,6 +75,8 @@ class Request:
 
 @dataclasses.dataclass
 class Result:
+    """A finished request's tokens plus latency/energy telemetry."""
+
     uid: int
     tokens: np.ndarray          # generated ids (includes EOS if emitted)
     prompt_len: int
@@ -97,6 +101,8 @@ class _Slot:
     t_first_model: float = 0.0  # first-token time (model clock)
     steps: int = 0              # resident decode iterations so far
     rng: np.random.Generator | None = None   # per-request sampling stream
+    pages: list[int] | None = None  # paged layout: owned/shared page ids
+    index: int = 0              # paged layout: host-tracked cache position
 
 
 @dataclasses.dataclass
@@ -115,14 +121,26 @@ class _Admission:
     rng: np.random.Generator | None = None
     ready: "_Slot | None" = None  # prefilled + first token sampled
     first_tok: int = 0
+    pages: list[int] | None = None  # paged layout: reserved page ids
+
+
+# families whose cache the paged layout supports: per-token KV (or MLA
+# latent) rows that page cleanly. SSM/hybrid state is O(1)-per-row (or
+# mixed) and stays dense.
+PAGED_KINDS = ("dense", "moe", "mla_moe")
 
 
 class ServingEngine:
+    """Continuous-batching serving engine (see the module docstring for
+    the serving model; `docs/serving.md` for the full guide)."""
+
     def __init__(self, model, params, cfg: ModelConfig, *,
                  max_batch: int = 8, max_len: int = 512,
                  greedy: bool = True, seed: int = 0,
                  mode: str = "auto",
                  admission: str = "chunked", chunk_tokens: int = 64,
+                 kv_layout: str = "dense", page_size: int = 64,
+                 num_pages: int | None = None, prefix_cache: bool = True,
                  pretune: bool = False, tune_objective: str = "runtime",
                  tune_rank_mode: str = "auto",
                  chip: str | None = None):
@@ -130,6 +148,17 @@ class ServingEngine:
         mid-decode retire/refill), "wave" (legacy batch-of-waves), or
         "auto" (continuous for the families that support per-slot decode
         state — see CONTINUOUS_KINDS — wave otherwise).
+
+        `kv_layout` picks the KV-cache layout: "dense" (one max_len
+        buffer per decode slot and lane row) or "paged" (a shared pool of
+        `page_size`-token pages with per-row page tables, host-side
+        free-list allocator, and — with `prefix_cache` — shared-prefix
+        page reuse across requests; see `repro.serving.paging`).
+        `num_pages` sizes the pool (default: full capacity for every slot
+        and lane row, i.e. no HBM saving until callers lower it). Paged
+        serving requires chunked admission, a PAGED_KINDS family, and
+        `page_size` dividing `max_len`; token streams are bit-identical
+        to the dense layout.
 
         `admission` picks how continuous mode prefills: "chunked"
         (default — prompts feed through the decode loop `chunk_tokens`
@@ -185,6 +214,38 @@ class ServingEngine:
         # availability — finished admissions park in the lane until a slot
         # frees, so TTFT under a burst is lane-bound, not retirement-bound
         self.lane_width = 2 * max_batch
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        self._allocator = None
+        self._pool = None           # device page pool, built on first run
+        self._copy_pages = None
+        if kv_layout == "paged":
+            from repro.serving.paging import PageAllocator
+
+            if cfg.kind not in PAGED_KINDS:
+                raise ValueError(
+                    f"kv_layout='paged' unsupported for kind="
+                    f"{cfg.kind!r} (SSM/hybrid state is O(1) per row, "
+                    f"not per token); use dense")
+            if mode == "wave" or admission != "chunked":
+                raise ValueError(
+                    "kv_layout='paged' requires continuous serving with "
+                    "admission='chunked'")
+            if max_len % page_size:
+                raise ValueError(
+                    f"page_size={page_size} must divide "
+                    f"max_len={max_len} (page tables span max_len)")
+            self._n_row_pages = max_len // page_size
+            if num_pages is None:
+                # full capacity for every slot and lane row + null page:
+                # parity-safe default; benches shrink it to realize the
+                # fixed-HBM concurrency win
+                num_pages = ((max_batch + self.lane_width)
+                             * self._n_row_pages + 1)
+            self._allocator = PageAllocator(num_pages, page_size,
+                                            prefix_cache=prefix_cache)
         self.queue: deque[Request] = deque()
         self.seed = seed
         if chip is not None:
@@ -259,6 +320,7 @@ class ServingEngine:
     # queue
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue a request (stamps submit wall/model-clock times)."""
         # attention-free (SSM) decode state is O(1) per token — no
         # length-bounded KV cache, so no prompt/budget bound applies
         if not self.cfg.attention_free and len(req.prompt) >= self.max_len:
@@ -299,14 +361,27 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # energy model
     # ------------------------------------------------------------------
+    def _kv_gather_bytes(self, batch_rows: int) -> float:
+        """Non-GEMM KV-cache HBM traffic one call issues: attention reads
+        each row's cached keys/values once under the dense layout; the
+        paged layout additionally materializes the gathered per-row view
+        through the page table before reading it — 2x the cache bytes.
+        Pricing both layouts keeps the bench's J/token comparison
+        apples-to-apples (zero for attention-free families either way)."""
+        from repro.models.config import kv_cache_bytes
+
+        scale = 2.0 if self.kv_layout == "paged" else 1.0
+        return scale * kv_cache_bytes(self.cfg, batch_rows * self.max_len)
+
     def _step_energy(self, key, n_rows: int, head_rows: int | None = None,
                      batch_rows: int | None = None):
         """Predicted StepEnergyEstimate for a step over `n_rows` GEMM rows
         (decode: max_batch; prefill/chunk: padded token count, with the LM
         head sized to the rows actually unembedded and MLA's cache-wide
         K/V decompression sized to batch_rows * max_len), cached per key.
-        Returns None (once, with a warning) when the energy model is
-        unavailable."""
+        Under the paged layout the per-call page-gather traffic is charged
+        as extra HBM bytes. Returns None (once, with a warning) when the
+        energy model is unavailable."""
         hit = self._step_energy_cache.get(key, "miss")
         if hit != "miss":
             return hit
@@ -322,6 +397,7 @@ class ServingEngine:
                 chip=self.chip or "tpu_v5e",
                 dtype=self.cfg.activation_dtype,
                 configs=self.pretuned or None,
+                extra_hbm_bytes=self._kv_gather_bytes(batch_rows or 0),
                 name=f"{self.cfg.name}:{key}")
         except Exception as e:
             import warnings
@@ -377,6 +453,8 @@ class ServingEngine:
             decode, ch, chip=self.chip or "tpu_v5e",
             dtype=self.cfg.activation_dtype,
             configs=self.pretuned or None,
+            extra_hbm_bytes=(self._kv_gather_bytes(self.max_batch)
+                             + self._kv_gather_bytes(width)),
             name=f"{self.cfg.name}:fused:{width}x{chunk}")
 
     # ------------------------------------------------------------------
@@ -385,6 +463,9 @@ class ServingEngine:
     def _continuous_supported(self) -> bool:
         if self.cfg.kind not in CONTINUOUS_KINDS:
             return False
+        if self.kv_layout == "paged":
+            return (self.model.prefill_chunk is not None
+                    and self.model.init_page_pool is not None)
         if self.admission == "chunked":
             return (self.model.prefill_chunk is not None
                     and self.model.init_state is not None)
@@ -542,6 +623,8 @@ class ServingEngine:
                 f"continuous batching unsupported for kind="
                 f"{self.cfg.kind!r} (needs the per-row decode-state "
                 f"contract); use wave mode")
+        if self.kv_layout == "paged":
+            return self._run_paged()
         if self.admission == "serial":
             return self._run_serial()
         return self._run_chunked()
@@ -699,6 +782,264 @@ class ServingEngine:
             # ---- one lockstep decode step over the residents ----
             batch_state = self._decode_step(
                 slots, batch_state, token_buf, decode_cost, results)
+        self._stats["wall_s"] += time.perf_counter() - t_run0
+        return results
+
+    def _ensure_pool(self) -> None:
+        """Build the device page pool and the jitted page-copy call on
+        first use (the pool is the engine's single biggest allocation —
+        engines constructed but never run shouldn't pay it)."""
+        if self._pool is not None:
+            return
+        from repro.models import layers as L
+
+        self._pool = self.model.init_page_pool(
+            self.cfg, self._allocator.num_pages, self.page_size)
+        self._copy_pages = jax.jit(
+            lambda pool, src, dst: L.copy_pool_pages(pool, src, dst),
+            donate_argnums=(0,))
+
+    def _run_paged(self) -> list[Result]:
+        """Chunked-admission continuous batching over the paged KV layout.
+
+        Structure mirrors `_run_chunked`, but all per-row cache state
+        lives in one shared device page pool addressed through host-built
+        page tables (`repro.serving.paging.PageAllocator` owns the
+        bookkeeping), which changes three things:
+
+        * the pool threads *sequentially* through the donated chunk and
+          decode calls (one device state, not a lane state + a slot
+          state), with each call's page table and cache positions rebuilt
+          from host records — so parking a finished admission and
+          splicing it into a decode slot are pure host moves of a page
+          list, zero device copies;
+        * admission reserves a request's full page capacity up front
+          (`PageAllocator.admit`) and reuses registered shared-prefix
+          pages, skipping their prefill chunks entirely (`base` starts
+          past the matched tokens) — the TTFT win prefix reuse exists
+          for. Pool exhaustion defers admission until a retirement frees
+          pages (deadlock-free: the failure surfaces only at admission);
+        * a finished prompt registers its pages in the prefix registry
+          (plus a frozen snapshot of a partial last page) for later
+          requests to map copy-on-write.
+
+        Token streams are bit-identical to the dense layout: the gathered
+        per-row view spans the same max_len positions with the same
+        masks, and every unmasked position holds the same written values.
+        """
+        self._ensure_pool()
+        t_run0 = time.perf_counter()
+        from repro.serving.paging import PageCacheFull
+
+        B = self.max_batch
+        n_pg = self._n_row_pages
+        n_layers = self.cfg.n_layers
+        results: list[Result] = []
+        slots: list[_Slot | None] = [None] * B
+        token_buf = np.zeros(B, np.int32)
+        decode_cost = self._decode_cost()
+        decode_energy_j = decode_cost[0]
+        adm: list[_Admission] = []
+        alloc = self._allocator
+        pool = self._pool
+
+        def dev_table(rows: list[list[int] | None], width: int):
+            """(L, width, n_pg) device table from per-row page lists
+            (missing/short rows padded with the null page)."""
+            tbl = np.zeros((width, n_pg), np.int32)
+            for i, pgs in enumerate(rows):
+                if pgs:
+                    tbl[i, :len(pgs)] = pgs
+            return jnp.broadcast_to(jnp.asarray(tbl)[None],
+                                    (n_layers, width, n_pg))
+
+        def apply_copies(copies: list[tuple[int, int]]) -> None:
+            """Run the allocator's pending (src, dst) page copies on the
+            pool — COW forks and prefix snapshots. Copy batches pad to a
+            pow2 bucket with null-page self-copies to bound jit traces."""
+            nonlocal pool
+            if not copies:
+                return
+            n = 1
+            while n < len(copies):
+                n *= 2
+            src = np.zeros(n, np.int32)
+            dst = np.zeros(n, np.int32)
+            for i, (s, d) in enumerate(copies):
+                src[i], dst[i] = s, d
+            pool = self._copy_pages(pool, jnp.asarray(src),
+                                    jnp.asarray(dst))
+
+        def admit_from_queue() -> None:
+            """Admit queued requests while the lane has room and the pool
+            can cover their full reservation; on exhaustion the request
+            waits at the head of the queue for a retirement — unless
+            nothing is in flight to retire, which is a hard failure."""
+            while self.queue and len(adm) < self.lane_width:
+                req = self.queue[0]
+                try:
+                    a = alloc.admit(np.asarray(req.prompt, np.int32),
+                                    self._budget(req))
+                except PageCacheFull:
+                    if not adm and not any(s is not None for s in slots):
+                        raise
+                    break
+                self.queue.popleft()
+                apply_copies(a.copies)
+                rng = None if self.greedy else self._req_rng(req.uid)
+                adm.append(_Admission(req=req, rng=rng, base=a.base,
+                                      pages=a.pages))
+
+        def splice_ready() -> None:
+            """Move parked admissions into free decode slots — a pure
+            host transfer of the page list (the row's KV already lives in
+            the shared pool)."""
+            nonlocal adm
+            free = [b for b in range(B) if slots[b] is None]
+            if not free:
+                return
+            keep: list[_Admission] = []
+            for a in adm:
+                if a.ready is None or not free:
+                    keep.append(a)
+                    continue
+                b = free.pop(0)
+                slots[b] = a.ready
+                token_buf[b] = a.first_tok
+            adm = keep
+
+        def chunk_stage() -> bool:
+            """One bucketed chunk call over the rows still prefilling
+            (parked rows hold no lane state here, so the call width
+            covers only pending rows). Returns True when a request
+            finished outright on its first sampled token (lane row and
+            pages freed — the caller re-admits in the same pass)."""
+            nonlocal adm, pool
+            pending = [a for a in adm if a.ready is None]
+            W = 1
+            while W < len(pending):
+                W *= 2
+            for i, a in enumerate(pending):
+                a.row = i
+            rem = [len(a.req.prompt) - a.base for a in pending]
+            C = self._chunk_bucket(min(rem))
+            toks = np.zeros((W, C), np.int32)
+            lens = np.zeros(W, np.int32)
+            base = np.zeros(W, np.int32)
+            rows: list[list[int] | None] = [None] * W
+            t_disp = time.perf_counter()
+            for a in pending:
+                n = min(C, len(a.req.prompt) - a.base)
+                toks[a.row, :n] = a.req.prompt[a.base:a.base + n]
+                lens[a.row] = n
+                base[a.row] = a.base
+                rows[a.row] = a.pages
+                if a.t_start == 0.0:
+                    a.t_start = t_disp
+            state = {"kv": {**pool, "table": dev_table(rows, W)},
+                     "index": jnp.asarray(base)}
+            logits, state = self._chunk(
+                self.params, jnp.asarray(toks), jnp.asarray(lens), state)
+            pool = {k: v for k, v in state["kv"].items() if k != "table"}
+            logits = np.asarray(logits, np.float32)
+            now = time.perf_counter()
+            est_j, est_s = self._chunk_cost(W, C)
+            self._clock += est_s
+            self._stats["chunk_steps"] += 1
+            self._stats["idle_energy_j"] += (W - len(pending)) * est_j / W
+            keep: list[_Admission] = []
+            freed = False
+            for a in adm:
+                if a.ready is not None:
+                    keep.append(a)
+                    continue
+                a.base += int(lens[a.row])
+                a.chunk_energy_j += est_j / W
+                plen = len(a.req.prompt)
+                if a.base < plen:
+                    keep.append(a)
+                    continue
+                # prompt fully cached: publish its pages to the prefix
+                # registry (may snapshot a partial last page)
+                apply_copies(alloc.register(
+                    np.asarray(a.req.prompt, np.int32), a.pages, a.base))
+                tok = int(self._sample(logits[a.row:a.row + 1],
+                                       [a.rng])[0])
+                srec = _Slot(req=a.req, tokens=[tok],
+                             prefill_energy_j=a.chunk_energy_j,
+                             t_start=a.t_start, t_first=now,
+                             t_first_model=self._clock, rng=a.rng,
+                             pages=a.pages, index=plen)
+                if (a.req.eos_id is not None and tok == a.req.eos_id) or (
+                        self._budget(a.req) <= 1):
+                    self._finish(srec, now, decode_energy_j, results)
+                    alloc.release(a.pages)
+                    freed = True
+                    continue
+                a.ready = srec
+                a.first_tok = tok
+                keep.append(a)
+            adm = keep
+            return freed
+
+        def decode_step() -> None:
+            """One lockstep decode step: page tables and per-slot cache
+            positions rebuilt from host records, pool threaded through
+            the donated call; finished slots release their pages (shared
+            prefix pages drop a reference, freeing only with the last
+            reader)."""
+            nonlocal pool
+            if not any(s is not None for s in slots):
+                return
+            self._clock += decode_cost[1]
+            state = {"kv": {**pool,
+                            "table": dev_table(
+                                [s.pages if s else None for s in slots],
+                                B)},
+                     "index": jnp.asarray(np.array(
+                         [s.index if s else 0 for s in slots], np.int32))}
+            logits, state = self._decode(
+                self.params, jnp.asarray(token_buf), state)
+            pool = {k: v for k, v in state["kv"].items() if k != "table"}
+            logits = np.asarray(logits, np.float32)
+            cur = self._sample(
+                logits, [s.rng if s is not None else None for s in slots])
+            now = time.perf_counter()
+            n_active = sum(s is not None for s in slots)
+            self._stats["decode_steps"] += 1
+            self._stats["slot_steps"] += B
+            self._stats["resident_slot_steps"] += n_active
+            self._stats["idle_energy_j"] += (
+                (B - n_active) * decode_energy_j / B)
+            for b in range(B):
+                slot = slots[b]
+                if slot is None:
+                    continue
+                tok = int(cur[b])
+                slot.tokens.append(tok)
+                slot.steps += 1
+                slot.index += 1
+                token_buf[b] = tok
+                req = slot.req
+                if (req.eos_id is not None and tok == req.eos_id) or (
+                        len(slot.tokens) >= self._budget(req)):
+                    self._finish(slot, now, decode_energy_j, results)
+                    alloc.release(slot.pages)
+                    slots[b] = None
+                    token_buf[b] = 0
+
+        while self.queue or adm or any(s is not None for s in slots):
+            splice_ready()
+            while True:
+                admit_from_queue()
+                if not any(a.ready is None for a in adm):
+                    break
+                freed = chunk_stage()
+                if not (freed and self.queue):
+                    break
+            splice_ready()
+            decode_step()
+        self._pool = pool
         self._stats["wall_s"] += time.perf_counter() - t_run0
         return results
 
@@ -860,6 +1201,9 @@ class ServingEngine:
             self._stats[k] = type(v)(0)
 
     def run_until_empty(self) -> list[Result]:
+        """Serve every queued request to completion in the engine's mode
+        (``mode="auto"`` picks continuous batching when the family
+        supports it, else the wave loop)."""
         mode = self.mode
         if mode == "auto":
             mode = ("continuous" if self._continuous_supported()
@@ -882,7 +1226,10 @@ class ServingEngine:
         toks = s["generated_tokens"]
         slot_steps = s["slot_steps"]
         total_j = s["energy_j"] + s["idle_energy_j"]
+        paging = ({"paging": self._allocator.report()}
+                  if self._allocator is not None else {})
         return {
+            **paging,
             "requests": s["requests"],
             "generated_tokens": toks,
             "decode_steps": s["decode_steps"],

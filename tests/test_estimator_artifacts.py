@@ -120,6 +120,47 @@ class TestArtifactValidation:
         with pytest.raises(ArtifactError, match="schema version"):
             PerfPredictor.load(path)
 
+    def test_old_schema_without_upgrader_rejected(self, rf_pred, tmp_path):
+        path = str(tmp_path / "a.npz")
+        rf_pred.save(path)
+        _tamper(path, lambda meta, arrays: meta.update(schema_version=0))
+        with pytest.raises(ArtifactError, match="no upgrade path"):
+            PerfPredictor.load(path)
+
+    def test_old_schema_loads_through_registered_upgrader(
+            self, rf_pred, tmp_path, tables):
+        """The v(N-1) -> v(N) migration story: an artifact one schema
+        behind loads through its registered upgrader — including one that
+        rewrites arrays, provided it restamps the fingerprint."""
+        from repro.core.predictor import (
+            _SCHEMA_UPGRADERS,
+            artifact_fingerprint,
+        )
+
+        path = str(tmp_path / "a.npz")
+        rf_pred.save(path)
+        # simulate a legacy artifact: old version tag + a renamed array
+        # key the upgrader must translate back
+        _tamper(path, lambda meta, arrays: (
+            meta.update(schema_version=0),
+            arrays.update(legacy_marker=np.zeros(1))))
+
+        def upgrade(meta, state):
+            state = dict(state)
+            state.pop("legacy_marker")
+            meta = dict(meta, schema_version=1,
+                        fingerprint=artifact_fingerprint(meta, state))
+            return meta, state
+
+        _SCHEMA_UPGRADERS[0] = upgrade
+        try:
+            loaded = PerfPredictor.load(path)
+        finally:
+            del _SCHEMA_UPGRADERS[0]
+        te = tables["tpu_v5e"]
+        np.testing.assert_allclose(loaded.predict_matrix(te),
+                                   rf_pred.predict_matrix(te), rtol=1e-12)
+
     def test_legacy_pickle_rejected(self, rf_pred, tmp_path):
         path = str(tmp_path / "legacy.pkl")
         with open(path, "wb") as f:

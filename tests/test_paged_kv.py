@@ -1,0 +1,384 @@
+"""Paged KV cache tests: allocator edge cases (free-list exhaustion under a
+full lane, refcount drop on mid-decode retire, COW fork on shared-prefix
+divergence), paged-vs-dense attention-mask parity at page-boundary lengths,
+scatter/gather primitive parity, and engine-level bit-parity + prefix reuse
+for every paged family (dense / moe / mla_moe)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.paging import NULL_PAGE, PageAllocator, PageCacheFull
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="paged-test", kind="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=97, param_dtype="float32",
+        activation_dtype="float32", remat=False,
+    )
+    if kw.get("kind") == "moe":
+        base.update(n_experts=4, top_k=2, d_ff_expert=64,
+                    capacity_factor=2.0)
+    if kw.get("kind") == "mla_moe":
+        base.update(n_experts=4, top_k=2, d_ff_expert=64,
+                    capacity_factor=2.0, kv_lora_rank=16, rope_head_dim=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def prompt(seed: int, n: int, vocab: int = 97) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, vocab, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+class TestPageAllocator:
+    def test_null_page_reserved(self):
+        alloc = PageAllocator(8, 4)
+        pages = alloc.alloc(7)
+        assert NULL_PAGE not in pages
+        assert sorted(pages) == list(range(1, 8))
+
+    def test_exhaustion_raises_and_rolls_back(self):
+        """Free-list exhaustion must raise without leaking a partial grab:
+        a failed alloc leaves the free list exactly as it found it."""
+        alloc = PageAllocator(5, 4)
+        held = alloc.alloc(2)
+        free_before = alloc.free_pages
+        with pytest.raises(PageCacheFull):
+            alloc.alloc(3)
+        assert alloc.free_pages == free_before
+        alloc.release(held)
+        assert alloc.free_pages == 4
+
+    def test_refcount_frees_only_with_last_reader(self):
+        """Refcount drop on mid-decode retire: a shared page released by
+        one reader stays resident for the other and frees only when the
+        last reference drops."""
+        alloc = PageAllocator(8, 4)
+        (page,) = alloc.alloc(1)
+        alloc.retain([page])                 # second reader
+        alloc.release([page])                # first retires mid-flight
+        assert alloc.refs[page] == 1
+        assert page not in alloc._free
+        alloc.release([page])                # last reader retires
+        assert alloc.refs[page] == 0
+        assert page in alloc._free
+        with pytest.raises(AssertionError):
+            alloc.release([page])            # double free stays loud
+
+    def test_admit_register_match_roundtrip(self):
+        alloc = PageAllocator(64, 8)
+        p1 = np.arange(20, dtype=np.int32)
+        a1 = alloc.admit(p1, budget=4)
+        assert a1.base == 0 and len(a1.pages) == 3
+        copies = alloc.register(p1, a1.pages, len(p1))
+        assert len(copies) == 1              # partial-page snapshot
+        # a second prompt extending the full 20 tokens maps 2 full pages
+        # plus the frozen partial snapshot (COW-forked: position 20 lands
+        # inside it), so all 20 prefix tokens skip prefill
+        p2 = np.concatenate([p1, 50 + np.arange(6, dtype=np.int32)])
+        a2 = alloc.admit(p2, budget=4)
+        assert a2.base == 20
+        assert a2.pages[:2] == a1.pages[:2]
+        assert alloc.stats["cow_forks"] == 1
+        assert alloc.stats["prefix_hits"] == 1
+        assert alloc.stats["prefix_hit_tokens"] == 20
+
+    def test_cow_fork_when_prefix_diverges_mid_page(self):
+        """COW fork: a reader that must write into a matched page (its
+        prompt continues past a partial-page snapshot) gets a private
+        copy — the registered page is never written."""
+        alloc = PageAllocator(64, 8)
+        p1 = np.arange(12, dtype=np.int32)   # 1 full page + 4-token tail
+        a1 = alloc.admit(p1, budget=4)
+        alloc.register(p1, a1.pages, len(p1))
+        snap = alloc._partials[alloc._key(p1, 8)][1].page
+        # same 12 tokens then diverges inside page 1 -> the snapshot page
+        # matches (base 12) but position 12 lands inside it, so it forks
+        p2 = np.concatenate([p1, 90 + np.arange(3, dtype=np.int32)])
+        a2 = alloc.admit(p2, budget=4)
+        assert a2.base == 12
+        assert alloc.stats["cow_forks"] == 1
+        assert a2.copies == [(snap, a2.pages[1])]
+        assert a2.pages[1] != snap           # private writable fork
+        assert alloc.refs[snap] == 1         # registry copy untouched
+
+    def test_fully_matched_prompt_recomputes_last_token(self):
+        """A prompt entirely covered by the registry still prefills >= 1
+        token — sampling needs logits at the last prompt position."""
+        alloc = PageAllocator(64, 8)
+        p1 = np.arange(16, dtype=np.int32)
+        a1 = alloc.admit(p1, budget=4)
+        alloc.register(p1, a1.pages, len(p1))
+        a2 = alloc.admit(p1.copy(), budget=4)
+        assert a2.base == 15                 # clamped to plen - 1
+        assert alloc.stats["cow_forks"] == 1  # page 1 gets written
+
+    def test_eviction_reclaims_lru_registry_pages(self):
+        """Under pressure, refcount-1 registry entries evict LRU-first;
+        entries still shared with a live reader are not reclaimable."""
+        alloc = PageAllocator(6, 4)          # 5 usable pages
+        pa = alloc.admit(np.arange(4, dtype=np.int32), budget=1)
+        alloc.register(np.arange(4, dtype=np.int32), pa.pages, 4)
+        alloc.release(pa.pages)              # page now registry-only
+        pb = alloc.admit(100 + np.arange(4, dtype=np.int32), budget=1)
+        alloc.register(100 + np.arange(4, dtype=np.int32), pb.pages, 4)
+        # pb's reader is still live: its chain entry is shared, pa's is
+        # reclaimable. Demanding the rest of the pool must evict pa only.
+        alloc.alloc(alloc.free_pages + 1)
+        assert alloc.stats["evictions"] == 1
+        assert len(alloc._chains) == 1
+        with pytest.raises(PageCacheFull):
+            alloc.alloc(1)                   # pb's entry survived
+
+
+# ---------------------------------------------------------------------------
+# primitives: scatter/gather and mask parity
+# ---------------------------------------------------------------------------
+
+
+class TestPagedPrimitives:
+    def _pool_and_table(self, B=2, n=4, T=8, d=4, num_pages=None):
+        P = num_pages or (B * n + 1)
+        pool = jnp.zeros((P, T, d), jnp.float32)
+        table = jnp.arange(1, B * n + 1, dtype=jnp.int32).reshape(B, n)
+        return pool, table
+
+    def test_scatter_gather_matches_dense_cache(self):
+        """paged_cache_update + paged_gather == dense cache_update for
+        every (index, length) straddling a page boundary."""
+        B, n, T, d = 2, 4, 8, 4
+        rng = np.random.default_rng(0)
+        for idx, S in [(0, 8), (5, 8), (7, 1), (8, 1), (6, 4), (15, 2)]:
+            pool, table = self._pool_and_table(B, n, T, d)
+            dense = jnp.zeros((B, n * T, d), jnp.float32)
+            upd = jnp.asarray(rng.normal(size=(B, S, d)), jnp.float32)
+            lens = jnp.asarray([S, max(S - 1, 1)], jnp.int32)
+            index = jnp.full((B,), idx, jnp.int32)
+            got = L.paged_gather(
+                L.paged_cache_update(pool, upd, table, index, lens), table)
+            want = L.cache_update(dense, upd, index, lens)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_null_page_rows_drop_writes(self):
+        """A dead row (all-null table) must not scribble on the pool —
+        its writes are routed out of bounds and dropped."""
+        B, n, T, d = 2, 2, 4, 4
+        pool, table = self._pool_and_table(B, n, T, d)
+        table = table.at[1].set(NULL_PAGE)   # row 1 is dead
+        upd = jnp.ones((B, T, d), jnp.float32)
+        new = L.paged_cache_update(pool, upd, table,
+                                   jnp.zeros((B,), jnp.int32))
+        np.testing.assert_array_equal(np.asarray(new[0]),
+                                      np.zeros((T, d)))  # null page clean
+        assert float(jnp.abs(new[int(table[0, 0])]).sum()) > 0
+
+    @pytest.mark.parametrize("kv_len", [7, 8, 9, 16, 24, 31, 32])
+    def test_mask_parity_at_page_boundaries(self, kv_len):
+        """paged_attention_mask == dense attention_mask when every page is
+        real, at lengths straddling each page boundary (the parity
+        contract the engine's bit-identical token streams rest on)."""
+        B, n, T, Sq = 2, 4, 8, 1
+        Sk = n * T
+        table = jnp.arange(1, B * n + 1, dtype=jnp.int32).reshape(B, n)
+        off = jnp.asarray([kv_len - 1, max(kv_len - 2, 0)], jnp.int32)
+        kl = off + Sq
+        dense = L.attention_mask(Sq, Sk, causal=True, q_offset=off,
+                                 kv_len=kl)
+        paged = L.paged_attention_mask(Sq, Sk, table, causal=True,
+                                       q_offset=off, kv_len=kl)
+        np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+    def test_mask_blocks_null_pages(self):
+        """With a partially-null table the paged mask must block exactly
+        the positions belonging to null pages."""
+        n, T, Sq = 4, 8, 1
+        Sk = n * T
+        table = jnp.asarray([[1, 2, NULL_PAGE, NULL_PAGE]], jnp.int32)
+        m = L.paged_attention_mask(Sq, Sk, table, causal=True,
+                                   q_offset=jnp.asarray([Sk - 1]),
+                                   kv_len=jnp.asarray([Sk]))
+        got = np.asarray(m)[0, 0]
+        np.testing.assert_array_equal(got[:2 * T], True)
+        np.testing.assert_array_equal(got[2 * T:], False)
+
+    def test_copy_pool_pages_skips_table(self):
+        pool = {"k_pages": jnp.arange(24, dtype=jnp.float32
+                                      ).reshape(2, 3, 2, 2),
+                "table": jnp.ones((2, 1, 3), jnp.int32)}
+        out = L.copy_pool_pages(pool, jnp.asarray([1]), jnp.asarray([2]))
+        np.testing.assert_array_equal(np.asarray(out["k_pages"][:, 2]),
+                                      np.asarray(pool["k_pages"][:, 1]))
+        np.testing.assert_array_equal(np.asarray(out["table"]),
+                                      np.asarray(pool["table"]))
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def _mkreqs(vocab=97):
+    rng = np.random.default_rng(42)
+    shared = rng.integers(0, vocab, 20)
+    out = []
+    for i in range(6):
+        if i % 2 == 0:
+            p = np.concatenate([shared, rng.integers(0, vocab, 5 + i)])
+        else:
+            p = rng.integers(0, vocab, 10 + i)
+        out.append(Request(uid=i, prompt=p.astype(np.int32),
+                           max_new_tokens=6))
+    return out
+
+
+def _serve(cfg, reqs, **kw):
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64,
+                        chunk_tokens=16, **kw)
+    for r in reqs:
+        eng.submit(r)
+    return {r.uid: r.tokens.tolist() for r in eng.run_until_empty()}, eng
+
+
+class TestPagedEngine:
+    @pytest.mark.parametrize("kind", ["dense", "moe", "mla_moe"])
+    def test_bit_parity_with_dense_layout(self, kind):
+        """Token streams are bit-identical between the dense and paged
+        layouts for every paged family (SSM exempt by construction)."""
+        cfg = tiny_cfg(kind=kind)
+        dense, _ = _serve(cfg, _mkreqs())
+        paged, eng = _serve(cfg, _mkreqs(), kv_layout="paged", page_size=8)
+        assert dense == paged
+        rep = eng.report()
+        assert rep["paging"]["pages_in_use"] >= 0
+        assert rep["paging"]["peak_in_use"] > 0
+
+    def test_prefix_reuse_skips_prefill_and_keeps_parity(self):
+        """A later request sharing a completed request's prefix maps the
+        registered pages (prefix hit, fewer prefill chunks) and still
+        produces the exact dense-layout token stream."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        shared = prompt(7, 32)
+        tail_a = prompt(8, 8)
+        tail_b = prompt(9, 8)
+        reqs = [Request(uid=0, prompt=np.concatenate([shared, tail_a]),
+                        max_new_tokens=4),
+                Request(uid=1, prompt=np.concatenate([shared, tail_b]),
+                        max_new_tokens=4)]
+
+        def run(**kw):
+            eng = ServingEngine(model, params, cfg, max_batch=2,
+                                max_len=64, chunk_tokens=16, **kw)
+            out = {}
+            for r in reqs:                  # sequential: uid 0 registers
+                eng.submit(Request(uid=r.uid, prompt=r.prompt.copy(),
+                                   max_new_tokens=r.max_new_tokens))
+                out.update({x.uid: x.tokens.tolist()
+                            for x in eng.run_until_empty()})
+            return out, eng
+
+        dense, _ = run()
+        paged, eng = run(kv_layout="paged", page_size=8)
+        assert dense == paged
+        rep = eng.report()["paging"]
+        assert rep["prefix_hits"] >= 1
+        assert rep["prefix_hit_tokens"] >= 32
+        assert eng._stats["chunk_steps"] < 6  # uid 1 skipped shared chunks
+
+    def test_exhaustion_under_full_lane_defers_admission(self):
+        """Free-list exhaustion with the lane full: later requests wait at
+        the queue head for a retirement instead of failing, and every
+        request still completes (deadlock-free admission)."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        # 9 usable pages; each request reserves ceil((12+4)/8) = 2 pages,
+        # so at most 4 of the 6 requests fit in flight at once
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32,
+                            chunk_tokens=16, kv_layout="paged", page_size=8,
+                            num_pages=10, prefix_cache=False)
+        for i in range(6):
+            eng.submit(Request(uid=i, prompt=prompt(20 + i, 12),
+                               max_new_tokens=4))
+        res = eng.run_until_empty()
+        assert sorted(r.uid for r in res) == list(range(6))
+        assert all(r.n_tokens == 4 for r in res)
+        rep = eng.report()["paging"]
+        assert rep["peak_in_use"] <= 9
+        assert rep["pages_in_use"] == 0      # every page returned
+
+    def test_exhaustion_with_nothing_in_flight_is_loud(self):
+        """A request whose reservation can never be satisfied must raise
+        PageCacheFull, not deadlock the admission loop."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32,
+                            chunk_tokens=16, kv_layout="paged", page_size=8,
+                            num_pages=3)     # 2 usable < ceil(28/8) = 4
+        eng.submit(Request(uid=0, prompt=prompt(0, 24), max_new_tokens=4))
+        with pytest.raises(PageCacheFull):
+            eng.run_until_empty()
+
+    def test_mid_decode_retire_releases_only_own_refs(self):
+        """Refcount drop on mid-decode retire, end to end: two readers of
+        a shared prefix with different budgets; the early retirement frees
+        only its private pages, and after the drain every page is either
+        free or held by the registry alone."""
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64,
+                            chunk_tokens=16, kv_layout="paged", page_size=8)
+        shared = prompt(5, 24)
+        eng.submit(Request(uid=0, prompt=np.concatenate([shared,
+                                                         prompt(6, 4)]),
+                           max_new_tokens=2))
+        eng.run_until_empty()               # uid 0 registers the prefix
+        eng.submit(Request(uid=1, prompt=np.concatenate([shared,
+                                                         prompt(7, 4)]),
+                           max_new_tokens=2))
+        eng.submit(Request(uid=2, prompt=np.concatenate([shared,
+                                                         prompt(8, 4)]),
+                           max_new_tokens=12))
+        res = eng.run_until_empty()
+        assert {r.uid: r.n_tokens for r in res} == {1: 2, 2: 12}
+        alloc = eng._allocator
+        rep = eng.report()["paging"]
+        assert rep["prefix_hits"] >= 2
+        # all live references now belong to the registry
+        assert rep["pages_in_use"] == rep["registry_entries"]
+        assert int(alloc.refs.max()) == 1    # no leaked reader refs
+
+    def test_layout_validation(self):
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        with pytest.raises(ValueError, match="kv_layout"):
+            ServingEngine(model, params, cfg, max_batch=2, max_len=32,
+                          kv_layout="interleaved")
+        with pytest.raises(ValueError, match="page_size"):
+            ServingEngine(model, params, cfg, max_batch=2, max_len=36,
+                          kv_layout="paged", page_size=8)
+        ssm_cfg = tiny_cfg(kind="mamba1", ssm_state=8)
+        ssm = get_model(ssm_cfg)
+        with pytest.raises(ValueError, match="paged"):
+            ServingEngine(ssm, ssm.init(jax.random.key(0), ssm_cfg),
+                          ssm_cfg, max_batch=2, max_len=32,
+                          kv_layout="paged", page_size=8)
