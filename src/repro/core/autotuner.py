@@ -368,6 +368,7 @@ class GemmAutotuner:
         (fewer when the valid set is smaller; empty when no candidate
         fits) and the (S, top_k) score matrix (+inf past the valid set).
         """
+        import jax
         import jax.numpy as jnp
 
         dtype = canon_dtype(dtype)
@@ -383,7 +384,12 @@ class GemmAutotuner:
         mnk[S:] = mnk[S - 1]
         jitted, device_params = self._graph_rank_fn(objective, x64, k)
         consts = self._graph_consts(dtype)
-        with precision_scope(x64):
+        # The production call path reaches here *during* an outer jit
+        # trace (ops.matmul tunes at trace time): every input is a
+        # trace-constant, so escape the ambient trace and run the ranker
+        # as a normal compiled dispatch — otherwise the pjit call would
+        # inline into the caller's graph and hand back tracers.
+        with precision_scope(x64), jax.ensure_compile_time_eval():
             scores, idx = jitted(
                 jnp.asarray(mnk), jnp.asarray(blocks),
                 {name: jnp.asarray(v) for name, v in consts.items()},

@@ -32,6 +32,12 @@ class ChipSpec:
     hbm_power_w: float             # max dynamic power of HBM path
     tdp_w: float
     n_compute_units: int = 1       # SM count on GPUs; cores per chip on TPU
+    # aggregate collective bandwidth per chip in GB/s — what one chip can
+    # push onto the interconnect during a ring collective (ICI links on TPU,
+    # the PCIe/NVLink envelope on GPUs). 0.0 = chip cannot shard.
+    link_bw_gbs: float = 0.0
+    # fixed per-collective launch/synchronization latency (seconds)
+    link_launch_s: float = 2e-6
 
     def peak(self, dtype: str = "bf16") -> float:
         return self.peak_flops[dtype]
@@ -71,6 +77,7 @@ TPU_V5E = ChipSpec(
     hbm_power_w=45.0,
     tdp_w=200.0,
     n_compute_units=1,
+    link_bw_gbs=200.0,           # 4 ICI links x 50 GB/s
 )
 
 # The paper's chip, calibrated to its measurements: 46 SMs x 48 KiB shared
@@ -93,6 +100,7 @@ RTX_4070 = ChipSpec(
     hbm_power_w=35.0,
     tdp_w=200.0,
     n_compute_units=46,
+    link_bw_gbs=32.0,            # PCIe 4.0 x16 — no NVLink on a 4070
 )
 
 

@@ -15,6 +15,10 @@ from typing import Mapping
 from repro.core.chips import DTYPE_BYTES, TPU_V5E, ChipSpec, canon_dtype, get_chip
 from repro.core.roofline import RooflineReport
 
+# ICI/link interface power while the wire is busy (matches the
+# `step_power_w` default duty-cycle term).
+ICI_POWER_W = 12.0
+
 
 @dataclasses.dataclass
 class EnergyReport:
@@ -60,10 +64,15 @@ class StepEnergyEstimate:
     name: str
     step_s: float                  # predicted wall time of the step
     power_w: float                 # duty-cycle chip power during the step
-    energy_j: float                # power_w * step_s
+    energy_j: float                # fleet energy: power_w * step_s * n_chips
     compute_s: float               # summed GEMM compute terms
     memory_s: float                # summed GEMM memory terms
     n_gemms: float                 # weighted GEMM count
+    # sharded-fleet terms (tp=1 single-chip estimates leave these at rest)
+    n_chips: int = 1
+    collective_s: float = 0.0      # unoverlapped wire time on the links
+    exposed_collective_s: float = 0.0   # wire+launch time added to step_s
+    overlap_factor: float = 0.0    # fraction of wire hidden behind GEMMs
 
     def as_row(self) -> dict:
         """Flatten to a plain dict (CSV/markdown table row)."""
@@ -89,6 +98,10 @@ def fused_step_energy(*shape_counts: Mapping[tuple[int, int, int], float],
                       configs: Mapping[tuple[int, int, int], object]
                       | None = None,
                       extra_hbm_bytes: float = 0.0,
+                      tp: int = 1,
+                      collective_bytes: float = 0.0,
+                      n_collectives: float = 0.0,
+                      overlap_chunks: int = 1,
                       name: str = "fused_step") -> StepEnergyEstimate:
     """Price one fused serving step: the union of several sub-step GEMM
     fleets (decode rows + chunk rows) run back-to-back through one
@@ -96,7 +109,10 @@ def fused_step_energy(*shape_counts: Mapping[tuple[int, int, int], float],
     a single engine step rather than separately-idling phases."""
     return gemm_fleet_energy(combine_shape_counts(*shape_counts),
                              chip=chip, dtype=dtype, configs=configs,
-                             extra_hbm_bytes=extra_hbm_bytes, name=name)
+                             extra_hbm_bytes=extra_hbm_bytes, tp=tp,
+                             collective_bytes=collective_bytes,
+                             n_collectives=n_collectives,
+                             overlap_chunks=overlap_chunks, name=name)
 
 
 def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
@@ -105,6 +121,10 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
                       configs: Mapping[tuple[int, int, int], object]
                       | None = None,
                       extra_hbm_bytes: float = 0.0,
+                      tp: int = 1,
+                      collective_bytes: float = 0.0,
+                      n_collectives: float = 0.0,
+                      overlap_chunks: int = 1,
                       name: str = "step") -> StepEnergyEstimate:
     """Energy of one step built from its GEMM fleet (the paper's per-kernel
     model lifted to a serving step).
@@ -114,16 +134,24 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
     tuned `BlockConfig`s (e.g. `ServingEngine.pretuned`) so the estimate
     reflects the block sizes the step actually runs. Runtime per GEMM comes
     from the measurement substrate's analytical model; power comes from
-    `step_power_w` over the fleet's aggregate duty cycles (no collective
-    term — single-chip serving).
+    `step_power_w` over the fleet's aggregate duty cycles.
 
     `extra_hbm_bytes` charges non-GEMM HBM traffic the step issues on top
     of the fleet — the paged-KV engine's page-table gather/scatter (cache
     bytes read into the dense per-layer view and written back), priced at
     the chip's HBM bandwidth and folded into both the memory duty cycle
     and the step's wall time.
+
+    Sharded fleets: with `tp > 1` the shapes are the *per-shard* extents
+    (see `gemm_shape_counts(..., tp=)`) and `collective_bytes` /
+    `n_collectives` describe one chip's per-step ring traffic, priced by
+    `hwsim.collective_cost` against `ChipSpec.link_bw_gbs` with
+    `overlap_chunks`-way interleaved overlap. The returned estimate is
+    fleet-level: `step_s` is one lockstep step, `energy_j` multiplies the
+    per-chip energy by `tp` chips, and the exposed (non-hidden) collective
+    time extends the step.
     """
-    from repro.core.hwsim import GemmConfig, TpuGemmSimulator
+    from repro.core.hwsim import GemmConfig, TpuGemmSimulator, collective_cost
     from repro.kernels.tiled_matmul import DEFAULT_CONFIG
 
     chip = get_chip(chip)
@@ -162,23 +190,39 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
         gather_s = float(extra_hbm_bytes) / chip.hbm_bw
         memory_s += gather_s
         step_s += gather_s
+    coll = collective_cost(collective_bytes, chip=chip, tp=tp,
+                           n_collectives=n_collectives,
+                           overlap_chunks=overlap_chunks,
+                           compute_s=step_s)
+    step_s += coll.exposed_s
     flops = sum(2.0 * m * n * k * w for (m, n, k), w in zip(shapes, weights))
     byts = (sum((m * k + k * n + m * n) * bytes_per * w
                 for (m, n, k), w in zip(shapes, weights))
             + float(extra_hbm_bytes))
     # the fleet runs kernels back-to-back, so duty cycles are relative to
     # total step time: setting collective_s = step_s (with zero ICI power)
-    # pins `step_power_w`'s bound to the step without adding power
+    # pins `step_power_w`'s bound to the step without adding power; the real
+    # ICI duty (unoverlapped wire time over the step) is added separately
     report = RooflineReport(
-        name=name, n_chips=1, dtype=dtype, hlo_flops=flops, hlo_bytes=byts,
-        collective_wire_bytes=0.0, compute_s=min(compute_s, step_s),
+        name=name, n_chips=max(int(tp), 1), dtype=dtype, hlo_flops=flops,
+        hlo_bytes=byts, collective_wire_bytes=coll.wire_bytes,
+        compute_s=min(compute_s, step_s),
         memory_s=min(memory_s, step_s), collective_s=step_s)
-    power = (step_power_w(report, chip, ici_power_w=0.0)
-             if step_s > 0 else chip.idle_power_w)
+    if step_s > 0:
+        power = step_power_w(report, chip, ici_power_w=0.0)
+        if coll.wire_s > 0.0:
+            power = min(power + ICI_POWER_W * min(coll.wire_s / step_s, 1.0),
+                        chip.tdp_w)
+    else:
+        power = chip.idle_power_w
+    n_chips = max(int(tp), 1)
     return StepEnergyEstimate(
-        name=name, step_s=step_s, power_w=power, energy_j=power * step_s,
+        name=name, step_s=step_s, power_w=power,
+        energy_j=power * step_s * n_chips,
         compute_s=compute_s, memory_s=memory_s,
-        n_gemms=float(sum(weights)))
+        n_gemms=float(sum(weights)), n_chips=n_chips,
+        collective_s=coll.wire_s, exposed_collective_s=coll.exposed_s,
+        overlap_factor=coll.overlap_factor)
 
 
 def energy_report(report: RooflineReport, *, tokens_per_step: float,

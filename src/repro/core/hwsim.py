@@ -385,3 +385,58 @@ class TpuGemmSimulator:
                 for t in tiles]
         buffers = self.analyze_batch(cfgs)["max_inflight_buffers"]
         return {t: int(b) for t, b in zip(tiles, buffers)}
+
+
+# ---------------------------------------------------------------------------
+# Collective cost model (sharded serving).
+#
+# A ring collective on `tp` chips is decomposed the way the SUMMA pipelining
+# exemplars decompose a broadcast cycle: a host/launch phase (fixed latency
+# per collective issue), a wire phase (ring bytes at the chip's aggregate
+# link bandwidth), and a drain phase folded into the wire term — the
+# H2D / compute / D2H shape of the paper's transfer analysis, applied to
+# chip-to-chip links instead of the PCIe bus. When the projection is split
+# into `chunks` interleaved column chunks (double-buffered in
+# `distributed.tp`), every chunk's wire time except the last can hide under
+# the next chunk's GEMM, bounded by the compute actually available.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveEstimate:
+    """Predicted cost of one step's collective traffic on one chip."""
+
+    wire_bytes: float      # ring bytes leaving this chip per step
+    wire_s: float          # wire_bytes / link bandwidth (unoverlapped)
+    launch_s: float        # per-collective issue latency, summed
+    hidden_s: float        # wire time hidden behind interleaved GEMM chunks
+    exposed_s: float       # wire_s + launch_s - hidden_s (adds to step time)
+    overlap_factor: float  # hidden_s / wire_s in [0, 1]
+
+
+def collective_cost(wire_bytes: float, *, chip: ChipSpec | str = TPU_V5E,
+                    tp: int = 1, n_collectives: float = 0.0,
+                    overlap_chunks: int = 1,
+                    compute_s: float = 0.0) -> CollectiveEstimate:
+    """Price one step's collective traffic for a `tp`-way sharded fleet.
+
+    `wire_bytes` is the per-chip ring traffic the step issues (already
+    scaled by the (tp-1)/tp ring factor — see
+    `models.config.collective_wire_bytes`); `n_collectives` counts logical
+    collective phases (each pays the chip's launch latency once — chunk
+    sub-issues ride the already-open double-buffered channel); `compute_s`
+    bounds how much wire time the interleaved-chunk pipeline can hide.
+    """
+    chip = get_chip(chip)
+    if tp <= 1 or wire_bytes <= 0.0 or chip.link_bw_gbs <= 0.0:
+        return CollectiveEstimate(0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    wire_s = float(wire_bytes) / (chip.link_bw_gbs * 1e9)
+    chunks = max(int(overlap_chunks), 1)
+    launch_s = float(n_collectives) * chip.link_launch_s
+    # double-buffered chunks: all but the trailing 1/chunks of the wire can
+    # overlap the next chunk's GEMM, but never more than the compute there is
+    hidden_s = min(wire_s * (1.0 - 1.0 / chunks), max(compute_s, 0.0))
+    exposed_s = wire_s + launch_s - hidden_s
+    overlap = hidden_s / wire_s if wire_s > 0.0 else 0.0
+    return CollectiveEstimate(float(wire_bytes), wire_s, launch_s,
+                              hidden_s, exposed_s, overlap)

@@ -144,8 +144,26 @@ PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
     ("*", ()),
 ]
 
+# Gather-mode TP (the serving engine's bit-stable mode, cfg.tp_reduce ==
+# "gather"): row-parallel weights flip to COLUMN sharding (the full
+# contraction stays on one chip — see distributed.tp.row_parallel_gather)
+# and no weight may leave a *contracting* dim sharded for a plain dot,
+# where GSPMD could pick a fp32-re-associating split-k strategy. Checked
+# before PARAM_RULES; first match wins.
+GATHER_PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    ("*attn/wo", (None, "model")),
+    ("*mlp/w_down", (None, "model")),
+    ("*shared_mlp/w_down", (None, "model")),
+    ("*ssm/out_proj", (None, "model")),
+    ("*ssm/x_proj", (None, None)),   # tiny; contracts the sharded di
+]
 
-def _match(path: str) -> tuple[str | None, ...]:
+
+def _match(path: str, tp_reduce: str = "psum") -> tuple[str | None, ...]:
+    if tp_reduce == "gather":
+        for pat, spec in GATHER_PARAM_RULES:
+            if fnmatch.fnmatch(path, pat):
+                return spec
     for pat, spec in PARAM_RULES:
         if fnmatch.fnmatch(path, pat):
             return spec
@@ -186,12 +204,13 @@ def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
     return P(*out)
 
 
-def param_pspecs(params_tree, mesh: Mesh, fsdp: bool = False):
+def param_pspecs(params_tree, mesh: Mesh, fsdp: bool = False,
+                 tp_reduce: str = "psum"):
     """PartitionSpec pytree matching `params_tree` (shapes or arrays)."""
 
     def leaf_spec(path, leaf):
         shape = getattr(leaf, "shape", ())
-        logical = _match(_leaf_path_str(path))
+        logical = _match(_leaf_path_str(path), tp_reduce)
         ndim = len(shape)
         logical = logical[:ndim]
         # left-pad with None for stacked leading axes (layers)
@@ -204,7 +223,50 @@ def param_pspecs(params_tree, mesh: Mesh, fsdp: bool = False):
     return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
 
 
-def param_shardings(params_tree, mesh: Mesh, fsdp: bool = False):
-    specs = param_pspecs(params_tree, mesh, fsdp)
+def param_shardings(params_tree, mesh: Mesh, fsdp: bool = False,
+                    tp_reduce: str = "psum"):
+    specs = param_pspecs(params_tree, mesh, fsdp, tp_reduce)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving-state sharding: decode caches sharded along their head axis.
+# ---------------------------------------------------------------------------
+
+# leaf basename -> axis carrying heads (or head-grouped channels). KV cache
+# leaves are (L, B, T, KV, hd) (dense) or (L, pages, page, KV, hd) (paged
+# pool): heads sit second-to-last. SSM conv history (L, B, K-1, channels)
+# shards its channel axis; SSM scan state is (L, B, di, ds) (mamba1) or
+# (L, B, H, ...) (mamba2) — axis 2 either way. MLA latent leaves (c_kv /
+# k_pe / c_kv_pages / k_pe_pages) are rank-compressed, shared across
+# heads: replicated.
+SERVING_STATE_AXES: dict[str, int] = {"k": -2, "v": -2,
+                                      "k_pages": -2, "v_pages": -2,
+                                      "conv": -1, "ssm": 2}
+
+
+def serving_state_pspecs(state_tree, mesh: Mesh):
+    """PartitionSpec pytree sharding decode-slot caches on the head axis.
+
+    Leaves whose basename has no rule — or whose head axis the mesh's
+    "model" size does not divide — stay replicated (GSPMD keeps numerics
+    identical either way; sharding is purely a memory/bandwidth win)."""
+
+    def leaf_spec(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        name = _leaf_path_str(path).rsplit("/", 1)[-1]
+        ax = SERVING_STATE_AXES.get(name)
+        if ax is None or not shape or "model" not in mesh.axis_names:
+            return P()
+        ax = ax % len(shape)
+        spec = P(*["model" if i == ax else None for i in range(len(shape))])
+        return sanitize_spec(spec, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, state_tree)
+
+
+def serving_state_shardings(state_tree, mesh: Mesh):
+    specs = serving_state_pspecs(state_tree, mesh)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))

@@ -119,19 +119,23 @@ def prefill_buckets(max_len: int, min_bucket: int = SSM_SERVE_GRAIN
     return tuple(buckets)
 
 
-def chunk_buckets(max_len: int, chunk_tokens: int) -> tuple[int, ...]:
+def chunk_buckets(max_len: int, chunk_tokens: int,
+                  grain: int = SSM_SERVE_GRAIN) -> tuple[int, ...]:
     """The chunk sizes an engine's chunked-admission prefill may trace:
     the prefill buckets capped at `chunk_tokens` (a prompt longer than the
-    cap is fed through the decode loop `chunk_tokens` tokens per step)."""
-    caps = [b for b in prefill_buckets(max_len) if b <= chunk_tokens]
-    return tuple(caps) if caps else prefill_buckets(max_len)[:1]
+    cap is fed through the decode loop `chunk_tokens` tokens per step).
+    `grain` sets the bucket floor (the engine's SSM serve-scan block)."""
+    caps = [b for b in prefill_buckets(max_len, grain) if b <= chunk_tokens]
+    return tuple(caps) if caps else prefill_buckets(max_len, grain)[:1]
 
 
 def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
                        include_slot_prefill: bool = True,
                        chunk_tokens: int | None = None,
                        lane_width: int | None = None,
-                       kv_cap: int | None = None
+                       kv_cap: int | None = None,
+                       tp: int = 1,
+                       grain: int = SSM_SERVE_GRAIN
                        ) -> list[tuple[int, int, int]]:
     """Every GEMM shape a serving engine will trace: the batched prefill
     (max_batch * max_len rows, LM head over max_batch last positions), the
@@ -148,21 +152,27 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
     paged engine's gathered view spans `n_row_pages * page_size` logical
     positions per row, which is what the decompress GEMMs actually run
     over there.
+
+    With `tp > 1` the fleet is the *per-shard* extents — gather-mode TP
+    leaves every projection an (M, N/tp, K) GEMM per chip (see
+    `gemm_shape_counts(..., tp=)`), so the autotuner tunes exactly the
+    shapes a sharded engine step runs. `grain` is the engine's SSM
+    serve-scan block (the prefill-bucket floor).
     """
     from repro.models.config import gemm_shape_counts
 
     cap_len = kv_cap if kv_cap is not None else max_len
     fleet = set(gemm_shape_counts(cfg, max_batch * max_len,
                                   head_tokens=max_batch,
-                                  kv_rows=max_batch * cap_len))
+                                  kv_rows=max_batch * cap_len, tp=tp))
     fleet |= set(gemm_shape_counts(cfg, max_batch,
-                                   kv_rows=max_batch * cap_len))
+                                   kv_rows=max_batch * cap_len, tp=tp))
     if include_slot_prefill:
         if chunk_tokens is None:
             # serial admission / legacy callers: single-shot slot prefills
             # only ever trace width 1
             widths = {1}
-            chunks = prefill_buckets(max_len)
+            chunks = prefill_buckets(max_len, grain)
         else:
             # chunked admission rounds the lane up to the next pow2, so
             # pre-tune the full pow2 ladder through the lane cap
@@ -172,14 +182,14 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
             while a < cap:
                 a *= 2
                 widths.add(a)
-            chunks = chunk_buckets(max_len, chunk_tokens)
-        for b in set(chunks) | set(prefill_buckets(max_len)):
+            chunks = chunk_buckets(max_len, chunk_tokens, grain)
+        for b in set(chunks) | set(prefill_buckets(max_len, grain)):
             # buckets past the chunk cap are only ever traced by width-1
             # serial slot prefills — don't pre-tune wide variants of them
             ws = sorted(widths) if b in chunks else [1]
             for w in ws:
                 fleet |= set(gemm_shape_counts(cfg, w * b, head_tokens=w,
-                                               kv_rows=w * cap_len))
+                                               kv_rows=w * cap_len, tp=tp))
     return sorted(fleet)
 
 

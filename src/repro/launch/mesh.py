@@ -24,3 +24,21 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_serving_mesh(tp: int = 1):
+    """(1, tp) mesh for a tensor-parallel serving engine.
+
+    Keeps the batch axis unsharded (decode-slot surgery stays a local
+    dynamic-slice on every chip) and puts `tp` devices on "model". Uses
+    the first `tp` local devices so several engines of different tp
+    degrees can coexist in one process.
+    """
+    devices = jax.devices()
+    if len(devices) < tp:
+        raise ValueError(
+            f"tp={tp} needs {tp} devices, have {len(devices)} "
+            f"(force more with --xla_force_host_platform_device_count)")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:tp]).reshape(1, tp), ("data", "model"))

@@ -71,6 +71,17 @@ class ModelConfig:
     moe_expert_axis: str = "model"         # "model" (EP=TP) | "data" (EP=DP)
     moe_impl: str = "spmd"                 # "spmd" | "shard_map" (explicit EP)
     tp_collectives: str = "auto"           # "auto" | "explicit" (bf16 wires)
+    # row-parallel reduction: "psum" (all-reduce, lowest wire — training) or
+    # "gather" (all-gather in/out, bit-identical to the unsharded dot — the
+    # serving engine's parity-safe mode; see distributed.tp)
+    tp_reduce: str = "psum"
+    # interleaved column chunks per row-parallel projection: chunk c's
+    # collective overlaps chunk c+1's GEMM (double-buffered SUMMA pipelining)
+    tp_overlap_chunks: int = 1
+    # serving-prefill SSM scan block; 0 => ssm.SERVE_CHUNK (8). Wider grains
+    # (32/64) recover long-prompt prefill throughput; chunk_tokens must stay
+    # a multiple (bit-parity contract — see ssm.SERVE_CHUNK)
+    ssm_serve_grain: int = 0
     kv_cache_dtype: str = "bfloat16"       # "float8_e4m3fn" halves cache bytes
 
     @property
@@ -175,7 +186,8 @@ def kv_cache_bytes(cfg: ModelConfig, tokens: int,
 
 def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
                       head_tokens: int | None = None,
-                      kv_rows: int | None = None
+                      kv_rows: int | None = None,
+                      tp: int = 1
                       ) -> dict[tuple[int, int, int], float]:
     """Dominant (m, n, k) GEMMs of one forward pass over `n_tokens` rows,
     with per-step multiplicities — the denominator the serving engine's
@@ -196,8 +208,22 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
     ``top_k + n_shared_experts`` times per layer at full `n_tokens` rows
     (capacity effects ignored), and hybrid attention blocks are amortized
     over their `attn_every` period.
+
+    `tp > 1` returns the *per-shard* fleet of a tensor-parallel engine:
+    column-parallel projections shrink their out-features to N/tp,
+    gather-mode row-parallel projections keep the full contraction K but
+    emit N/tp columns (the (M, N/tp, K) extents the autotuner must tune —
+    per-shard shapes land on different throughput cliffs than the global
+    ones), and EP-sharded routed-expert fleets divide their issue counts.
+    Extents that `tp` does not divide stay whole (that dim falls back to
+    replicated compute, matching `tp_column`/`tp_row`).
     """
     t = int(n_tokens)
+    tp = max(int(tp), 1)
+
+    def shard(n: int) -> int:
+        return n // tp if n % tp == 0 else n
+
     d, hd, kv = cfg.d_model, cfg.hd, cfg.kv_heads
     L = cfg.n_layers
     # mamba1/mamba2 are attention-free (no Q/K/V/O projections at all);
@@ -222,38 +248,108 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
         kvr = int(kv_rows) if kv_rows is not None else t
         if rq:
             add((t, rq, d), L)                       # w_dq (Q compress)
-            add((t, cfg.n_heads * (hd + pe), rq), L)  # w_uq
+            add((t, shard(cfg.n_heads * (hd + pe)), rq), L)  # w_uq
         else:
-            add((t, cfg.n_heads * (hd + pe), d), L)  # w_uq
+            add((t, shard(cfg.n_heads * (hd + pe)), d), L)  # w_uq
         add((t, r, d), L)                            # w_dkv (KV compress)
         add((t, pe, d), L)                           # w_kpe (RoPE key)
-        add((kvr, cfg.n_heads * hd, r), 2 * L)       # w_uk / w_uv decompress
-        add((t, d, cfg.n_heads * hd), L)             # output projection
+        add((kvr, shard(cfg.n_heads * hd), r), 2 * L)  # w_uk / w_uv
+        add((t, shard(d), cfg.n_heads * hd), L)      # output projection
     elif attn_layers:
-        add((t, cfg.n_heads * hd, d), attn_layers)   # Q projection
-        add((t, kv * hd, d), 2 * attn_layers)        # K and V projections
-        add((t, d, cfg.n_heads * hd), attn_layers)   # output projection
+        add((t, shard(cfg.n_heads * hd), d), attn_layers)  # Q projection
+        add((t, shard(kv * hd), d), 2 * attn_layers)  # K and V projections
+        add((t, shard(d), cfg.n_heads * hd), attn_layers)  # output proj
     add((int(head_tokens) if head_tokens is not None else t,
-         cfg.vocab, d), 1)                           # LM head
+         shard(cfg.vocab), d), 1)                    # LM head
     ff = cfg.d_ff_expert if cfg.n_experts else cfg.d_ff
     if ff:
-        mults = ((cfg.top_k + cfg.n_shared_experts) if cfg.n_experts else 1)
         ffn_layers = attn_layers if cfg.kind == "hybrid" else L
-        up = (2 if cfg.gated_mlp else 1) * mults * ffn_layers
-        add((t, ff, d), up)                          # up (and gate) proj
-        add((t, d, ff), mults * ffn_layers)          # down projection
+        gate_mult = 2 if cfg.gated_mlp else 1
+        if cfg.n_experts:
+            # routed experts are EP-sharded: each chip runs E/tp experts'
+            # GEMMs, so the per-chip issue count divides (extents whole)
+            ep = tp if cfg.n_experts % tp == 0 else 1
+            add((t, ff, d), gate_mult * cfg.top_k * ffn_layers / ep)
+            add((t, d, ff), cfg.top_k * ffn_layers / ep)
+            if cfg.n_shared_experts:
+                add((t, shard(ff), d),
+                    gate_mult * cfg.n_shared_experts * ffn_layers)
+                add((t, shard(d), ff), cfg.n_shared_experts * ffn_layers)
+        else:
+            add((t, shard(ff), d), gate_mult * ffn_layers)  # up (and gate)
+            add((t, shard(d), ff), ffn_layers)       # down projection
     if cfg.kind == "mamba1":
-        add((t, 2 * cfg.d_inner, d), L)              # SSM in_proj
-        add((t, d, cfg.d_inner), L)                  # SSM out_proj
+        add((t, shard(2 * cfg.d_inner), d), L)       # SSM in_proj
+        add((t, shard(d), cfg.d_inner), L)           # SSM out_proj
     elif cfg.kind in ("mamba2", "hybrid"):
         # mamba2/SSD in_proj also carries B/C state projections and the
         # per-head dt channel (see ssm.mamba2_block_init)
         di = cfg.d_inner
         n_in = (2 * di + 2 * cfg.ssm_ngroups * cfg.ssm_state
                 + di // max(cfg.ssm_headdim, 1))
-        add((t, n_in, d), L)                         # SSD in_proj
-        add((t, d, di), L)                           # SSD out_proj
+        add((t, shard(n_in), d), L)                  # SSD in_proj
+        add((t, shard(d), di), L)                    # SSD out_proj
     return counts
+
+
+def collective_wire_bytes(cfg: ModelConfig, n_tokens: int, tp: int,
+                          head_tokens: int | None = None
+                          ) -> tuple[float, float]:
+    """Per-chip ring traffic of one tensor-parallel forward pass.
+
+    Returns ``(wire_bytes, n_collectives)``: the bytes one chip pushes onto
+    its links per step and the number of logical collective phases issued —
+    the inputs `hwsim.collective_cost` prices against
+    `ChipSpec.link_bw_gbs`. Counts the gather-mode serving collectives
+    (`cfg.tp_reduce == "gather"`): every row-parallel projection all-gathers
+    its sharded input and its chunked output (2 phases), EP-sharded routed
+    experts all-gather their combine, and the column-sharded LM head
+    gathers logits. A ring all-gather moves ``(tp-1)/tp`` of the full array
+    through each chip.
+    """
+    tp = max(int(tp), 1)
+    if tp <= 1:
+        return 0.0, 0.0
+    from repro.core.chips import DTYPE_BYTES, canon_dtype
+    t = int(n_tokens)
+    ht = int(head_tokens) if head_tokens is not None else t
+    d, hd = cfg.d_model, cfg.hd
+    L = cfg.n_layers
+    if cfg.kind in ("mamba1", "mamba2"):
+        attn_layers = 0
+    elif cfg.kind == "hybrid":
+        attn_layers = max(L // max(cfg.attn_every, 1), 1)
+    else:
+        attn_layers = L
+    bpe = float(DTYPE_BYTES.get(canon_dtype(cfg.activation_dtype), 2))
+    ring = (tp - 1) / tp
+    elems = 0.0
+    phases = 0.0
+    if attn_layers:
+        # attention output projection: gather (t, H*hd) in, (t, d) out
+        elems += attn_layers * t * (cfg.n_heads * hd + d)
+        phases += 2 * attn_layers
+    ff = cfg.d_ff_expert if cfg.n_experts else cfg.d_ff
+    if ff:
+        ffn_layers = attn_layers if cfg.kind == "hybrid" else L
+        dense_calls = cfg.n_shared_experts if cfg.n_experts else 1
+        if dense_calls:
+            elems += ffn_layers * dense_calls * t * (ff + d)
+            phases += 2 * ffn_layers * dense_calls
+        if cfg.n_experts and cfg.n_experts % tp == 0:
+            # EP combine: gather each token's routed-expert outputs
+            elems += ffn_layers * t * cfg.top_k * d
+            phases += ffn_layers
+    if cfg.kind == "mamba1":
+        # out_proj gather in/out + the x_proj input re-replication
+        elems += L * t * (2 * cfg.d_inner + d)
+        phases += 3 * L
+    elif cfg.kind in ("mamba2", "hybrid"):
+        elems += L * t * (cfg.d_inner + d)
+        phases += 2 * L
+    elems += ht * cfg.vocab                      # sharded logits gather
+    phases += 1
+    return elems * bpe * ring, phases
 
 
 def gemm_shapes(cfg: ModelConfig, n_tokens: int) -> list[tuple[int, int, int]]:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
+from repro.distributed import tp
 from repro.distributed.sharding import shard_activation
 from repro.kernels import ops
 from repro.models import layers as L
@@ -116,7 +117,7 @@ def moe_ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig
     out = y_tok.reshape(T, K, d).sum(axis=1).astype(x.dtype)
 
     if cfg.n_shared_experts:
-        out = out + L.swiglu_apply(p["shared_mlp"], xt)
+        out = out + L.swiglu_apply(p["shared_mlp"], xt, cfg)
 
     # Switch-transformer load-balancing loss (density normalized by top-k so
     # the balanced floor is exactly router_aux_coef per layer)
@@ -260,7 +261,12 @@ def moe_ffn(p: Params, x: jax.Array, cfg: ModelConfig):
     from repro.distributed.sharding import current_mesh
 
     mesh = current_mesh()
+    # gather-mode serving must not take the shard_map path: its per-token
+    # combine is a psum over "model", which re-associates the fp32 sum
+    # (the SPMD dense-dispatch path keeps E-sharded experts bit-exact —
+    # dispatch/combine are gathers/scatters, contractions stay local)
     if (cfg.moe_impl == "shard_map" and mesh is not None
+            and getattr(cfg, "tp_reduce", "psum") != "gather"
             and {"data", "model"}.issubset(set(mesh.axis_names))):
         return moe_ffn_shard_map(p, x, cfg)
     return moe_ffn_apply(p, x, cfg)
@@ -327,9 +333,9 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
     H, hd, pe = cfg.n_heads, cfg.hd, cfg.rope_head_dim
 
     if cfg.q_lora_rank:
-        q = ops.matmul(ops.matmul(x, p["w_dq"]), p["w_uq"])
+        q = tp.tp_column(ops.matmul(x, p["w_dq"]), p["w_uq"], cfg)
     else:
-        q = ops.matmul(x, p["w_uq"])
+        q = tp.tp_column(x, p["w_uq"], cfg)
     q = q.reshape(B, S, H, hd + pe)
     q_c, q_pe = q[..., :hd], q[..., hd:]
     q_pe = L.apply_rope(q_pe, positions, cfg.rope_theta)
@@ -377,8 +383,8 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
         q_offset = 0
 
     Sk = c_kv_full.shape[1]
-    k_c = ops.matmul(c_kv_full, p["w_uk"]).reshape(B, Sk, H, hd)
-    v = ops.matmul(c_kv_full, p["w_uv"]).reshape(B, Sk, H, hd)
+    k_c = tp.tp_column(c_kv_full, p["w_uk"], cfg).reshape(B, Sk, H, hd)
+    v = tp.tp_column(c_kv_full, p["w_uv"], cfg).reshape(B, Sk, H, hd)
 
     scale = 1.0 / math.sqrt(hd + pe)
 
@@ -414,7 +420,7 @@ def mla_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
         _, outs = jax.lax.scan(body, None, (qcb, qpb, jnp.arange(nb)))
         out = outs.swapaxes(0, 1).reshape(B, nb * qc, H, hd)
     out = out.reshape(B, S, H * hd)
-    return ops.matmul(out, p["wo"]), new_cache
+    return tp.tp_row(out, p["wo"], cfg), new_cache
 
 
 def mla_moe_block_init(key, cfg: ModelConfig) -> Params:

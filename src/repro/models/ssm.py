@@ -21,6 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import tp
 from repro.distributed.sharding import shard_activation
 from repro.kernels import ops
 from repro.models import layers as L
@@ -41,6 +42,14 @@ CHUNK = 128
 # unchunked serve prefill is bit-identical to any chunking of it. Training
 # (no cache) keeps the wide CHUNK blocks.
 SERVE_CHUNK = 8
+
+
+def serve_chunk(cfg: ModelConfig) -> int:
+    """Serving-scan block size: `cfg.ssm_serve_grain` when set (wider
+    grains amortize the O(S/Q) sequential scan steps over long prompts),
+    else the module default. The engine validates `chunk_tokens` is a
+    multiple so the bit-parity argument above still applies."""
+    return int(getattr(cfg, "ssm_serve_grain", 0) or 0) or SERVE_CHUNK
 
 
 # ---------------- causal depthwise conv ----------------
@@ -175,6 +184,9 @@ def _mamba1_core(p: Params, x_conv: jax.Array, cfg: ModelConfig,
     s = p["ssm"]
     di, ds = cfg.d_inner, cfg.ssm_state
     r = max(1, cfg.d_model // 16)
+    # x_proj contracts di — re-replicate in gather mode so the sharded
+    # channel axis never enters a plain dot (bit-parity contract)
+    x_conv = tp.replicate_for_parity(x_conv, cfg)
     proj = ops.matmul(x_conv, s["x_proj"])
     dt_low, Bm, Cm = jnp.split(proj, [r, r + ds], axis=-1)
     dtv = ops.matmul(dt_low, s["dt_proj"]).astype(jnp.float32)
@@ -209,7 +221,7 @@ def mamba1_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     di = cfg.d_inner
     s = p["ssm"]
     h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
-    xz = ops.matmul(h, s["in_proj"])
+    xz = tp.tp_column(h, s["in_proj"], cfg)
     x_, z = jnp.split(xz, 2, axis=-1)
     x_ = shard_activation(x_, "batch", None, "model")
 
@@ -226,7 +238,7 @@ def mamba1_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
             p, x_conv, cfg, cache["ssm"].astype(jnp.float32),
             single_step=(S == 1),
             seq_mask=None if seq_lens is None else _seq_mask(seq_lens, S),
-            chunk=SERVE_CHUNK)
+            chunk=serve_chunk(cfg))
         new_cache = {"conv": hist.astype(cache["conv"].dtype),
                      "ssm": h_final.astype(cache["ssm"].dtype)}
     else:
@@ -236,7 +248,7 @@ def mamba1_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
         y, _ = _mamba1_core(p, x_conv, cfg, h0)
 
     y = y * jax.nn.silu(z.astype(jnp.float32))
-    out = ops.matmul(y.astype(x.dtype), s["out_proj"])
+    out = tp.tp_row(y.astype(x.dtype), s["out_proj"], cfg)
     x = x + out
     x = shard_activation(x, "batch", None, None)
     return x, new_cache, jnp.zeros((), jnp.float32)
@@ -353,8 +365,12 @@ def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     H = di // P_
     s = p["ssm"]
     hin = L.rmsnorm(p["ln"], x, cfg.norm_eps)
-    proj = ops.matmul(hin, s["in_proj"])
+    proj = tp.tp_column(hin, s["in_proj"], cfg)
     z, xBC, dt_raw = _mamba2_split(cfg, proj)
+    # z feeds the gated-norm mean (an axis reduction) and dt_raw the decay
+    # path — neither may carry a sharded axis in gather mode
+    z = tp.replicate_for_parity(z, cfg)
+    dt_raw = tp.replicate_for_parity(dt_raw, cfg)
     xBC = shard_activation(xBC, "batch", None, "model")
 
     new_cache = None
@@ -369,6 +385,9 @@ def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     else:
         xBC_c = causal_conv(xBC, s["conv_w"], s["conv_b"])
         hist = None
+    # the SSD einsums contract the state dim of Bm/Cm — re-replicate the
+    # conv output in gather mode before anything reaches a contraction
+    xBC_c = tp.replicate_for_parity(xBC_c, cfg)
     xBC_c = jax.nn.silu(xBC_c.astype(jnp.float32)).astype(x.dtype)
     xs, Bm, Cm = jnp.split(xBC_c, [di, di + G * ds], axis=-1)
     xs = xs.reshape(B, S, H, P_)
@@ -395,7 +414,7 @@ def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     else:
         y, h_final = ssd_scan(x_dt, a_log, Bm_f,
                               Cm.astype(jnp.float32), h0,
-                              chunk=SERVE_CHUNK if cache is not None
+                              chunk=serve_chunk(cfg) if cache is not None
                               else CHUNK)
     if cache is not None:
         new_cache = {"conv": hist.astype(cache["conv"].dtype),
@@ -409,7 +428,7 @@ def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     var = jnp.mean(y * y, axis=-1, keepdims=True)
     y = y * jax.lax.rsqrt(var + cfg.norm_eps)
     y = y * s["norm_scale"].astype(jnp.float32)
-    out = ops.matmul(y.astype(x.dtype), s["out_proj"])
+    out = tp.tp_row(y.astype(x.dtype), s["out_proj"], cfg)
     x = x + out
     x = shard_activation(x, "batch", None, None)
     return x, new_cache, jnp.zeros((), jnp.float32)

@@ -215,8 +215,12 @@ def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
     if cache is None:
         cache = init_kv_cache(cfg, B, max_len)
     # constrain only the batch dim; per-family inner-dim shardings are set by
-    # the launcher's explicit in_shardings (see launch/dryrun.py)
-    cache = jax.tree.map(lambda c: shard_activation(c, None, "batch"), cache)
+    # the launcher's explicit in_shardings (see launch/dryrun.py). Gather-
+    # mode serving keeps its head-axis cache sharding (sharding.
+    # serving_state_pspecs) — a batch-only constraint would all-gather it.
+    if getattr(cfg, "tp_reduce", "psum") != "gather":
+        cache = jax.tree.map(lambda c: shard_activation(c, None, "batch"),
+                             cache)
     x = _embed(params, tokens, cfg)
     if lengths is not None:
         lens32 = jnp.asarray(lengths, jnp.int32)

@@ -143,7 +143,9 @@ class ServingEngine:
                  num_pages: int | None = None, prefix_cache: bool = True,
                  pretune: bool = False, tune_objective: str = "runtime",
                  tune_rank_mode: str = "auto",
-                 chip: str | None = None):
+                 chip: str | None = None,
+                 tp: int = 1, mesh=None, tp_overlap_chunks: int = 4,
+                 ssm_serve_grain: int | None = None):
         """`mode` picks the serving loop: "continuous" (slot table with
         mid-decode retire/refill), "wave" (legacy batch-of-waves), or
         "auto" (continuous for the families that support per-slot decode
@@ -178,8 +180,59 @@ class ServingEngine:
         "power", "edp"); `tune_rank_mode` picks the candidate-ranking
         path ("auto" ranks fully in-graph on accelerator backends, at
         trace time on CPU).
+
+        `tp > 1` serves tensor-parallel over a (1, tp) device mesh
+        (`mesh` overrides the default `launch.mesh.make_serving_mesh`):
+        the config is flipped to explicit gather-mode TP collectives
+        (`tp_reduce="gather"` — bit-identical streams to tp=1, see
+        `docs/serving.md`), params and decode caches are sharded along
+        the head/expert axes, row-parallel all-gathers are interleaved
+        with the GEMM in `tp_overlap_chunks` column chunks, and the
+        energy model prices the per-shard fleet plus the ring traffic.
+
+        `ssm_serve_grain` widens the SSM serve-scan block (default
+        `ops.SSM_SERVE_GRAIN`) — a pow2 multiple of it; chunk boundaries
+        and prefill buckets align to the grain, so long SSM prompts scan
+        in fewer, larger blocks per chunk call.
         """
         from repro.kernels import ops
+
+        self.tp = max(int(tp), 1)
+        self.mesh = None
+        grain = int(ssm_serve_grain) if ssm_serve_grain else 0
+        if grain and (grain < ops.SSM_SERVE_GRAIN
+                      or grain % ops.SSM_SERVE_GRAIN
+                      or grain & (grain - 1)):
+            raise ValueError(
+                f"ssm_serve_grain={grain} must be a power-of-two "
+                f"multiple of {ops.SSM_SERVE_GRAIN}")
+        self.ssm_grain = grain or ops.SSM_SERVE_GRAIN
+        overrides: dict = {}
+        if self.tp > 1:
+            # gather-mode explicit collectives: the one TP strategy that
+            # keeps greedy streams bit-identical to tp=1 (no psum/split-k
+            # fp32 re-association anywhere in the layer graph)
+            overrides.update(tp_collectives="explicit", tp_reduce="gather",
+                             tp_overlap_chunks=max(int(tp_overlap_chunks),
+                                                   1))
+        if grain:
+            overrides["ssm_serve_grain"] = grain
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if self.tp > 1:
+            from repro.distributed.sharding import param_shardings
+            from repro.launch.mesh import make_serving_mesh
+
+            self.mesh = mesh if mesh is not None else make_serving_mesh(
+                self.tp)
+            if ("model" not in self.mesh.axis_names
+                    or self.mesh.shape["model"] != self.tp):
+                raise ValueError(
+                    f"mesh {dict(self.mesh.shape)} must carry a 'model' "
+                    f"axis of size tp={self.tp}")
+            params = jax.device_put(
+                params, param_shardings(params, self.mesh,
+                                        tp_reduce="gather"))
 
         self.model = model
         self.params = params
@@ -194,19 +247,19 @@ class ServingEngine:
         self.mode = mode
         self.admission = admission
         if (admission == "chunked" and chunk_tokens < max_len
-                and chunk_tokens % ops.SSM_SERVE_GRAIN):
+                and chunk_tokens % self.ssm_grain):
             # chunk boundaries must stay multiples of the SSM serve-scan
             # block or chunked prefill loses bit parity for SSM families
             raise ValueError(
                 f"chunk_tokens={chunk_tokens} must be a multiple of "
-                f"{ops.SSM_SERVE_GRAIN} (or >= max_len)")
+                f"{self.ssm_grain} (or >= max_len)")
         if (admission == "chunked" and cfg.sub_quadratic
-                and cfg.attention_free and max_len < ops.SSM_SERVE_GRAIN):
+                and cfg.attention_free and max_len < self.ssm_grain):
             # attention-free prompts may exceed max_len (multi-chunk), and
             # non-final chunk boundaries then need an SSM-grain-aligned
             # bucket, which a sub-grain bucket ladder cannot provide
             raise ValueError(
-                f"max_len={max_len} < {ops.SSM_SERVE_GRAIN} cannot serve "
+                f"max_len={max_len} < {self.ssm_grain} cannot serve "
                 f"chunked SSM prefill; raise max_len or use wave mode")
         self.chunk_tokens = chunk_tokens
         # admission-lane capacity: prefill (and first-token sampling) for
@@ -263,7 +316,8 @@ class ServingEngine:
                 chunk_tokens=(chunk_tokens if admission == "chunked"
                               else None),
                 lane_width=(self.lane_width if admission == "chunked"
-                            else None))
+                            else None),
+                tp=self.tp, grain=self.ssm_grain)
             self.pretuned = ops.warm_gemm_cache(
                 fleet, dtype=cfg.activation_dtype,
                 objective=tune_objective, chip=chip,
@@ -314,7 +368,37 @@ class ServingEngine:
             "resident_slot_steps": 0.0,
             "slot_steps": 0.0, "generated_tokens": 0, "energy_j": 0.0,
             "idle_energy_j": 0.0, "requests": 0, "wall_s": 0.0,
+            # model-clock seconds of dispatched calls, collective wire
+            # time on the links, and the share hidden behind GEMM compute
+            # (tp=1 leaves the wire terms at zero); lane_rebuilds counts
+            # admission-lane reallocations (free-list reuse keeps it at
+            # width growths only)
+            "model_s": 0.0, "wire_s": 0.0, "hidden_wire_s": 0.0,
+            "lane_rebuilds": 0,
         }
+
+    # ------------------------------------------------------------------
+    # mesh / clock
+    # ------------------------------------------------------------------
+    def _activate(self) -> None:
+        """Install this engine's mesh rules on the thread (clearing them
+        for tp=1 engines). Jitted calls trace lazily, so the rules must
+        be the engine's own at dispatch time — engines of different tp
+        degrees can interleave in one process."""
+        from repro.distributed.sharding import set_mesh_rules
+
+        set_mesh_rules(self.mesh)
+
+    def _tick(self, step_s: float, est=None) -> None:
+        """Advance the model clock by one dispatched call's predicted
+        time and fold its collective wire telemetry into the counters
+        (`report()`'s model_tokens_per_s / overlap_factor surface)."""
+        self._clock += step_s
+        self._stats["model_s"] += step_s
+        if est is not None and getattr(est, "collective_s", 0.0) > 0.0:
+            self._stats["wire_s"] += est.collective_s
+            self._stats["hidden_wire_s"] += (est.overlap_factor
+                                             * est.collective_s)
 
     # ------------------------------------------------------------------
     # queue
@@ -367,11 +451,15 @@ class ServingEngine:
         paged layout additionally materializes the gathered per-row view
         through the page table before reading it — 2x the cache bytes.
         Pricing both layouts keeps the bench's J/token comparison
-        apples-to-apples (zero for attention-free families either way)."""
+        apples-to-apples (zero for attention-free families either way).
+        Sharded engines read 1/tp of the cache per chip (head-sharded
+        K/V); MLA's latent cache is replicated, so it is not divided."""
         from repro.models.config import kv_cache_bytes
 
         scale = 2.0 if self.kv_layout == "paged" else 1.0
-        return scale * kv_cache_bytes(self.cfg, batch_rows * self.max_len)
+        shard = 1 if self.cfg.kind == "mla_moe" else self.tp
+        return (scale * kv_cache_bytes(self.cfg, batch_rows * self.max_len)
+                / max(shard, 1))
 
     def _step_energy(self, key, n_rows: int, head_rows: int | None = None,
                      batch_rows: int | None = None):
@@ -387,17 +475,23 @@ class ServingEngine:
             return hit
         try:
             from repro.core.energy import gemm_fleet_energy
-            from repro.models.config import gemm_shape_counts
+            from repro.models.config import (collective_wire_bytes,
+                                             gemm_shape_counts)
 
             kv_rows = (batch_rows * self.max_len
                        if batch_rows is not None else None)
+            wire_b, n_coll = collective_wire_bytes(
+                self.cfg, n_rows, self.tp, head_tokens=head_rows)
             est = gemm_fleet_energy(
                 gemm_shape_counts(self.cfg, n_rows, head_tokens=head_rows,
-                                  kv_rows=kv_rows),
+                                  kv_rows=kv_rows, tp=self.tp),
                 chip=self.chip or "tpu_v5e",
                 dtype=self.cfg.activation_dtype,
                 configs=self.pretuned or None,
                 extra_hbm_bytes=self._kv_gather_bytes(batch_rows or 0),
+                tp=self.tp, collective_bytes=wire_b,
+                n_collectives=n_coll,
+                overlap_chunks=getattr(self.cfg, "tp_overlap_chunks", 1),
                 name=f"{self.cfg.name}:{key}")
         except Exception as e:
             import warnings
@@ -411,28 +505,34 @@ class ServingEngine:
         return est
 
     @staticmethod
-    def _cost(est) -> tuple[float, float]:
-        return (est.energy_j, est.step_s) if est is not None else (0.0, 0.0)
+    def _cost(est) -> tuple[float, float, object]:
+        """(energy_j, step_s, estimate) of a priced step — zeros (and a
+        None estimate) when the energy model is unavailable."""
+        if est is None:
+            return (0.0, 0.0, None)
+        return (est.energy_j, est.step_s, est)
 
-    def _decode_cost(self) -> tuple[float, float]:
-        """(energy_j, predicted step_s) of one lockstep decode step."""
+    def _decode_cost(self) -> tuple[float, float, object]:
+        """(energy_j, predicted step_s, est) of one lockstep decode
+        step."""
         return self._cost(self._step_energy(
             ("decode", self.max_batch), self.max_batch,
             batch_rows=self.max_batch))
 
     def _prefill_cost(self, n_tokens: int, head_rows: int
-                      ) -> tuple[float, float]:
-        """(energy_j, step_s) of one prefill over `n_tokens` padded rows
-        unembedding `head_rows` last positions (1 for slot prefill, B for
-        a wave). `head_rows` is also the prefill's batch-row count, which
-        sizes MLA's cache-wide decompression."""
+                      ) -> tuple[float, float, object]:
+        """(energy_j, step_s, est) of one prefill over `n_tokens` padded
+        rows unembedding `head_rows` last positions (1 for slot prefill,
+        B for a wave). `head_rows` is also the prefill's batch-row count,
+        which sizes MLA's cache-wide decompression."""
         return self._cost(self._step_energy(
             ("prefill", int(n_tokens), int(head_rows)),
             int(n_tokens), int(head_rows), batch_rows=int(head_rows)))
 
-    def _chunk_cost(self, width: int, chunk: int) -> tuple[float, float]:
-        """(energy_j, step_s) of one admission chunk call: `width` lane
-        rows of `chunk` tokens, LM head over the last-valid positions."""
+    def _chunk_cost(self, width: int, chunk: int
+                    ) -> tuple[float, float, object]:
+        """(energy_j, step_s, est) of one admission chunk call: `width`
+        lane rows of `chunk` tokens, LM head over last-valid positions."""
         return self._cost(self._step_energy(
             ("chunk", int(width), int(chunk)),
             int(width * chunk), int(width), batch_rows=int(width)))
@@ -443,18 +543,27 @@ class ServingEngine:
         rows) priced through a single duty-cycle power model
         (`core.energy.fused_step_energy`)."""
         from repro.core.energy import fused_step_energy
-        from repro.models.config import gemm_shape_counts
+        from repro.models.config import (collective_wire_bytes,
+                                         gemm_shape_counts)
 
         decode = gemm_shape_counts(self.cfg, self.max_batch,
-                                   kv_rows=self.max_batch * self.max_len)
+                                   kv_rows=self.max_batch * self.max_len,
+                                   tp=self.tp)
         ch = gemm_shape_counts(self.cfg, width * chunk, head_tokens=width,
-                               kv_rows=width * self.max_len)
+                               kv_rows=width * self.max_len, tp=self.tp)
+        wb_d, nc_d = collective_wire_bytes(self.cfg, self.max_batch,
+                                           self.tp)
+        wb_c, nc_c = collective_wire_bytes(self.cfg, width * chunk,
+                                           self.tp, head_tokens=width)
         return fused_step_energy(
             decode, ch, chip=self.chip or "tpu_v5e",
             dtype=self.cfg.activation_dtype,
             configs=self.pretuned or None,
             extra_hbm_bytes=(self._kv_gather_bytes(self.max_batch)
                              + self._kv_gather_bytes(width)),
+            tp=self.tp, collective_bytes=wb_d + wb_c,
+            n_collectives=nc_d + nc_c,
+            overlap_chunks=getattr(self.cfg, "tp_overlap_chunks", 1),
             name=f"{self.cfg.name}:fused:{width}x{chunk}")
 
     # ------------------------------------------------------------------
@@ -480,7 +589,7 @@ class ServingEngine:
         the bucket ladder keeps doubling past it."""
         from repro.kernels import ops
 
-        buckets = ops.prefill_buckets(self.max_len)
+        buckets = ops.prefill_buckets(self.max_len, self.ssm_grain)
         i = bisect.bisect_left(buckets, n)
         if i < len(buckets):
             return buckets[i]
@@ -495,7 +604,8 @@ class ServingEngine:
         decode loop one chunk per step)."""
         from repro.kernels import ops
 
-        buckets = ops.chunk_buckets(self.max_len, self.chunk_tokens)
+        buckets = ops.chunk_buckets(self.max_len, self.chunk_tokens,
+                                    self.ssm_grain)
         i = bisect.bisect_left(buckets, n)
         return buckets[min(i, len(buckets) - 1)]
 
@@ -509,10 +619,17 @@ class ServingEngine:
                           self.max_len - len(req.prompt)))
 
     def _init_state(self, batch: int):
-        """Zeroed decode-state pytree of `batch` rows. Not cached: the
-        jitted consumers donate their state argument, so a shared zero
-        state would be consumed by its first use."""
-        return self.model.init_state(self.cfg, batch, self.max_len)
+        """Zeroed decode-state pytree of `batch` rows (head-axis-sharded
+        under tp — `sharding.SERVING_STATE_AXES`). Not cached: the jitted
+        consumers donate their state argument, so a shared zero state
+        would be consumed by its first use."""
+        state = self.model.init_state(self.cfg, batch, self.max_len)
+        if self.mesh is not None:
+            from repro.distributed.sharding import serving_state_shardings
+
+            state = jax.device_put(
+                state, serving_state_shardings(state, self.mesh))
+        return state
 
     def _ensure_splice(self) -> None:
         """Discover the decode-state batch-axis spec (state shapes at
@@ -548,8 +665,8 @@ class ServingEngine:
                           "lengths": jnp.asarray([n], np.int32)})
         logits = np.asarray(logits, np.float32)
         tok = int(self._sample(logits, [rng])[0])
-        pre_j, pre_s = self._prefill_cost(bucket, head_rows=1)
-        self._clock += pre_s
+        pre_j, pre_s, pre_est = self._prefill_cost(bucket, head_rows=1)
+        self._tick(pre_s, pre_est)
         return tok, state, pre_j
 
     def _finish(self, slot: _Slot, now: float, decode_energy_j: float,
@@ -578,12 +695,12 @@ class ServingEngine:
                      results):
         """One lockstep decode step over the slot table; retires finished
         slots in place. Returns the new batch state."""
-        decode_energy_j, decode_step_s = decode_cost
+        decode_energy_j, decode_step_s, decode_est = decode_cost
         B = self.max_batch
         active = np.array([s is not None for s in slots])
         if not active.any():
             return batch_state
-        self._clock += decode_step_s
+        self._tick(decode_step_s, decode_est)
         logits, batch_state = self._decode(
             self.params, jnp.asarray(token_buf), batch_state)
         logits = np.asarray(logits, np.float32)
@@ -618,6 +735,7 @@ class ServingEngine:
     def run_continuous(self) -> list[Result]:
         """Drain the queue with true continuous batching: retire finished
         slots mid-decode and refill them immediately."""
+        self._activate()
         if not self._continuous_supported():
             raise ValueError(
                 f"continuous batching unsupported for kind="
@@ -650,10 +768,32 @@ class ServingEngine:
         adm: list[_Admission] = []
         adm_state = None
         adm_w = 0
+        # lane-row free list: vacated rows (spliced-out, or finished on
+        # their first token) are reused in place by later admissions —
+        # the device lane state reallocates only when the pow2 width must
+        # *grow* past its high-water mark (satellite of the stall fix:
+        # steady-state churn costs zero lane rebuilds). A vacated row
+        # still holds its old occupant's state (cache write index, SSM
+        # scan carry), so reused rows are zeroed by a one-row splice
+        # before the new admission's first chunk.
+        lane_free: list[int] = []
+        lane_dirty: set[int] = set()
+        zero_src = None
+
+        def zero_lane_row(r: int) -> None:
+            """Overwrite lane row `r` with zeros (row 0 of a cached
+            1-row zero state — the splice jit donates only dst, so the
+            source survives reuse)."""
+            nonlocal adm_state, zero_src
+            if zero_src is None:
+                zero_src = self._init_state(1)
+            adm_state = self._splice_fn(adm_state, zero_src,
+                                        jnp.int32(0), jnp.int32(r))
 
         def splice_ready() -> None:
             """Move parked (prefilled) admissions into free decode slots,
-            FIFO by first-token time."""
+            FIFO by first-token time; their lane rows return to the free
+            list."""
             nonlocal adm, batch_state
             free = [b for b in range(B) if slots[b] is None]
             if not free:
@@ -669,31 +809,47 @@ class ServingEngine:
                 batch_state = self._splice_fn(
                     batch_state, adm_state, jnp.int32(a.row),
                     jnp.int32(b))
+                lane_free.append(a.row)
+                lane_dirty.add(a.row)
                 slots[b] = a.ready
                 token_buf[b] = a.first_tok
             adm = keep
 
         def chunk_stage() -> bool:
-            """Pack the lane and run one chunk call over the rows still
-            prefilling (parked rows ride along as zero-length identity
-            rows). Samples first tokens for rows whose last chunk landed.
+            """Run one chunk call over the rows still prefilling (parked
+            and vacant rows ride along as zero-length identity rows).
+            Samples first tokens for rows whose last chunk landed.
             Returns True when a request finished outright on its first
             sampled token (a lane row freed — the caller re-admits in
             the same pass)."""
-            nonlocal adm, adm_state, adm_w
-            W = 1
+            nonlocal adm, adm_state, adm_w, lane_free
+            W = adm_w or 1
             while W < len(adm):
                 W *= 2
-            if (adm_state is None or W != adm_w
-                    or any(a.row != i for i, a in enumerate(adm))):
+            if adm_state is None or W > adm_w:
+                # width growth (or first build): reallocate, carrying
+                # every in-progress row across *at its own index* — row
+                # assignments are sticky so no repacking splices happen
                 new_state = self._init_state(W)
-                for i, a in enumerate(adm):
-                    if a.row >= 0 and a.base > 0:
-                        new_state = self._splice_fn(
-                            new_state, adm_state, jnp.int32(a.row),
-                            jnp.int32(i))
-                    a.row = i
+                held = set()
+                for a in adm:
+                    if a.row >= 0:
+                        held.add(a.row)
+                        if a.base > 0:
+                            new_state = self._splice_fn(
+                                new_state, adm_state, jnp.int32(a.row),
+                                jnp.int32(a.row))
                 adm_state, adm_w = new_state, W
+                lane_free = [r for r in range(W) if r not in held]
+                lane_dirty.clear()
+                self._stats["lane_rebuilds"] += 1
+            lane_free.sort()
+            for a in adm:
+                if a.row < 0:
+                    a.row = lane_free.pop(0)
+                    if a.row in lane_dirty:
+                        lane_dirty.discard(a.row)
+                        zero_lane_row(a.row)
             pending = [a for a in adm if a.ready is None]
             rem = [len(a.req.prompt) - a.base for a in pending]
             # shortest-remainder-first bucket: short admissions finish in
@@ -707,9 +863,7 @@ class ServingEngine:
                 # parity with the unchunked prefill; the only unaligned
                 # bucket is a non-multiple max_len, so drop to the widest
                 # aligned one (validated to exist at construction)
-                from repro.kernels import ops
-
-                while C % ops.SSM_SERVE_GRAIN:
+                while C % self.ssm_grain:
                     C = self._chunk_bucket(C // 2)
             toks = np.zeros((W, C), np.int32)
             lens = np.zeros(W, np.int32)
@@ -725,8 +879,8 @@ class ServingEngine:
                 adm_state)
             logits = np.asarray(logits, np.float32)
             now = time.perf_counter()
-            est_j, est_s = self._chunk_cost(W, C)
-            self._clock += est_s
+            est_j, est_s, est = self._chunk_cost(W, C)
+            self._tick(est_s, est)
             self._stats["chunk_steps"] += 1
             # lane pad/parked rows are executed spend with no owner
             self._stats["idle_energy_j"] += (W - len(pending)) * est_j / W
@@ -752,6 +906,8 @@ class ServingEngine:
                 if (a.req.eos_id is not None and tok == a.req.eos_id) or (
                         self._budget(a.req) <= 1):
                     self._finish(srec, now, decode_energy_j, results)
+                    lane_free.append(a.row)
+                    lane_dirty.add(a.row)
                     freed = True
                     continue
                 a.ready = srec
@@ -760,6 +916,8 @@ class ServingEngine:
             adm = keep
             if not adm:
                 adm_state, adm_w = None, 0
+                lane_free = []
+                lane_dirty.clear()
             return freed
 
         while self.queue or adm or any(s is not None for s in slots):
@@ -795,6 +953,12 @@ class ServingEngine:
 
         self._pool = self.model.init_page_pool(
             self.cfg, self._allocator.num_pages, self.page_size)
+        if self.mesh is not None:
+            from repro.distributed.sharding import serving_state_shardings
+
+            self._pool = jax.device_put(
+                self._pool,
+                serving_state_shardings(self._pool, self.mesh))
         self._copy_pages = jax.jit(
             lambda pool, src, dst: L.copy_pool_pages(pool, src, dst),
             donate_argnums=(0,))
@@ -943,8 +1107,8 @@ class ServingEngine:
             pool = {k: v for k, v in state["kv"].items() if k != "table"}
             logits = np.asarray(logits, np.float32)
             now = time.perf_counter()
-            est_j, est_s = self._chunk_cost(W, C)
-            self._clock += est_s
+            est_j, est_s, est = self._chunk_cost(W, C)
+            self._tick(est_s, est)
             self._stats["chunk_steps"] += 1
             self._stats["idle_energy_j"] += (W - len(pending)) * est_j / W
             keep: list[_Admission] = []
@@ -991,7 +1155,7 @@ class ServingEngine:
             nonlocal pool
             if not any(s is not None for s in slots):
                 return
-            self._clock += decode_cost[1]
+            self._tick(decode_cost[1], decode_cost[2])
             state = {"kv": {**pool,
                             "table": dev_table(
                                 [s.pages if s else None for s in slots],
@@ -1105,6 +1269,7 @@ class ServingEngine:
         energy attribution reflects the waste)."""
         if not self.queue:
             return []
+        self._activate()
         t_run0 = time.perf_counter()
         batch_reqs = [self.queue.popleft()
                       for _ in range(min(self.max_batch, len(self.queue)))]
@@ -1125,11 +1290,12 @@ class ServingEngine:
         logits, state = self._prefill(self.params, batch)
         logits = np.asarray(logits, np.float32)
         t_first = time.perf_counter()
-        prefill_j, prefill_s = self._prefill_cost(B * S, head_rows=B)
-        self._clock += prefill_s
+        prefill_j, prefill_s, pre_est = self._prefill_cost(B * S,
+                                                           head_rows=B)
+        self._tick(prefill_s, pre_est)
         t_first_model = self._clock
         est = self._step_energy(("decode", B), B, batch_rows=B)
-        decode_energy_j, decode_step_s = self._cost(est)
+        decode_energy_j, decode_step_s, _ = self._cost(est)
 
         budgets = np.array([self._budget(r) for r in batch_reqs])
         if not use_lengths and not self.cfg.attention_free:
@@ -1153,7 +1319,7 @@ class ServingEngine:
                     budgets[i] <= 1):
                 done[i] = True
         while not done.all():
-            self._clock += decode_step_s
+            self._tick(decode_step_s, est)
             logits, state = self._decode(self.params, jnp.asarray(cur), state)
             logits = np.asarray(logits, np.float32)
             cur = self._sample(
@@ -1204,6 +1370,7 @@ class ServingEngine:
         """Serve every queued request to completion in the engine's mode
         (``mode="auto"`` picks continuous batching when the family
         supports it, else the wave loop)."""
+        self._activate()
         mode = self.mode
         if mode == "auto":
             mode = ("continuous" if self._continuous_supported()
@@ -1230,6 +1397,18 @@ class ServingEngine:
                   if self._allocator is not None else {})
         return {
             **paging,
+            "tp": self.tp,
+            # model-clock throughput: tokens over the analytical model's
+            # predicted seconds of dispatched calls — deterministic and
+            # host-independent, the surface the sharded bench gates on
+            # (wall_s on a host-platform mesh measures emulation, not tp)
+            "model_s": s["model_s"],
+            "model_tokens_per_s": (toks / s["model_s"]
+                                   if s["model_s"] > 0 else 0.0),
+            "collective_wire_s": s["wire_s"],
+            "overlap_factor": (s["hidden_wire_s"] / s["wire_s"]
+                               if s["wire_s"] > 0 else 0.0),
+            "lane_rebuilds": s["lane_rebuilds"],
             "requests": s["requests"],
             "generated_tokens": toks,
             "decode_steps": s["decode_steps"],

@@ -7,6 +7,8 @@ ranker across GEMM shapes (no retrace — extents are traced values), and
 plugs into `tune_many`/`warm_gemm_cache` as a drop-in ranking mode.
 """
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -108,6 +110,63 @@ class TestNoRetrace:
                  for c in tuner.candidate_configs(8, 128, 128)}
         for cfg in tops[0]:
             assert (cfg.block_m, cfg.block_n, cfg.block_k) in legal
+
+
+class TestUnderOuterTrace:
+    """The production call path: `ops.matmul` tunes at trace time, so
+    `rank_in_graph` runs while an *outer* jit trace is live. Its inputs
+    are trace-constants (static shapes), so the internal jitted ranker
+    must dispatch eagerly on the default backend and hand back concrete
+    winners — never outer-trace tracers."""
+
+    def test_winner_parity_inside_live_trace(self, tuner):
+        eager_tops, eager_scores = tuner.rank_in_graph(SHAPES, top_k=1)
+        captured = {}
+
+        @jax.jit
+        def outer(x):
+            tops, scores = tuner.rank_in_graph(SHAPES, top_k=1)
+            captured["tops"] = tops
+            captured["scores"] = scores
+            return x + 1.0
+
+        outer(jnp.zeros(2)).block_until_ready()
+        assert captured, "ranker never ran under the outer trace"
+        for (m, n, k), etop, ttop in zip(SHAPES, eager_tops,
+                                         captured["tops"]):
+            assert not isinstance(ttop[0].block_m, jax.core.Tracer)
+            assert (etop[0].block_m, etop[0].block_n, etop[0].block_k) \
+                == (ttop[0].block_m, ttop[0].block_n, ttop[0].block_k), \
+                (m, n, k)
+        for esc, tsc in zip(eager_scores, captured["scores"]):
+            np.testing.assert_array_equal(np.asarray(esc[:1]),
+                                          np.asarray(tsc[:1]))
+
+    def test_warm_gemm_cache_graph_mode_under_trace(self, rf_pred):
+        from repro.core import autotuner as at
+        from repro.kernels import ops
+
+        at.set_tuner(GemmAutotuner(rf_pred, TpuGemmSimulator(seed=0),
+                                   scorer="jit"))
+        ops._tuned_config.cache_clear()
+        try:
+            shapes = [(256, 512, 1024), (128, 256, 512)]
+            eager = ops.warm_gemm_cache(shapes, dtype="bfloat16",
+                                        rank_mode="graph")
+            assert set(eager) == set(shapes)
+            captured = {}
+
+            @jax.jit
+            def outer(x):
+                captured.update(ops.warm_gemm_cache(
+                    shapes, dtype="bfloat16", rank_mode="graph"))
+                return x * 2.0
+
+            outer(jnp.ones(2)).block_until_ready()
+            assert captured == eager
+        finally:
+            at.set_tuner(None)
+            ops._tuned_config.cache_clear()
 
 
 class TestTuneManyModes:
