@@ -28,7 +28,18 @@ requests. Smoke gates: paged concurrency > dense, paged mean TTFT
 (model clock) below ``PAGED_TTFT_RATIO_MAX`` x dense, and paged J/token
 within ``PAGED_JTOK_RATIO_MAX`` x dense.
 
+``--fleet`` serves a seeded adversarial mix (long best-effort prompts
+ahead of a burst of short SLO-bound ones) through a two-chip
+`FleetScheduler` and through each member as a forced single-engine
+baseline at equal streams; smoke gates pin interactive SLO attainment
+(``FLEET_SLO_ATTAIN_MIN``) and the fleet-vs-best-baseline J/token ratio
+(``FLEET_JTOK_RATIO_MAX``), dumping artifacts/bench/serving_fleet.json.
+
+``--seed N`` re-seeds every workload generator and is recorded in each
+JSON payload, so an artifact diff across seeds is a one-flag experiment.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+      [--seed N] [--fleet | --tp N | --grain]
 """
 
 from __future__ import annotations
@@ -201,7 +212,8 @@ def _serve_layout(cfg, model, params, reqs, *, max_batch: int,
     return results, rep
 
 
-def run_paged(smoke: bool, cfg, model, params) -> tuple[list[dict], dict]:
+def run_paged(smoke: bool, cfg, model, params,
+              seed: int = 0) -> tuple[list[dict], dict]:
     """Paged vs dense KV layout on the shared-prefix mix at one fixed KV
     HBM byte budget: the dense engine's budget is (max_batch + lane) full
     ``max_len`` rows; the paged engine gets exactly those bytes as pages
@@ -213,7 +225,7 @@ def run_paged(smoke: bool, cfg, model, params) -> tuple[list[dict], dict]:
     dense_rows = 3 * dense_batch             # max_batch + 2x admission lane
     hbm_budget = kv_cache_bytes(cfg, dense_rows * MAX_LEN)
     num_pages = dense_rows * MAX_LEN // PAGE_SIZE   # same bytes, in pages
-    reqs = _prefix_workload(cfg, n_reqs, n_prefixes)
+    reqs = _prefix_workload(cfg, n_reqs, n_prefixes, seed=seed + 1)
 
     dense_out, rd = _serve_layout(cfg, model, params, reqs,
                                   max_batch=dense_batch, max_len=MAX_LEN,
@@ -238,6 +250,7 @@ def run_paged(smoke: bool, cfg, model, params) -> tuple[list[dict], dict]:
     jtok_ratio = (rp["j_per_token"] / rd["j_per_token"]
                   if rd["j_per_token"] else 0.0)
     payload = {
+        "seed": seed,
         "n_requests": n_reqs,
         "n_prefixes": n_prefixes,
         "prefix_len": PREFIX_LEN,
@@ -400,6 +413,138 @@ def run_tp(tp: int, smoke: bool) -> tuple[list[dict], dict]:
     return rows, payload
 
 
+# ---- predictor-driven fleet scheduling: --fleet ----
+# two heterogeneous members: the scheduler must beat the best *single*
+# engine (same ledger: served energy + idle-floor over the makespan for
+# every member) while holding the interactive TTFT SLO
+FLEET_CHIPS = {"v5e": "tpu_v5e", "ada": "rtx4070"}
+FLEET_MAX_BATCH = 2
+FLEET_MAX_LEN = 256
+FLEET_LONG_LEN = 160
+FLEET_CHUNK = 32
+# interactive-class TTFT bound on the fleet model clock (submit -> first
+# token, scheduler queue wait included)
+FLEET_TTFT_SLO_S = float(os.environ.get("FLEET_TTFT_SLO_S", "0.05"))
+# smoke gates: interactive SLO attainment, and fleet J/token vs the best
+# single-engine baseline at equal streams
+FLEET_SLO_ATTAIN_MIN = float(os.environ.get("FLEET_SLO_ATTAIN_MIN", "0.95"))
+FLEET_JTOK_RATIO_MAX = float(os.environ.get("FLEET_JTOK_RATIO_MAX", "1.0"))
+
+
+def _fleet_workload(cfg, n_long: int, n_short: int, seed: int):
+    """Adversarial fleet mix: long best-effort ("batch") prompts queued
+    ahead of a burst of short SLO-bound ("interactive") ones, mixed
+    decode budgets — regenerated from `seed` for every scenario so the
+    fleet and each single-engine baseline serve equal streams."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(n_long):
+        reqs.append((uid, rng.integers(0, cfg.vocab, FLEET_LONG_LEN)
+                     .astype(np.int32), int(rng.choice(BUDGETS)), "batch"))
+    for uid in range(n_long, n_long + n_short):
+        n = int(rng.integers(SHORT_LEN[0], SHORT_LEN[1] + 1))
+        reqs.append((uid, rng.integers(0, cfg.vocab, n).astype(np.int32),
+                     int(rng.choice(BUDGETS)), "interactive"))
+    return reqs
+
+
+def _serve_fleet(cfg, model, params, seed: int, n_long: int, n_short: int,
+                 route_to: str | None = None):
+    """One warmed + timed pass of the fleet mix through the scheduler;
+    `route_to` forces the single-engine baseline (others parked, same
+    ledger)."""
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.scheduler import FleetScheduler, SLAClass
+
+    engines = {
+        name: ServingEngine(model, params, cfg, max_batch=FLEET_MAX_BATCH,
+                            max_len=FLEET_MAX_LEN, mode="continuous",
+                            admission="chunked", chunk_tokens=FLEET_CHUNK,
+                            chip=chip)
+        for name, chip in FLEET_CHIPS.items()}
+    sched = FleetScheduler(
+        engines,
+        sla={"interactive": SLAClass("interactive", FLEET_TTFT_SLO_S),
+             "batch": SLAClass("batch", None)},
+        route_to=route_to)
+    for pass_uid0 in (100_000, 0):      # warm-up, then the timed pass
+        for uid, prompt, mnt, sla in _fleet_workload(cfg, n_long,
+                                                     n_short, seed):
+            sched.submit(Request(uid=pass_uid0 + uid, prompt=prompt,
+                                 max_new_tokens=mnt), sla=sla)
+        if pass_uid0:
+            sched.run_until_empty()
+            sched.reset_stats()
+    t0 = time.perf_counter()
+    results = sched.run_until_empty()
+    rep = sched.report()
+    rep["wall_s"] = time.perf_counter() - t0
+    rep["label"] = route_to or "fleet"
+    return results, rep
+
+
+def run_fleet(smoke: bool, seed: int) -> tuple[list[dict], dict]:
+    """Fleet scheduler vs every single-engine baseline on the same
+    seeded adversarial mix: greedy streams must be bit-identical across
+    scenarios (routing invariance), interactive SLO attainment and the
+    fleet-vs-best-baseline J/token ratio land in the JSON artifact for
+    the smoke gates."""
+    cfg, model, params = _build(smoke)
+    n_long, n_short = (2, 8) if smoke else (4, 16)
+
+    fleet_out, fleet_rep = _serve_fleet(cfg, model, params, seed,
+                                        n_long, n_short)
+    by_uid = {r.uid: r for r in fleet_out}
+    baselines = {}
+    for name in FLEET_CHIPS:
+        out, rep = _serve_fleet(cfg, model, params, seed, n_long, n_short,
+                                route_to=name)
+        # placement must never change tokens — only latency and energy
+        for r in out:
+            if not np.array_equal(r.tokens, by_uid[r.uid].tokens):
+                raise AssertionError(
+                    f"fleet stream mismatch for request {r.uid} "
+                    f"(baseline {name})")
+        baselines[name] = rep
+
+    best_name = min(baselines,
+                    key=lambda n: baselines[n]["fleet_j_per_token"])
+    best_jtok = baselines[best_name]["fleet_j_per_token"]
+    jtok_ratio = (fleet_rep["fleet_j_per_token"] / best_jtok
+                  if best_jtok > 0 else 0.0)
+    payload = {
+        "seed": seed,
+        "n_requests": n_long + n_short,
+        "n_long": n_long,
+        "max_batch": FLEET_MAX_BATCH,
+        "max_len": FLEET_MAX_LEN,
+        "chunk_tokens": FLEET_CHUNK,
+        "chips": dict(FLEET_CHIPS),
+        "ttft_slo_model_s": FLEET_TTFT_SLO_S,
+        "fleet": fleet_rep,
+        "baselines": baselines,
+        "best_baseline": best_name,
+        "attainment": fleet_rep["attainment"],
+        "jtok_ratio_fleet_vs_best_baseline": jtok_ratio,
+        "fleet_attain_gate_min": FLEET_SLO_ATTAIN_MIN,
+        "fleet_jtok_gate_max_ratio": FLEET_JTOK_RATIO_MAX,
+    }
+    dump("serving_fleet", payload)
+    cls = fleet_rep["sla"]["interactive"]
+    rows = [
+        row("serve_fleet", fleet_rep["wall_s"] * 1e6,
+            f"J/tok={fleet_rep['fleet_j_per_token']:.2e} "
+            f"(x{jtok_ratio:.3f} vs best single engine "
+            f"[{best_name}], gate <= {FLEET_JTOK_RATIO_MAX}) "
+            f"attainment={fleet_rep['attainment']:.3f} "
+            f"(gate >= {FLEET_SLO_ATTAIN_MIN}) "
+            f"interactive ttft p95={cls['ttft_fleet_p95_model_s'] * 1e3:.2f}"
+            f"ms (slo={FLEET_TTFT_SLO_S * 1e3:.0f}ms) "
+            f"parks={fleet_rep['parks']} drains={fleet_rep['drains']}"),
+    ]
+    return rows, payload
+
+
 # ---- SSM serve-grain sweep: --grain ----
 GRAINS = (8, 32, 64)
 GRAIN_PROMPT_LEN = 448
@@ -498,13 +643,13 @@ def run_grain(smoke: bool) -> tuple[list[dict], dict]:
     return rows, payload
 
 
-def run(smoke: bool | None = None) -> list[dict]:
+def run(smoke: bool | None = None, seed: int = 0) -> list[dict]:
     if smoke is None:
         # mirror benchmarks.common.default_n_configs: unset env = full scale
         smoke = int(os.environ.get("BENCH_N_CONFIGS", "16128")) <= 256
     cfg, model, params = _build(smoke)
     n_long, n_short = (2, 10) if smoke else (4, 20)
-    reqs = _workload(cfg, n_long, n_short)
+    reqs = _workload(cfg, n_long, n_short, seed=seed)
 
     out = {}
     reports = {}
@@ -528,6 +673,7 @@ def run(smoke: bool | None = None) -> list[dict]:
     ttft_wall_ratio = (rc["ttft_s"]["mean"] / rs["ttft_s"]["mean"]
                        if rs["ttft_s"]["mean"] > 0 else 0.0)
     payload = {
+        "seed": seed,
         "n_requests": len(reqs),
         "n_long": n_long,
         "max_batch": MAX_BATCH,
@@ -566,7 +712,8 @@ def run(smoke: bool | None = None) -> list[dict]:
                 f"{rep['ttft_s']['p95'] * 1e3:.1f}ms "
                 f"model-ttft={rep['ttft_model_s']['mean'] * 1e3:.2f}ms")
 
-    paged_rows, paged_payload = run_paged(smoke, cfg, model, params)
+    paged_rows, paged_payload = run_paged(smoke, cfg, model, params,
+                                          seed=seed)
     run.last_paged_payload = paged_payload
 
     return [
@@ -585,7 +732,36 @@ def run(smoke: bool | None = None) -> list[dict]:
 
 def main(argv: list[str]) -> int:
     smoke = "--smoke" in argv
+    seed = (int(argv[argv.index("--seed") + 1]) if "--seed" in argv
+            else 0)
     special = False
+    if "--fleet" in argv:
+        special = True
+        f_rows, fp = run_fleet(smoke, seed)
+        for r in f_rows:
+            print(f"{r['name']}: {r['derived']}")
+        best = fp["baselines"][fp["best_baseline"]]
+        if best["fleet_j_per_token"] <= 0.0:
+            print("FLEET GATE FAILED: best single-engine baseline "
+                  "J/token is 0 (energy model unavailable?) — gate "
+                  "cannot assess")
+            return 1
+        if fp["attainment"] < FLEET_SLO_ATTAIN_MIN:
+            print(f"FLEET GATE FAILED: interactive SLO attainment "
+                  f"{fp['attainment']:.3f} < {FLEET_SLO_ATTAIN_MIN} "
+                  f"(ttft slo {FLEET_TTFT_SLO_S * 1e3:.0f}ms on the "
+                  f"fleet model clock)")
+            return 1
+        jr = fp["jtok_ratio_fleet_vs_best_baseline"]
+        if jr > FLEET_JTOK_RATIO_MAX:
+            print(f"FLEET GATE FAILED: fleet J/token is x{jr:.3f} of "
+                  f"the best single engine ({fp['best_baseline']}) > "
+                  f"{FLEET_JTOK_RATIO_MAX} at equal streams")
+            return 1
+        print(f"fleet gates ok: streams bit-identical across scenarios, "
+              f"attainment {fp['attainment']:.3f} >= "
+              f"{FLEET_SLO_ATTAIN_MIN}, J/tok x{jr:.3f} vs best single "
+              f"engine [{fp['best_baseline']}] <= {FLEET_JTOK_RATIO_MAX}")
     if "--tp" in argv:
         tp = int(argv[argv.index("--tp") + 1])
         _ensure_devices(tp)
@@ -625,7 +801,7 @@ def main(argv: list[str]) -> int:
               f"long-prompt prefill recovery x{top:.2f} vs grain 8")
     if special:
         return 0
-    rows = run(smoke=smoke or None)
+    rows = run(smoke=smoke or None, seed=seed)
     for r in rows:
         print(f"{r['name']}: {r['derived']}")
     if smoke:

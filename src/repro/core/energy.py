@@ -225,6 +225,79 @@ def gemm_fleet_energy(shape_counts: Mapping[tuple[int, int, int], float], *,
         overlap_factor=coll.overlap_factor)
 
 
+def parked_energy_j(duration_s: float, *, chip: ChipSpec | str = TPU_V5E,
+                    n_chips: int = 1) -> float:
+    """Energy of `n_chips` parked at the idle floor for `duration_s`.
+
+    Thin framework-level wrapper over `hwsim.parked_cost` — the term the
+    fleet scheduler charges every engine for the gap between its own
+    busy time and the fleet makespan (a parked engine burns its
+    `ChipSpec.idle_power_w` whether or not it ever serves)."""
+    from repro.core.hwsim import parked_cost
+
+    return parked_cost(duration_s, chip=chip, n_chips=n_chips).energy_j
+
+
+@dataclasses.dataclass(frozen=True)
+class MarginalCostEstimate:
+    """Predicted marginal cost of placing one request on a serving engine.
+
+    Built from the engine's per-step fleet estimates by
+    `marginal_request_cost` with the *same* per-row-share arithmetic the
+    engine's energy attribution uses (chunk call split over lane width,
+    decode step split over the slot table), so a routing decision priced
+    here agrees with the ledger the request will actually be charged
+    against."""
+
+    chunk_calls: int        # bucketed prefill chunk calls the prompt needs
+    prefill_s: float        # predicted model-clock seconds of those calls
+    prefill_energy_j: float  # this request's per-row share of them
+    decode_steps: int       # resident decode iterations (token budget)
+    decode_s: float         # predicted model-clock seconds of those steps
+    decode_energy_j: float  # this request's per-slot share of them
+    energy_j: float         # prefill + decode marginal energy
+    tokens: int             # expected generated tokens (denominator)
+    j_per_token: float      # energy_j / tokens
+    service_s: float        # prefill_s + decode_s (completion headroom)
+
+    def as_row(self) -> dict:
+        """Flatten to a plain dict (CSV/markdown table row)."""
+        return dataclasses.asdict(self)
+
+
+def marginal_request_cost(chunk_est: StepEnergyEstimate | None,
+                          decode_est: StepEnergyEstimate | None, *,
+                          chunk_calls: int, chunk_width: int,
+                          decode_steps: int, decode_batch: int,
+                          tokens: int) -> MarginalCostEstimate:
+    """Marginal (engine, chunk-bucket) placement cost of one request.
+
+    `chunk_est` prices one admission chunk call over `chunk_width` lane
+    rows (e.g. `ServingEngine.fused_step_estimate` or `_chunk_cost`);
+    `decode_est` one lockstep decode step over `decode_batch` slots. The
+    request's marginal share is `chunk_calls` per-row slices of the
+    former plus `decode_steps` per-slot slices of the latter — exactly
+    the shares the engine attributes at retirement, so minimizing this
+    across candidate placements minimizes predicted fleet J/token.
+    Either estimate may be None (energy model unavailable): its terms
+    price as zero, matching the engine's zero telemetry."""
+    c_j = c_s = 0.0
+    if chunk_est is not None and chunk_calls > 0:
+        c_j = chunk_calls * chunk_est.energy_j / max(chunk_width, 1)
+        c_s = chunk_calls * chunk_est.step_s
+    d_j = d_s = 0.0
+    if decode_est is not None and decode_steps > 0:
+        d_j = decode_steps * decode_est.energy_j / max(decode_batch, 1)
+        d_s = decode_steps * decode_est.step_s
+    total = c_j + d_j
+    return MarginalCostEstimate(
+        chunk_calls=int(chunk_calls), prefill_s=c_s, prefill_energy_j=c_j,
+        decode_steps=int(decode_steps), decode_s=d_s, decode_energy_j=d_j,
+        energy_j=total, tokens=int(tokens),
+        j_per_token=total / max(int(tokens), 1),
+        service_s=c_s + d_s)
+
+
 def energy_report(report: RooflineReport, *, tokens_per_step: float,
                   chip: ChipSpec = TPU_V5E,
                   step_s: float | None = None) -> EnergyReport:

@@ -403,6 +403,38 @@ class TpuGemmSimulator:
 
 
 @dataclasses.dataclass(frozen=True)
+class ParkedEstimate:
+    """Energy of a chip fleet parked (or gap-idling) at its idle floor.
+
+    The race-to-idle ledger: a fleet member that is not dispatching work
+    still burns `ChipSpec.idle_power_w` per chip for the whole interval,
+    so draining a lagging engine wide and parking it converts high-power
+    straggler time into cheap idle-floor time."""
+
+    power_w: float         # idle floor of the whole fleet (per-chip x n)
+    duration_s: float      # parked interval (model-clock seconds)
+    n_chips: int
+    energy_j: float        # power_w * duration_s
+
+
+def parked_cost(duration_s: float, *, chip: ChipSpec | str = TPU_V5E,
+                n_chips: int = 1) -> ParkedEstimate:
+    """Price `n_chips` of `chip` sitting parked for `duration_s` seconds.
+
+    A parked engine dispatches nothing: no MXU/HBM/ICI duty, so power is
+    exactly the chip's idle floor. This is the counterpart of
+    `collective_cost`/`TpuGemmSimulator` for the scheduler's third
+    decision — whether racing a queue down and idling beats trickling it
+    across more engines ("Racing to Idle")."""
+    chip = get_chip(chip)
+    n = max(int(n_chips), 1)
+    dur = max(float(duration_s), 0.0)
+    power = chip.idle_power_w * n
+    return ParkedEstimate(power_w=power, duration_s=dur, n_chips=n,
+                          energy_j=power * dur)
+
+
+@dataclasses.dataclass(frozen=True)
 class CollectiveEstimate:
     """Predicted cost of one step's collective traffic on one chip."""
 

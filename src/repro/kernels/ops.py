@@ -193,6 +193,44 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
     return sorted(fleet)
 
 
+def warm_fleet_gemm_cache(specs, *, objective: str = "runtime",
+                          rank_mode: str = "auto"
+                          ) -> list[dict[tuple, BlockConfig]]:
+    """Cross-engine fleet pre-tuning: warm a *heterogeneous* fleet of
+    serving engines in one batched tuning pass per chip.
+
+    `specs` is a list of dicts, one per engine: a ``cfg`` (ModelConfig)
+    plus `serving_gemm_fleet` keyword args (``max_batch``, ``max_len``,
+    ``chunk_tokens``, ``lane_width``, ``tp``, ``grain``, ...) and
+    optionally ``chip`` / ``dtype``. Engines sharing a (chip, dtype) are
+    unioned into one shape fleet and tuned together — N engines on the
+    same chip pay one `tune_many` pass, not N — while engines on
+    different chips each warm their own chip's tuner/winner caches.
+    Returns one ``{shape: BlockConfig}`` dict per input spec (the
+    engine's own shapes only), suitable for `ServingEngine.pretuned`;
+    tuner failures degrade to ``{}`` per group exactly like
+    `warm_gemm_cache`."""
+    specs = [dict(sp) for sp in specs]
+    fleets: list[list[tuple[int, int, int]]] = []
+    groups: dict[tuple, set] = {}
+    for sp in specs:
+        kw = {k: v for k, v in sp.items()
+              if k not in ("cfg", "chip", "dtype")}
+        fleet = serving_gemm_fleet(sp["cfg"], **kw)
+        fleets.append(fleet)
+        groups.setdefault((sp.get("chip"), sp.get("dtype", "bfloat16")),
+                          set()).update(fleet)
+    tuned = {
+        (chip, dtype): warm_gemm_cache(sorted(shapes), dtype=dtype,
+                                       objective=objective, chip=chip,
+                                       rank_mode=rank_mode)
+        for (chip, dtype), shapes in groups.items()}
+    return [
+        {s: grp[s] for s in fleet if s in grp}
+        for sp, fleet in zip(specs, fleets)
+        for grp in [tuned[(sp.get("chip"), sp.get("dtype", "bfloat16"))]]]
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,

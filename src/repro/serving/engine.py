@@ -71,6 +71,7 @@ class Request:
     eos_id: int | None = None
     submit_s: float = 0.0       # stamped by ServingEngine.submit
     submit_model_s: float = 0.0  # engine model-clock at submission
+    sla: str | None = None      # SLA-class name (FleetScheduler telemetry)
 
 
 @dataclasses.dataclass
@@ -361,6 +362,19 @@ class ServingEngine:
         # hardware-independent — the regression surface CI gates on.
         self._clock = 0.0
         self._step_energy_cache: dict[tuple | str | int, object] = {}
+        # scheduler hooks (repro.serving.scheduler): `chunk_policy` is an
+        # optional callable `(engine, pending) -> int | None` consulted by
+        # the chunk stage — `pending` is a list of (Request,
+        # remaining_prompt_tokens) for the rows still prefilling; a
+        # returned token count is snapped up to the chunk-bucket ladder
+        # (SSM-grain alignment still applies), None keeps the default SJF
+        # sizing. `_stepper` holds the resumable chunked-serving generator
+        # behind `serve_step`; `_lane_view` is the host-visible admission
+        # snapshot refreshed after every step (routing reads it).
+        self.chunk_policy = None
+        self._stepper = None
+        self._lane_view = {"pending": 0, "pending_tokens": 0,
+                           "parked": 0, "resident": 0, "in_flight": 0}
         # engine-level counters (reset per run_* call family, reported
         # cumulatively)
         self._stats = {
@@ -399,6 +413,51 @@ class ServingEngine:
             self._stats["wire_s"] += est.collective_s
             self._stats["hidden_wire_s"] += (est.overlap_factor
                                              * est.collective_s)
+
+    @property
+    def model_clock_s(self) -> float:
+        """Current model-clock reading (predicted seconds of every call
+        this engine has dispatched, monotone across runs). The fleet
+        scheduler orders engine steps by it."""
+        return self._clock
+
+    @property
+    def chip_spec(self):
+        """The `ChipSpec` this engine prices energy on (`tpu_v5e` when
+        no chip was named at construction)."""
+        from repro.core.chips import get_chip
+
+        return get_chip(self.chip or "tpu_v5e")
+
+    @property
+    def idle_power_w(self) -> float:
+        """Idle-floor power of this engine's whole chip fleet (per-chip
+        `ChipSpec.idle_power_w` x tp chips) — what a parked engine burns
+        per model-clock second in the fleet scheduler's ledger."""
+        return self.chip_spec.idle_power_w * self.tp
+
+    @property
+    def has_work(self) -> bool:
+        """True while the engine holds queued or in-flight requests. May
+        stay True for one extra `serve_step()` after the last retirement
+        (the step that observes the drained loop returns `[]`)."""
+        return bool(self.queue) or self._stepper is not None
+
+    @property
+    def lane_view(self) -> dict:
+        """Host-visible admission-lane snapshot, refreshed after every
+        `serve_step`: rows still prefilling (`pending` /
+        `pending_tokens`), parked rows awaiting a decode slot, resident
+        decode slots, and total in-flight admissions."""
+        return dict(self._lane_view)
+
+    @property
+    def backlog_tokens(self) -> int:
+        """Prompt tokens this engine still has to prefill: queued prompts
+        plus the unwritten remainder of in-flight admissions. The fleet
+        scheduler's TTFT predictor divides this by chunk throughput."""
+        return (sum(len(r.prompt) for r in self.queue)
+                + int(self._lane_view["pending_tokens"]))
 
     # ------------------------------------------------------------------
     # queue
@@ -537,11 +596,24 @@ class ServingEngine:
             ("chunk", int(width), int(chunk)),
             int(width * chunk), int(width), batch_rows=int(width)))
 
+    def decode_step_estimate(self):
+        """Predicted `StepEnergyEstimate` of one lockstep decode step
+        over the full slot table — the public handle the fleet
+        scheduler's marginal-cost pricing divides per slot (None when
+        the energy model is unavailable)."""
+        return self._decode_cost()[2]
+
     def fused_step_estimate(self, width: int, chunk: int):
         """Predicted cost of one *fused* engine step — the decode fleet
         (max_batch rows) plus one chunk call's fleet (`width` x `chunk`
         rows) priced through a single duty-cycle power model
-        (`core.energy.fused_step_energy`)."""
+        (`core.energy.fused_step_energy`). Cached per (width, chunk):
+        the fleet scheduler prices every candidate placement through
+        this, so repeat lookups must be dict-cheap."""
+        key = ("fused", int(width), int(chunk))
+        hit = self._step_energy_cache.get(key, "miss")
+        if hit != "miss":
+            return hit
         from repro.core.energy import fused_step_energy
         from repro.models.config import (collective_wire_bytes,
                                          gemm_shape_counts)
@@ -555,7 +627,7 @@ class ServingEngine:
                                            self.tp)
         wb_c, nc_c = collective_wire_bytes(self.cfg, width * chunk,
                                            self.tp, head_tokens=width)
-        return fused_step_energy(
+        est = fused_step_energy(
             decode, ch, chip=self.chip or "tpu_v5e",
             dtype=self.cfg.activation_dtype,
             configs=self.pretuned or None,
@@ -565,6 +637,8 @@ class ServingEngine:
             n_collectives=nc_d + nc_c,
             overlap_chunks=getattr(self.cfg, "tp_overlap_chunks", 1),
             name=f"{self.cfg.name}:fused:{width}x{chunk}")
+        self._step_energy_cache[key] = est
+        return est
 
     # ------------------------------------------------------------------
     # continuous batching
@@ -748,16 +822,56 @@ class ServingEngine:
         return self._run_chunked()
 
     def _run_chunked(self) -> list[Result]:
-        """Chunked admission fused into the decode loop: each engine step
-        runs one bucketed chunk call over the admission lane (all
-        in-flight prompts, compact pow2 width) alongside one lockstep
-        decode step over the residents. Admission is decoupled from slot
-        availability — a queued prompt starts chunking as soon as a lane
-        row is free, samples its first token when its last chunk lands
-        (TTFT is lane-bound), and parks in the lane until a decode slot
-        frees."""
-        self._ensure_splice()
-        t_run0 = time.perf_counter()
+        """Chunked admission fused into the decode loop, driven through
+        the resumable stepper (`serve_step`) to exhaustion — token
+        streams and telemetry are identical to running the loop
+        inline."""
+        out: list[Result] = []
+        while self.has_work:
+            out.extend(self.serve_step())
+        return out
+
+    def serve_step(self) -> list[Result]:
+        """Advance chunked continuous serving by exactly one fused engine
+        step — admit from the queue, one bucketed chunk call over the
+        admission lane, one lockstep decode step over the residents — and
+        return the requests that finished during it.
+
+        This is the fleet scheduler's handle on the engine: between
+        steps the caller may submit more requests, install or retarget
+        `chunk_policy`, and interleave steps of other engines (each
+        engine advances its own model clock). Requires continuous mode
+        with ``admission="chunked"`` and the dense KV layout — the
+        paged/serial/wave loops are not steppable. Returns ``[]`` on the
+        final call that observes the drained loop; poll `has_work` to
+        drive to exhaustion."""
+        self._activate()
+        if self._stepper is None:
+            if not self.queue:
+                return []
+            if (self.mode == "wave" or self.admission != "chunked"
+                    or self.kv_layout != "dense"
+                    or not self._continuous_supported()):
+                raise ValueError(
+                    f"serve_step requires chunked continuous serving on "
+                    f"the dense KV layout (kind={self.cfg.kind!r}, "
+                    f"mode={self.mode!r}, admission={self.admission!r}, "
+                    f"kv_layout={self.kv_layout!r})")
+            self._ensure_splice()
+            self._stepper = self._chunked_stepper()
+        try:
+            return next(self._stepper)
+        except StopIteration:
+            self._stepper = None
+            self._lane_view = dict.fromkeys(self._lane_view, 0)
+            return []
+
+    def _chunked_stepper(self):
+        """Generator behind `serve_step`: owns the admission lane, slot
+        table and decode state across yields, emitting each step's newly
+        finished `Result`s. Created lazily on the first `serve_step` with
+        a non-empty queue; exhausts (StopIteration) when queue, lane and
+        slots all drain."""
         B = self.max_batch
         results: list[Result] = []
         slots: list[_Slot | None] = [None] * B
@@ -857,6 +971,17 @@ class ServingEngine:
             # still progress min(C, rem) tokens per step and get full
             # chunks once the lane holds only longs
             C = self._chunk_bucket(min(rem))
+            if self.chunk_policy is not None:
+                # scheduler override: an SLO-aware policy may widen (or
+                # narrow) the chunk against the SJF default; any request
+                # still progresses min(C, rem) tokens per step, so every
+                # ladder bucket is functionally valid — parity holds
+                # because chunk boundaries stay bucket/grain aligned
+                want = self.chunk_policy(
+                    self, [(a.req, len(a.req.prompt) - a.base)
+                           for a in pending])
+                if want:
+                    C = self._chunk_bucket(int(want))
             if self.cfg.sub_quadratic and any(r > C for r in rem):
                 # a *non-final* chunk boundary must stay a multiple of the
                 # SSM serve-scan block or the carried scan state loses bit
@@ -920,7 +1045,9 @@ class ServingEngine:
                 lane_dirty.clear()
             return freed
 
+        emitted = 0
         while self.queue or adm or any(s is not None for s in slots):
+            t_it0 = time.perf_counter()
             # ---- admit + chunk: fill free lane rows from the queue and
             # run one chunk call; a request finishing on its first
             # sampled token frees its lane row again, so keep admitting
@@ -940,8 +1067,18 @@ class ServingEngine:
             # ---- one lockstep decode step over the residents ----
             batch_state = self._decode_step(
                 slots, batch_state, token_buf, decode_cost, results)
-        self._stats["wall_s"] += time.perf_counter() - t_run0
-        return results
+            self._stats["wall_s"] += time.perf_counter() - t_it0
+            pending_n = sum(a.ready is None for a in adm)
+            self._lane_view = {
+                "pending": pending_n,
+                "pending_tokens": sum(len(a.req.prompt) - a.base
+                                      for a in adm if a.ready is None),
+                "parked": len(adm) - pending_n,
+                "resident": sum(s is not None for s in slots),
+                "in_flight": len(adm),
+            }
+            new, emitted = results[emitted:], len(results)
+            yield new
 
     def _ensure_pool(self) -> None:
         """Build the device page pool and the jitted page-copy call on

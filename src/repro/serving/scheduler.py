@@ -1,0 +1,705 @@
+"""Predictor-driven SLA- and energy-aware fleet scheduler.
+
+`FleetScheduler` owns one admission queue over N `ServingEngine`
+instances — possibly on different `ChipSpec`s and tp widths — and makes
+three predictor-priced decisions per tick, closing the loop the paper's
+predictor exists for (price a GEMM configuration *before* running it):
+
+1. **Routing** (`_route`): each pending request is priced on every
+   active (engine, chunk-bucket) placement via the engine's cached
+   `fused_step_estimate` (which runs `core.energy.fused_step_energy`
+   over the decode + chunk GEMM fleets and `hwsim.collective_cost` over
+   the ring traffic) folded into a per-request share by
+   `core.energy.marginal_request_cost` — the same per-row/per-slot
+   arithmetic the engine's attribution ledger uses. The scheduler picks
+   the placement with the lowest predicted marginal fleet J/token among
+   those whose predicted TTFT meets the request's SLA-class deadline,
+   falling back to the fastest placement when none does.
+
+2. **Chunk sizing** (`_chunk_policy_for`): each engine's SJF chunk
+   sizing is replaced by a deadline-aware policy when SLO-classed
+   requests are in its lane — the smallest chunk bucket predicted to
+   land every pending deadline wins (small buckets waste no padded
+   positions and interleave more decode; wide buckets cut calls when
+   slack runs short). A draining engine always chunks at the widest
+   bucket.
+
+3. **Race to idle** (`_race_to_idle`): the ledger charges every fleet
+   member its `ChipSpec` idle floor for the whole fleet makespan
+   (`core.energy.parked_energy_j`), so shrinking the makespan — or
+   finishing a lagging, expensive engine's work early and parking it —
+   saves real energy. When the remaining fleet's predicted completion
+   of all outstanding prefill work still meets every outstanding SLO
+   deadline, the most expensive active engine is marked *draining*
+   (no new routes, widest chunks) and parks at idle power once empty.
+
+Fleet accounting: ``fleet_energy_j`` = every engine's served energy
+(attributed + in-call idle shares) **plus** each engine's idle-floor
+energy over the gap between its own busy time and the fleet makespan.
+A single-engine baseline is the same ledger with all work forced onto
+one member (``route_to=``) while the others sit parked for its whole
+makespan — so the scheduler beats the best such baseline by routing to
+efficient chips *and* by shrinking the makespan (parallelism cuts the
+idle-floor term). `benchmarks/bench_serving.py --fleet` gates both that
+comparison and SLO attainment; `tests/test_fleet_scheduler.py` holds
+the conservation and routing-invariance properties.
+
+Time base: each engine advances its own deterministic model clock
+(predicted seconds of dispatched calls). The scheduler aligns them into
+one fleet timeline by always stepping the busiest-backlogged engine
+with the *smallest* elapsed clock and fast-forwarding an idle engine's
+clock to "now" at handoff — so TTFT measured against the fleet timeline
+(`ttft_fleet_model_s`) includes scheduler queue wait and is
+deterministic and hardware-independent, like the engine's own model
+clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+
+from repro.serving.engine import Request, Result, ServingEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class SLAClass:
+    """A named TTFT service class.
+
+    `ttft_model_s` is the per-request time-to-first-token bound on the
+    fleet model clock (submit -> first token, queue wait included);
+    None declares a best-effort class with no deadline. The bench's
+    attainment gate reads the fraction of a class's requests that met
+    the bound."""
+
+    name: str
+    ttft_model_s: float | None = None
+
+
+@dataclasses.dataclass
+class _ReqMeta:
+    """Scheduler-side bookkeeping for one in-flight request."""
+
+    sla: str | None
+    t_submit: float             # fleet clock at scheduler submission
+    t_handoff: float = 0.0      # fleet clock at engine handoff
+    engine: str | None = None   # member the request was routed to
+    bucket: int = 0             # chunk bucket chosen at routing time
+    pred_j_per_token: float = 0.0
+    pred_ttft_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _Member:
+    """One fleet engine plus the scheduler's view of it."""
+
+    name: str
+    engine: ServingEngine
+    clock0: float = 0.0         # engine clock at scheduler epoch
+    routed: int = 0
+    completed: int = 0
+    parked: bool = False
+    draining: bool = False
+    parks: int = 0
+    drains: int = 0
+    parked_model_s: float = 0.0  # closed park intervals (fleet clock)
+    parked_from: float = 0.0     # open park interval start
+
+    @property
+    def elapsed(self) -> float:
+        """Fleet-timeline position of this engine (clock - epoch)."""
+        return self.engine.model_clock_s - self.clock0
+
+    @property
+    def has_room(self) -> bool:
+        """True while the engine can absorb another admission without
+        queueing past its lane (the scheduler's late-binding
+        backpressure)."""
+        eng = self.engine
+        return (len(eng.queue) + eng.lane_view["in_flight"]
+                < eng.lane_width)
+
+
+def _pow2ceil(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    w = 1
+    while w < n:
+        w *= 2
+    return w
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile of a list (0 for an empty one)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    i = min(int(math.ceil(q / 100.0 * len(xs))) - 1, len(xs) - 1)
+    return xs[max(i, 0)]
+
+
+class FleetScheduler:
+    """One admission queue over a fleet of `ServingEngine`s (see the
+    module docstring for the decision loop; `docs/serving.md` for the
+    guide)."""
+
+    def __init__(self, engines: dict[str, ServingEngine], *,
+                 sla: dict[str, SLAClass] | None = None,
+                 default_sla: str | None = None,
+                 route_to: str | None = None,
+                 race_to_idle: bool = True,
+                 pretune: bool = False,
+                 tune_objective: str = "energy",
+                 tune_rank_mode: str = "auto"):
+        """`engines` maps member names to steppable engines (continuous
+        chunked admission on the dense KV layout — `serve_step`'s
+        contract). `sla` maps class names to `SLAClass` bounds;
+        `default_sla` is applied to requests submitted without one.
+
+        `route_to` forces every request onto one named member while the
+        others sit parked — the single-engine baseline the fleet bench
+        compares against (same ledger, so the comparison is
+        apples-to-apples). `race_to_idle=False` disables the
+        drain-and-park decision (routing and chunk sizing stay on).
+
+        `pretune=True` warms the whole fleet's GEMM shapes up front via
+        `ops.warm_fleet_gemm_cache` — engines sharing a chip are
+        unioned into one batched tuning pass, and each engine's
+        `pretuned` map (which its energy pricing consults) is filled
+        from its chip's results."""
+        if not engines:
+            raise ValueError("FleetScheduler needs at least one engine")
+        self.members: dict[str, _Member] = {}
+        for name, eng in engines.items():
+            if (eng.mode == "wave" or eng.admission != "chunked"
+                    or eng.kv_layout != "dense"
+                    or not eng._continuous_supported()):
+                raise ValueError(
+                    f"engine {name!r} is not steppable (fleet scheduling "
+                    f"requires continuous chunked admission on the dense "
+                    f"KV layout)")
+            self.members[name] = _Member(name=name, engine=eng,
+                                         clock0=eng.model_clock_s)
+            eng.chunk_policy = self._chunk_policy_for(name)
+        self.sla = dict(sla or {})
+        for cname, cls in self.sla.items():
+            if cname != cls.name:
+                raise ValueError(f"SLA key {cname!r} != class {cls.name!r}")
+        if default_sla is not None and default_sla not in self.sla:
+            raise ValueError(f"default_sla {default_sla!r} not in sla map")
+        self.default_sla = default_sla
+        if route_to is not None and route_to not in self.members:
+            raise ValueError(f"route_to {route_to!r} not in fleet")
+        self.route_to = route_to
+        self.race_to_idle = race_to_idle
+        self._pending: deque[Request] = deque()
+        self._meta: dict[int, _ReqMeta] = {}
+        self._done: dict[int, dict] = {}
+        self.routed_to: dict[int, str] = {}
+        if pretune:
+            self._pretune_fleet(tune_objective, tune_rank_mode)
+
+    # ------------------------------------------------------------------
+    # fleet pre-tuning
+    # ------------------------------------------------------------------
+    def _pretune_fleet(self, objective: str, rank_mode: str) -> None:
+        """Warm every member's GEMM fleet in one batched pass per chip
+        (`ops.warm_fleet_gemm_cache`) and install the per-engine config
+        maps, invalidating any step-energy estimates priced before."""
+        from repro.kernels import ops
+
+        names = list(self.members)
+        specs = []
+        for name in names:
+            e = self.members[name].engine
+            specs.append({
+                "cfg": e.cfg, "chip": e.chip,
+                "dtype": e.cfg.activation_dtype,
+                "max_batch": e.max_batch, "max_len": e.max_len,
+                "include_slot_prefill": True,
+                "chunk_tokens": e.chunk_tokens,
+                "lane_width": e.lane_width,
+                "tp": e.tp, "grain": e.ssm_grain})
+        tuned = ops.warm_fleet_gemm_cache(specs, objective=objective,
+                                          rank_mode=rank_mode)
+        for name, configs in zip(names, tuned):
+            eng = self.members[name].engine
+            if configs:
+                eng.pretuned = configs
+                eng._step_energy_cache.clear()
+
+    # ------------------------------------------------------------------
+    # clocks
+    # ------------------------------------------------------------------
+    def fleet_now(self) -> float:
+        """Current fleet-timeline position: the smallest elapsed clock
+        among busy members (the next engine to step), or the largest
+        elapsed anywhere when the fleet is idle."""
+        busy = [m.elapsed for m in self.members.values()
+                if m.engine.has_work and not m.parked]
+        if busy:
+            return min(busy)
+        return max((m.elapsed for m in self.members.values()), default=0.0)
+
+    def _sync_clock(self, m: _Member, now: float) -> None:
+        """Fast-forward an idle-lagging member's clock to `now`: its
+        model clock only advances while dispatching, so an engine that
+        sat idle re-enters the fleet timeline at the present, not in
+        the past (handoff wait must never read negative)."""
+        gap = now - m.elapsed
+        if gap > 0.0:
+            m.engine._clock += gap
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, sla: str | None = None) -> None:
+        """Queue a request on the fleet. `sla` (or `req.sla`, or the
+        scheduler default) names its `SLAClass`; None serves best
+        effort. Routing happens lazily inside `run_until_empty` /
+        `step`, so a request's placement sees the fleet state at
+        admission time, not submission time."""
+        cname = sla or req.sla or self.default_sla
+        if cname is not None and cname not in self.sla:
+            raise ValueError(f"unknown SLA class {cname!r}")
+        req.sla = cname
+        self._meta[req.uid] = _ReqMeta(sla=cname, t_submit=self.fleet_now())
+        self._pending.append(req)
+
+    def _deadline(self, meta: _ReqMeta) -> float | None:
+        """Absolute fleet-clock TTFT deadline of a request (None when
+        best-effort)."""
+        if meta.sla is None:
+            return None
+        bound = self.sla[meta.sla].ttft_model_s
+        return None if bound is None else meta.t_submit + bound
+
+    # ------------------------------------------------------------------
+    # decision (a): predictor-priced routing
+    # ------------------------------------------------------------------
+    def _place_cost(self, m: _Member, req: Request, bucket: int,
+                    now: float) -> tuple[float, float]:
+        """(predicted marginal J/token, predicted fleet TTFT seconds) of
+        placing `req` on member `m` with chunk bucket `bucket`.
+
+        The chunk side prices the *fused* step the engine will actually
+        dispatch (decode fleet + one `width x bucket` chunk call) at the
+        width the lane would grow to; the per-request share and the
+        decode-step share come from `core.energy.marginal_request_cost`.
+        TTFT is first-order: the engine's unfinished prefill backlog
+        plus this prompt's own chunk calls, at the fused step cadence,
+        starting from the later of `now` and the engine's own clock."""
+        eng = m.engine
+        view = eng.lane_view
+        width = _pow2ceil(min(view["in_flight"] + 1, eng.lane_width))
+        fused = eng.fused_step_estimate(width, bucket)
+        n_calls = max(int(math.ceil(len(req.prompt) / bucket)), 1)
+        budget = eng._budget(req)
+        cost = _marginal(fused, eng.decode_step_estimate(),
+                         chunk_calls=n_calls, chunk_width=width,
+                         decode_steps=budget, decode_batch=eng.max_batch,
+                         tokens=budget)
+        step_s = fused.step_s if fused is not None else 0.0
+        backlog_calls = eng.backlog_tokens / max(width * bucket, 1)
+        start = max(m.elapsed, now)
+        ttft = (start - now) + (n_calls + backlog_calls) * step_s
+        return cost.j_per_token, ttft
+
+    def _buckets(self, eng: ServingEngine) -> tuple[int, ...]:
+        """The engine's chunk-bucket ladder (`ops.chunk_buckets`)."""
+        from repro.kernels import ops
+
+        return ops.chunk_buckets(eng.max_len, eng.chunk_tokens,
+                                 eng.ssm_grain)
+
+    def _candidates(self, include_parked: bool) -> list[_Member]:
+        """Members routing may currently target, cheapest-first order
+        left to the cost search."""
+        return [m for m in self.members.values()
+                if (include_parked or not m.parked) and not m.draining
+                and m.has_room]
+
+    def _route(self) -> None:
+        """Place pending requests FIFO onto (engine, chunk-bucket)
+        placements: lowest predicted marginal fleet J/token among the
+        SLO-feasible candidates; the fastest predicted TTFT when no
+        candidate is feasible (a missed-deadline request still gets the
+        least-late engine). Parked members are woken only when no
+        active member can make the deadline (or has room). Stops at the
+        first request nothing can absorb — later requests wait so FIFO
+        fairness holds within the queue."""
+        while self._pending:
+            req = self._pending[0]
+            meta = self._meta[req.uid]
+            now = self.fleet_now()
+            target = None
+            bucket = 0
+            if self.route_to is not None:
+                target = self.members[self.route_to]
+                bucket = self._buckets(target.engine)[-1]
+                meta.pred_j_per_token, meta.pred_ttft_s = self._place_cost(
+                    target, req, bucket, now)
+            else:
+                deadline = self._deadline(meta)
+                slack = (None if deadline is None
+                         else max(deadline - now, 0.0))
+                for widen in (False, True):
+                    scored = [
+                        (m, b, *self._place_cost(m, req, b, now))
+                        for m in self._candidates(include_parked=widen)
+                        for b in self._buckets(m.engine)]
+                    if not scored:
+                        continue
+                    feasible = [c for c in scored
+                                if slack is None or c[3] <= slack]
+                    if feasible:
+                        # cheapest predicted marginal J/token among the
+                        # placements that make the deadline
+                        pick = min(feasible, key=lambda c: (c[2], c[3]))
+                    elif not widen:
+                        continue       # try again with parked members
+                    else:
+                        # nothing makes the deadline even woken: take
+                        # the least-late placement rather than starving
+                        pick = min(scored, key=lambda c: (c[3], c[2]))
+                    target, bucket = pick[0], pick[1]
+                    meta.pred_j_per_token = pick[2]
+                    meta.pred_ttft_s = pick[3]
+                    break
+                if target is None:
+                    return             # every lane is full: wait
+            self._pending.popleft()
+            self._handoff(target, req, meta, bucket)
+
+    def _handoff(self, m: _Member, req: Request, meta: _ReqMeta,
+                 bucket: int) -> None:
+        """Commit a routing decision: wake a parked member, align its
+        clock with the fleet timeline, and enqueue the request on the
+        engine."""
+        now = self.fleet_now()
+        if m.parked:
+            self._unpark(m, now)
+        self._sync_clock(m, now)
+        meta.engine = m.name
+        meta.bucket = int(bucket)
+        meta.t_handoff = m.elapsed
+        self.routed_to[req.uid] = m.name
+        m.routed += 1
+        m.engine.submit(req)
+
+    # ------------------------------------------------------------------
+    # decision (b): SLO-aware chunk sizing
+    # ------------------------------------------------------------------
+    def _chunk_policy_for(self, name: str):
+        """Build the `ServingEngine.chunk_policy` hook for one member.
+
+        Draining members chunk at the widest bucket (finish prefill in
+        the fewest steps and get to idle). Otherwise, when any pending
+        lane row carries an SLO deadline, pick the smallest chunk
+        bucket whose predicted cadence lands *every* pending deadline —
+        small buckets waste no padded positions (J/token) and
+        interleave more decode steps; slack that has burned down forces
+        wider chunks. Lanes holding only best-effort rows return None,
+        keeping the engine's SJF default."""
+        def policy(eng: ServingEngine,
+                   pending: list[tuple[Request, int]]) -> int | None:
+            """Chunk-bucket override for this member's pending lane
+            (None keeps the engine's SJF default)."""
+            m = self.members[name]
+            ladder = self._buckets(eng)
+            if m.draining:
+                return ladder[-1]
+            now = m.elapsed
+            deadlines = []
+            for req, rem in pending:
+                meta = self._meta.get(req.uid)
+                if meta is None:
+                    continue
+                dl = self._deadline(meta)
+                if dl is not None:
+                    deadlines.append((dl, rem))
+            if not deadlines:
+                return None
+            width = _pow2ceil(len(pending))
+            for bucket in ladder:
+                est = eng.fused_step_estimate(width, bucket)
+                step_s = est.step_s if est is not None else 0.0
+                if all(now + math.ceil(rem / bucket) * step_s <= dl
+                       for dl, rem in deadlines):
+                    return bucket
+            return ladder[-1]
+        return policy
+
+    # ------------------------------------------------------------------
+    # decision (c): race to idle
+    # ------------------------------------------------------------------
+    def _decode_j_per_token(self, m: _Member) -> float:
+        """Marginal decode J/token of a member (its full-batch decode
+        step's energy split per slot) — the expense ranking the drain
+        decision uses."""
+        est = m.engine.decode_step_estimate()
+        if est is None:
+            return 0.0
+        return est.energy_j / max(m.engine.max_batch, 1)
+
+    def _outstanding_deadlines(self) -> list[tuple[float, float]]:
+        """(deadline, remaining prompt tokens) of every request that has
+        not yet produced its first token, fleet-wide — the load the
+        remaining fleet must absorb for a drain/park to be safe."""
+        out = []
+        for req in self._pending:
+            meta = self._meta[req.uid]
+            dl = self._deadline(meta)
+            if dl is not None:
+                out.append((dl, float(len(req.prompt))))
+        return out
+
+    def _fleet_meets_slo_without(self, excl: _Member) -> bool:
+        """Would the remaining active members still land every
+        outstanding SLO deadline if `excl` stopped taking work?
+
+        First-order feasibility: the other members' aggregate
+        widest-chunk prefill throughput must finish the fleet's whole
+        unstarted prefill backlog (pending queue + every member's lane
+        backlog) before the tightest outstanding deadline."""
+        others = [m for m in self.members.values()
+                  if m is not excl and not m.parked and not m.draining]
+        if not others:
+            return False
+        deadlines = self._outstanding_deadlines()
+        if not deadlines:
+            return True
+        rate = 0.0
+        for m in others:
+            eng = m.engine
+            bucket = self._buckets(eng)[-1]
+            width = _pow2ceil(eng.lane_width)
+            est = eng.fused_step_estimate(width, bucket)
+            if est is not None and est.step_s > 0.0:
+                rate += width * bucket / est.step_s
+        if rate <= 0.0:
+            return False
+        backlog = (sum(tok for _, tok in deadlines)
+                   + sum(m.engine.backlog_tokens
+                         for m in self.members.values() if m is not excl))
+        t_done = self.fleet_now() + backlog / rate
+        return t_done <= min(dl for dl, _ in deadlines)
+
+    def _park(self, m: _Member, now: float) -> None:
+        """Park an empty member at its chip's idle floor."""
+        m.parked = True
+        m.parks += 1
+        m.parked_from = now
+
+    def _unpark(self, m: _Member, now: float) -> None:
+        """Wake a parked member (closing its park interval) so routing
+        can hand it work again."""
+        m.parked_model_s += max(now - m.parked_from, 0.0)
+        m.parked = False
+        m.draining = False
+
+    def _race_to_idle(self) -> None:
+        """Drain-and-park pass, run once per scheduler tick.
+
+        Parks any member that has fully drained (idle engines burn the
+        same idle floor either way — parking records the decision and
+        removes the member from routing). Separately, while more than
+        one member is active and the remaining fleet is predicted to
+        absorb all outstanding SLO load, the most expensive active
+        member (marginal decode J/token) is marked draining: no new
+        routes, widest chunks, park on empty."""
+        now = self.fleet_now()
+        for m in self.members.values():
+            if not m.parked and not m.engine.has_work:
+                if m.draining or not self._pending:
+                    self._park(m, now)
+        if not self.race_to_idle or self.route_to is not None:
+            return
+        active = [m for m in self.members.values()
+                  if not m.parked and not m.draining]
+        if len(active) < 2:
+            return
+        costly = max(active, key=self._decode_j_per_token)
+        if (self._decode_j_per_token(costly) > 0.0
+                and self._outstanding_deadlines()
+                and self._fleet_meets_slo_without(costly)):
+            costly.draining = True
+            costly.drains += 1
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def step(self) -> list[Result]:
+        """One scheduler tick: route pending requests, advance the
+        busy member with the smallest elapsed clock by one fused engine
+        step, fold its finished requests into the fleet ledger, then
+        run the race-to-idle pass. Returns the finished `Result`s."""
+        self._route()
+        busy = [m for m in self.members.values() if m.engine.has_work]
+        if not busy:
+            return []
+        m = min(busy, key=lambda mm: mm.elapsed)
+        if m.parked:
+            self._unpark(m, self.fleet_now())
+        out = m.engine.serve_step()
+        for r in out:
+            self._finish(m, r)
+        self._race_to_idle()
+        return out
+
+    def _finish(self, m: _Member, r: Result) -> None:
+        """Record one retirement: provenance (the member that produced
+        it must be the member it was routed to), fleet-timeline TTFT
+        (engine TTFT plus scheduler queue wait), and SLO attainment."""
+        meta = self._meta.pop(r.uid, None)
+        if meta is None or meta.engine != m.name:
+            raise RuntimeError(
+                f"request {r.uid} finished on {m.name!r} but was routed "
+                f"to {None if meta is None else meta.engine!r}")
+        m.completed += 1
+        wait = max(meta.t_handoff - meta.t_submit, 0.0)
+        ttft_fleet = r.ttft_model_s + wait
+        dl_bound = (None if meta.sla is None
+                    else self.sla[meta.sla].ttft_model_s)
+        self._done[r.uid] = {
+            "engine": m.name, "sla": meta.sla,
+            "ttft_fleet_model_s": ttft_fleet,
+            "queue_wait_model_s": wait,
+            "met_slo": (True if dl_bound is None
+                        else ttft_fleet <= dl_bound),
+            "pred_j_per_token": meta.pred_j_per_token,
+            "pred_ttft_model_s": meta.pred_ttft_s,
+            "bucket": meta.bucket,
+            "energy_j": r.energy_j, "n_tokens": r.n_tokens,
+        }
+
+    def run_until_empty(self) -> list[Result]:
+        """Serve every submitted request to completion across the fleet
+        and return their `Result`s (engine telemetry intact; fleet-level
+        telemetry in `report()` / `request_log`)."""
+        results: list[Result] = []
+        while (self._pending
+               or any(m.engine.has_work for m in self.members.values())):
+            out = self.step()
+            results.extend(out)
+            if not out and not any(m.engine.has_work
+                                   for m in self.members.values()):
+                # pending work but nothing absorbed it and nothing is
+                # running: wake the whole fleet so routing can't stall
+                for m in self.members.values():
+                    if m.parked:
+                        self._unpark(m, self.fleet_now())
+        now = self.fleet_now()
+        for m in self.members.values():
+            if not m.parked and not m.engine.has_work:
+                self._park(m, now)
+        return results
+
+    # ------------------------------------------------------------------
+    # ledger / reporting
+    # ------------------------------------------------------------------
+    @property
+    def request_log(self) -> dict[int, dict]:
+        """Per-finished-request fleet telemetry keyed by uid: routed
+        engine, fleet-timeline TTFT, queue wait, SLO attainment, the
+        routing decision's predicted costs, and the engine's energy
+        attribution."""
+        return dict(self._done)
+
+    def reset_stats(self) -> None:
+        """Re-zero the fleet ledger (engines' counters, members' park/
+        drain/route records, the request log) after a warm-up pass.
+        Requires a drained fleet."""
+        if self._pending or any(m.engine.has_work
+                                for m in self.members.values()):
+            raise RuntimeError("reset_stats with in-flight work")
+        self._done.clear()
+        self.routed_to.clear()
+        self._meta.clear()
+        for m in self.members.values():
+            m.engine.reset_stats()
+            m.clock0 = m.engine.model_clock_s
+            m.routed = m.completed = m.parks = m.drains = 0
+            m.parked_model_s = 0.0
+            m.parked = m.draining = False
+
+    def report(self) -> dict:
+        """Fleet-level serving report.
+
+        `fleet_energy_j` is the full ledger: every member's served
+        energy (attributed + in-call idle) plus its idle-floor energy
+        (`core.energy.parked_energy_j`) over the gap between its busy
+        model time and the fleet makespan — a parked or never-used
+        member is charged for the whole run, which is what makes the
+        single-engine baselines comparable. Per-SLA-class blocks carry
+        measured fleet-TTFT p50/p95 and attainment against the class
+        bound."""
+        from repro.core.energy import parked_energy_j
+
+        makespan = max((m.elapsed for m in self.members.values()),
+                       default=0.0)
+        engines = {}
+        fleet_j = 0.0
+        toks = 0
+        for m in self.members.values():
+            rep = m.engine.report()
+            busy = rep["model_s"]
+            gap = max(makespan - busy, 0.0)
+            gap_j = parked_energy_j(gap, chip=m.engine.chip or "tpu_v5e",
+                                    n_chips=m.engine.tp)
+            fleet_j += rep["energy_j"] + gap_j
+            toks += rep["generated_tokens"]
+            engines[m.name] = {
+                "chip": m.engine.chip or "tpu_v5e",
+                "tp": m.engine.tp,
+                "routed": m.routed, "completed": m.completed,
+                "busy_model_s": busy, "gap_idle_model_s": gap,
+                "gap_idle_j": gap_j,
+                "idle_power_w": m.engine.idle_power_w,
+                "parked": m.parked, "parks": m.parks,
+                "drains": m.drains,
+                "parked_model_s": m.parked_model_s,
+                "engine": rep,
+            }
+        classes = {}
+        names = set(self.sla) | {d["sla"] for d in self._done.values()
+                                 if d["sla"] is not None}
+        for cname in sorted(names):
+            rows = [d for d in self._done.values() if d["sla"] == cname]
+            bound = (self.sla[cname].ttft_model_s
+                     if cname in self.sla else None)
+            ttfts = [d["ttft_fleet_model_s"] for d in rows]
+            classes[cname] = {
+                "ttft_slo_model_s": bound,
+                "requests": len(rows),
+                "attainment": (sum(d["met_slo"] for d in rows) / len(rows)
+                               if rows else 1.0),
+                "ttft_fleet_p50_model_s": _percentile(ttfts, 50),
+                "ttft_fleet_p95_model_s": _percentile(ttfts, 95),
+            }
+        slo_rows = [d for d in self._done.values()
+                    if d["sla"] is not None
+                    and self.sla.get(d["sla"], SLAClass(d["sla"])
+                                     ).ttft_model_s is not None]
+        return {
+            "requests": len(self._done),
+            "generated_tokens": toks,
+            "makespan_model_s": makespan,
+            "fleet_energy_j": fleet_j,
+            "fleet_j_per_token": fleet_j / toks if toks else 0.0,
+            "attainment": (sum(d["met_slo"] for d in slo_rows)
+                           / len(slo_rows) if slo_rows else 1.0),
+            "parks": sum(m.parks for m in self.members.values()),
+            "drains": sum(m.drains for m in self.members.values()),
+            "route_to": self.route_to,
+            "sla": classes,
+            "engines": engines,
+        }
+
+
+def _marginal(chunk_est, decode_est, **kw):
+    """Thin alias for `core.energy.marginal_request_cost` (imported
+    lazily so the scheduler module imports without the energy stack)."""
+    from repro.core.energy import marginal_request_cost
+
+    return marginal_request_cost(chunk_est, decode_est, **kw)

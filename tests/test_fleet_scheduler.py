@@ -1,0 +1,291 @@
+"""Fleet-scheduler property suite: scheduler invariants that must hold
+for *any* workload before predictor-driven placement can be trusted.
+
+Conservation: every admitted request completes exactly once, on the
+engine it was routed to, and per-request energy attribution sums to the
+fleet ledger within fp tolerance (the ledger additionally carries
+engine-idle and parked-gap energy, so fleet totals are a strict upper
+bound on attributed energy). Routing invariance: a request's greedy
+token stream is bit-identical no matter which engine serves it at tp=1
+— engines share params and sampling seed, and the engine contract makes
+streams batch-composition-independent — so the scheduler's placement
+choices can never change tokens, only latency and energy.
+
+Runs under hypothesis when available (drawing workload seeds and SLO
+knobs); falls back to a deterministic seed sweep otherwise — the same
+two-tier pattern as `tests/test_compiled_parity.py`.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import FleetScheduler, SLAClass
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="fleet-test", kind="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+        param_dtype="float32", activation_dtype="float32", remat=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+_SERVED_CACHE: dict = {}
+
+
+def _get_served():
+    """Memoized (cfg, model, params) triple shared by every test (and
+    by the hypothesis tier, which bypasses fixture injection)."""
+    if "served" not in _SERVED_CACHE:
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        _SERVED_CACHE["served"] = (cfg, model, params)
+    return _SERVED_CACHE["served"]
+
+
+@pytest.fixture(scope="module")
+def served():
+    return _get_served()
+
+
+def make_engine(served, chip: str = "tpu_v5e", **kw) -> ServingEngine:
+    cfg, model, params = served
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk_tokens", 16)
+    kw.setdefault("seed", 0)
+    return ServingEngine(model, params, cfg, chip=chip, **kw)
+
+
+def make_fleet(served, slo: float | None = 0.5,
+               **sched_kw) -> FleetScheduler:
+    """Two-member heterogeneous fleet (TPU v5e + RTX 4070) sharing
+    params and sampling seed, with one TTFT class when `slo` is set."""
+    engines = {"v5e": make_engine(served, "tpu_v5e"),
+               "ada": make_engine(served, "rtx4070")}
+    if slo is None:
+        return FleetScheduler(engines, **sched_kw)
+    sched_kw.setdefault("default_sla", "interactive")
+    return FleetScheduler(
+        engines, sla={"interactive": SLAClass("interactive", slo)},
+        **sched_kw)
+
+
+def workload(seed: int, n: int, lo: int = 3, hi: int = 40,
+             max_budget: int = 8) -> list[Request]:
+    """Deterministic mixed-length workload (fresh Request objects per
+    call — submission stamps them)."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, 256, int(rng.integers(lo, hi))
+                                    ).astype(np.int32),
+                max_new_tokens=int(rng.integers(1, max_budget + 1)))
+        for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the core property check
+# ---------------------------------------------------------------------------
+
+
+def _check_fleet(served, seed: int, n: int, slo: float | None):
+    """Serve a seeded workload across the fleet and assert every
+    conservation invariant; returns (results, scheduler)."""
+    sched = make_fleet(served, slo=slo)
+    reqs = workload(seed, n)
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run_until_empty()
+    rep = sched.report()
+    log = sched.request_log
+
+    # every admitted request completes exactly once
+    uids = sorted(r.uid for r in results)
+    assert uids == sorted(r.uid for r in reqs)
+    assert len(set(uids)) == len(uids)
+    assert rep["requests"] == n
+
+    # no engine serves a request it was never routed (provenance is
+    # enforced at retirement; counters must agree end to end)
+    routed = Counter(sched.routed_to.values())
+    assert sum(routed.values()) == n
+    for name, e in rep["engines"].items():
+        assert e["completed"] == routed.get(name, 0)
+        assert e["engine"]["requests"] == routed.get(name, 0)
+    for r in results:
+        assert log[r.uid]["engine"] == sched.routed_to[r.uid]
+
+    # per-request energy sums to the fleet's attributed total, and the
+    # fleet ledger is attributed + engine-idle + parked-gap energy
+    attributed = sum(r.energy_j for r in results)
+    eng_attr = sum(e["engine"]["attributed_energy_j"]
+                   for e in rep["engines"].values())
+    np.testing.assert_allclose(attributed, eng_attr, rtol=1e-9, atol=1e-12)
+    ledger = sum(e["engine"]["energy_j"] + e["gap_idle_j"]
+                 for e in rep["engines"].values())
+    np.testing.assert_allclose(rep["fleet_energy_j"], ledger, rtol=1e-9)
+    assert rep["fleet_energy_j"] >= attributed - 1e-9
+
+    # token accounting
+    assert rep["generated_tokens"] == sum(r.n_tokens for r in results)
+    assert all(d["met_slo"] in (True, False) for d in log.values())
+    return results, sched
+
+
+def _check_parity(served, seed: int, n: int, slo: float | None):
+    """Routing invariance: fleet streams must be bit-identical to one
+    reference engine serving the same workload alone at tp=1."""
+    results, _ = _check_fleet(served, seed, n, slo)
+    ref = make_engine(served, "tpu_v5e")
+    for r in workload(seed, n):
+        ref.submit(r)
+    ref_streams = {r.uid: r.tokens for r in ref.run_until_empty()}
+    for r in results:
+        np.testing.assert_array_equal(
+            r.tokens, ref_streams[r.uid],
+            err_msg=f"uid {r.uid} stream depends on placement")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis tier (skipped when the package is absent)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**16 - 1), n=st.integers(2, 7),
+           slo=st.sampled_from([0.05, 0.5, None]))
+    def test_fleet_invariants_hypothesis(seed, n, slo):
+        _check_parity(_get_served(), seed, n, slo)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fallback tier (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,n,slo", [
+    (11, 6, 0.5),
+    (29, 5, 0.02),      # tight SLO: misses allowed, invariants not
+    (47, 4, None),      # best-effort only
+])
+def test_fleet_invariants_seeded(served, seed, n, slo):
+    _check_parity(served, seed, n, slo)
+
+
+# ---------------------------------------------------------------------------
+# targeted scheduler behaviors
+# ---------------------------------------------------------------------------
+
+
+def test_single_engine_baseline_parks_the_rest(served):
+    """`route_to` forces every request to one member; the others serve
+    nothing and their gap-idle energy covers the whole makespan."""
+    sched = make_fleet(served, route_to="ada")
+    for r in workload(5, 4):
+        sched.submit(r)
+    results = sched.run_until_empty()
+    rep = sched.report()
+    assert len(results) == 4
+    assert rep["engines"]["v5e"]["routed"] == 0
+    assert rep["engines"]["v5e"]["busy_model_s"] == 0.0
+    np.testing.assert_allclose(rep["engines"]["v5e"]["gap_idle_model_s"],
+                               rep["makespan_model_s"], rtol=1e-9)
+    assert rep["engines"]["ada"]["completed"] == 4
+
+
+def test_race_to_idle_drains_expensive_engine(served):
+    """With a loose SLO and a queue the cheap engine can absorb, the
+    most expensive member is drained and ends the run parked — and the
+    invariants still hold."""
+    results, sched = _check_fleet(served, seed=3, n=10, slo=30.0)
+    rep = sched.report()
+    assert len(results) == 10
+    assert rep["drains"] >= 1
+    assert rep["attainment"] == 1.0
+    drained = [n for n, e in rep["engines"].items() if e["drains"]]
+    assert all(rep["engines"][n]["parked"] for n in drained)
+
+
+def test_chunk_policy_installed_and_scoped(served):
+    """The scheduler installs a per-member chunk policy; engines keep
+    SJF when no SLO-classed rows are pending (policy returns None)."""
+    sched = make_fleet(served, slo=None)
+    for m in sched.members.values():
+        assert m.engine.chunk_policy is not None
+        assert m.engine.chunk_policy(m.engine, [(Request(
+            uid=99, prompt=np.zeros(4, np.int32)), 4)]) is None
+
+
+def test_scheduler_rejects_unsteppable_engine(served):
+    with pytest.raises(ValueError, match="steppable"):
+        FleetScheduler({"w": make_engine(served, mode="wave")})
+
+
+def test_scheduler_validates_sla_names(served):
+    with pytest.raises(ValueError, match="default_sla"):
+        make_fleet(served, slo=0.5, default_sla="nope")
+    sched = make_fleet(served, slo=0.5)
+    with pytest.raises(ValueError, match="unknown SLA"):
+        sched.submit(Request(uid=0, prompt=np.zeros(4, np.int32)),
+                     sla="bulk")
+
+
+def test_reset_stats_rezeroes_ledger(served):
+    sched = make_fleet(served, slo=0.5)
+    for r in workload(13, 3):
+        sched.submit(r)
+    sched.run_until_empty()
+    sched.reset_stats()
+    rep = sched.report()
+    assert rep["requests"] == 0
+    assert rep["fleet_energy_j"] == 0.0
+    assert rep["makespan_model_s"] == 0.0
+    for r in workload(17, 3):
+        sched.submit(r)
+    assert len(sched.run_until_empty()) == 3
+
+
+def test_serve_step_contract(served):
+    """The engine stepper the scheduler stands on: steps interleave
+    with submissions, yield per-step retirements, and drain exactly the
+    run_until_empty stream."""
+    eng = make_engine(served)
+    stepped: list = []
+    for r in workload(21, 3):
+        eng.submit(r)
+        while eng.has_work:
+            out = eng.serve_step()
+            stepped.extend(out)
+            if out:
+                break               # interleave next submit mid-flight
+    while eng.has_work:
+        stepped.extend(eng.serve_step())
+    ref = make_engine(served)
+    for r in workload(21, 3):
+        ref.submit(r)
+    ref_streams = {r.uid: r.tokens for r in ref.run_until_empty()}
+    assert sorted(r.uid for r in stepped) == sorted(ref_streams)
+    for r in stepped:
+        np.testing.assert_array_equal(r.tokens, ref_streams[r.uid])
