@@ -16,7 +16,10 @@ TTFT / queue-time **percentiles** (mean, p50, p95) per mode. The JSON
 artifact (artifacts/bench/serving.json) is the regression surface CI
 uploads; with ``--smoke`` the run exits non-zero if chunked-admission
 mean TTFT regresses past the pinned threshold vs serial admission
-(``SMOKE_TTFT_RATIO_MAX``).
+(``SMOKE_TTFT_RATIO_MAX``). The prefill-once admit families (encdec,
+vlm) run the same chunked-vs-serial comparison — admission extras,
+stream-parity assert, and the shared TTFT gate — landing in the
+``admit_families`` block of the JSON payload.
 
 A second comparison serves a **shared-prefix workload** (every request
 starts with one of a few long system prompts) through the dense and the
@@ -34,6 +37,8 @@ ahead of a burst of short SLO-bound ones) through a two-chip
 baseline at equal streams; smoke gates pin interactive SLO attainment
 (``FLEET_SLO_ATTAIN_MIN``) and the fleet-vs-best-baseline J/token ratio
 (``FLEET_JTOK_RATIO_MAX``), dumping artifacts/bench/serving_fleet.json.
+A second scenario routes an encdec fleet (admission extras through the
+scheduler) and asserts placement never changes tokens.
 
 ``--seed N`` re-seeds every workload generator and is recorded in each
 JSON payload, so an artifact diff across seeds is a one-flag experiment.
@@ -287,6 +292,127 @@ def run_paged(smoke: bool, cfg, model, params,
     return rows, payload
 
 
+# ---- admit families (encdec, vlm): chunked vs serial admission ----
+# the prefill-once admission pass (encoder + cross-KV projection for
+# encdec, image-patch prefix for vlm) is paid identically by both
+# admissions and priced into model-clock TTFT, so the chunked/serial
+# ratio shares the dense gate (SMOKE_TTFT_RATIO_MAX)
+ADMIT_FAMILY_KW = {
+    "encdec": dict(d_ff=256, n_encoder_layers=2, gated_mlp=False),
+    "vlm": dict(d_ff=256, qkv_bias=True, mrope=True,
+                mrope_sections=(8, 4, 4)),
+}
+
+
+def _build_admit(kind: str, smoke: bool):
+    import jax
+
+    from repro.models.config import ModelConfig
+    from repro.models.registry import get_model
+
+    cfg = ModelConfig(
+        name=f"serve-{kind}", kind=kind,
+        n_layers=2 if smoke else 3,
+        d_model=128, n_heads=4, n_kv_heads=2, vocab=512,
+        param_dtype="float32", activation_dtype="float32", remat=False,
+        **ADMIT_FAMILY_KW[kind])
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0), cfg)
+    return cfg, model, params
+
+
+def _admit_extras(cfg, uid: int, seed: int):
+    """Deterministic per-request modality input: an encoder source for
+    encdec (required), an image-patch grid for vlm (every third request
+    is text-only and serves like a dense LM)."""
+    rng = np.random.default_rng(seed * 1000 + uid)
+    if cfg.kind == "encdec":
+        t = 8 + 4 * (uid % 3)
+        return {"src_embeds": rng.standard_normal(
+            (t, cfg.d_model)).astype(np.float32)}
+    grid = [(4, 4), (2, 3), None][uid % 3]
+    if grid is None:
+        return None
+    gh, gw = grid
+    return {"patch_embeds": rng.standard_normal(
+        (gh * gw, cfg.d_model)).astype(np.float32), "grid_hw": grid}
+
+
+def _serve_admit(cfg, model, params, reqs, label: str, seed: int):
+    from repro.serving.engine import Request, ServingEngine
+
+    eng = ServingEngine(model, params, cfg, max_batch=MAX_BATCH,
+                        max_len=MAX_LEN, mode="continuous",
+                        admission=label, chunk_tokens=CHUNK_TOKENS)
+    for pass_uid0 in (100_000, 0):      # warm-up, then the timed pass
+        for uid, prompt, mnt in reqs:
+            eng.submit(Request(uid=pass_uid0 + uid, prompt=prompt.copy(),
+                               max_new_tokens=mnt,
+                               extras=_admit_extras(cfg, uid, seed)))
+        if pass_uid0:
+            eng.run_until_empty()
+            eng.reset_stats()
+    t0 = time.perf_counter()
+    results = eng.run_until_empty()
+    wall = time.perf_counter() - t0
+    rep = eng.report()
+    rep["mode"] = label
+    rep["wall_s"] = wall
+    rep["tokens_per_s"] = (rep["generated_tokens"] / wall if wall > 0
+                           else 0.0)
+    rep["ttft_s"] = _percentiles([r.ttft_s for r in results])
+    rep["ttft_model_s"] = _percentiles([r.ttft_model_s for r in results])
+    return results, rep
+
+
+def run_admit(smoke: bool, cfg_kinds=("encdec", "vlm"),
+              seed: int = 0) -> tuple[list[dict], dict]:
+    """encdec and vlm on the adversarial long-ahead-of-shorts mix:
+    chunked and serial admission must produce bit-identical greedy
+    streams (admission is one-shot either way), and chunked mean TTFT
+    on the model clock must clear the same gate as the dense smoke."""
+    n_long, n_short = (1, 6) if smoke else (2, 12)
+    families = {}
+    rows = []
+    for kind in cfg_kinds:
+        cfg, model, params = _build_admit(kind, smoke)
+        reqs = _workload(cfg, n_long, n_short, seed=seed + 3)
+        out, reps = {}, {}
+        for label in ("chunked", "serial"):
+            out[label], reps[label] = _serve_admit(cfg, model, params,
+                                                   reqs, label, seed)
+        # stream parity across admissions is the hard invariant
+        by_uid = {r.uid: r for r in out["serial"]}
+        for r in out["chunked"]:
+            if not np.array_equal(r.tokens, by_uid[r.uid].tokens):
+                raise AssertionError(
+                    f"{kind}: chunked/serial stream mismatch for "
+                    f"request {r.uid}")
+        rc, rs = reps["chunked"], reps["serial"]
+        ratio = (rc["ttft_model_s"]["mean"] / rs["ttft_model_s"]["mean"]
+                 if rs["ttft_model_s"]["mean"] > 0 else 0.0)
+        families[kind] = {
+            "chunked": rc,
+            "serial": rs,
+            "ttft_ratio_chunked_vs_serial": ratio,
+        }
+        rows.append(row(
+            f"serve_{kind}", rc["wall_s"] * 1e6,
+            f"tok/s={rc['tokens_per_s']:.0f} "
+            f"J/tok={rc['j_per_token']:.2e} "
+            f"model-ttft={rc['ttft_model_s']['mean'] * 1e3:.2f}ms "
+            f"chunked/serial ratio={ratio:.3f} "
+            f"(gate <= {SMOKE_TTFT_RATIO_MAX})"))
+    payload = {
+        "seed": seed,
+        "n_requests": n_long + n_short,
+        "ttft_gate_max_ratio": SMOKE_TTFT_RATIO_MAX,
+        "families": families,
+    }
+    dump("serving_admit", payload)
+    return rows, payload
+
+
 # ---- sharded (tensor-parallel) serving smoke: --tp N ----
 # fleet J/token at tp=N must stay within this factor of tp=1 (the fleet
 # spends n_chips x a shorter step; the gate pins the regression surface)
@@ -449,10 +575,11 @@ def _fleet_workload(cfg, n_long: int, n_short: int, seed: int):
 
 
 def _serve_fleet(cfg, model, params, seed: int, n_long: int, n_short: int,
-                 route_to: str | None = None):
+                 route_to: str | None = None, extras_fn=None):
     """One warmed + timed pass of the fleet mix through the scheduler;
     `route_to` forces the single-engine baseline (others parked, same
-    ledger)."""
+    ledger); `extras_fn(uid)` supplies per-request modality input for
+    admit-family members (encdec source embeddings)."""
     from repro.serving.engine import Request, ServingEngine
     from repro.serving.scheduler import FleetScheduler, SLAClass
 
@@ -471,7 +598,9 @@ def _serve_fleet(cfg, model, params, seed: int, n_long: int, n_short: int,
         for uid, prompt, mnt, sla in _fleet_workload(cfg, n_long,
                                                      n_short, seed):
             sched.submit(Request(uid=pass_uid0 + uid, prompt=prompt,
-                                 max_new_tokens=mnt), sla=sla)
+                                 max_new_tokens=mnt,
+                                 extras=(extras_fn(uid) if extras_fn
+                                         else None)), sla=sla)
         if pass_uid0:
             sched.run_until_empty()
             sched.reset_stats()
@@ -507,6 +636,30 @@ def run_fleet(smoke: bool, seed: int) -> tuple[list[dict], dict]:
                     f"(baseline {name})")
         baselines[name] = rep
 
+    # one admit-family member scenario: an encdec fleet routes requests
+    # whose admission (encoder + cross-KV projection) runs through the
+    # scheduler's deferral/pricing machinery — placement must still
+    # never change tokens
+    ecfg, emodel, eparams = _build_admit("encdec", True)
+
+    def _esrc(uid):
+        rng = np.random.default_rng(4000 + uid)
+        t = 8 + 2 * (uid % 3)
+        return {"src_embeds": rng.standard_normal(
+            (t, ecfg.d_model)).astype(np.float32)}
+
+    e_long, e_short = (1, 3) if smoke else (2, 6)
+    e_out, e_rep = _serve_fleet(ecfg, emodel, eparams, seed + 5,
+                                e_long, e_short, extras_fn=_esrc)
+    e_by = {r.uid: r for r in e_out}
+    eb_out, eb_rep = _serve_fleet(ecfg, emodel, eparams, seed + 5,
+                                  e_long, e_short, route_to="v5e",
+                                  extras_fn=_esrc)
+    for r in eb_out:
+        if not np.array_equal(r.tokens, e_by[r.uid].tokens):
+            raise AssertionError(
+                f"fleet stream mismatch for encdec request {r.uid}")
+
     best_name = min(baselines,
                     key=lambda n: baselines[n]["fleet_j_per_token"])
     best_jtok = baselines[best_name]["fleet_j_per_token"]
@@ -528,6 +681,11 @@ def run_fleet(smoke: bool, seed: int) -> tuple[list[dict], dict]:
         "jtok_ratio_fleet_vs_best_baseline": jtok_ratio,
         "fleet_attain_gate_min": FLEET_SLO_ATTAIN_MIN,
         "fleet_jtok_gate_max_ratio": FLEET_JTOK_RATIO_MAX,
+        "encdec_member": {
+            "n_requests": e_long + e_short,
+            "fleet": e_rep,
+            "baseline_v5e": eb_rep,
+        },
     }
     dump("serving_fleet", payload)
     cls = fleet_rep["sla"]["interactive"]
@@ -693,6 +851,9 @@ def run(smoke: bool | None = None, seed: int = 0) -> list[dict]:
             1.0 - rc["j_per_token"] / rw["j_per_token"]
             if rw["j_per_token"] else 0.0),
     }
+    admit_rows, admit_payload = run_admit(smoke, seed=seed)
+    run.last_admit_payload = admit_payload
+    payload["admit_families"] = admit_payload["families"]
     dump("serving", payload)
     run.last_payload = payload
     # the chunked-mode report is also dumped standalone so CI artifact
@@ -727,7 +888,7 @@ def run(smoke: bool | None = None, seed: int = 0) -> list[dict]:
             f"{100 * payload['slot_step_reduction']:.1f}% fewer "
             f"decode-step*slots vs wave; J/tok "
             f"-{100 * payload['j_per_token_reduction']:.1f}%"),
-    ] + paged_rows
+    ] + admit_rows + paged_rows
 
 
 def main(argv: list[str]) -> int:
@@ -850,6 +1011,25 @@ def main(argv: list[str]) -> int:
               f"{pp['concurrency_paged']}, TTFT ratio {pr:.3f} <= "
               f"{PAGED_TTFT_RATIO_MAX}, J/tok ratio {jr:.3f} <= "
               f"{PAGED_JTOK_RATIO_MAX}")
+        ap = run.last_admit_payload
+        for kind, fam in ap["families"].items():
+            if fam["serial"]["ttft_model_s"]["mean"] <= 0.0:
+                print(f"ADMIT GATE FAILED: {kind} serial model-clock "
+                      f"TTFT is 0 (energy model unavailable?) — gate "
+                      f"cannot assess")
+                return 1
+            fr = fam["ttft_ratio_chunked_vs_serial"]
+            if fr > SMOKE_TTFT_RATIO_MAX:
+                print(f"ADMIT GATE FAILED: {kind} chunked/serial mean "
+                      f"TTFT ratio {fr:.3f} > {SMOKE_TTFT_RATIO_MAX} — "
+                      f"chunked admission has regressed for the "
+                      f"prefill-once family")
+                return 1
+        ratios = ", ".join(
+            f"{k}={v['ttft_ratio_chunked_vs_serial']:.3f}"
+            for k, v in ap["families"].items())
+        print(f"admit gates ok: streams bit-identical across admissions, "
+              f"TTFT ratios {ratios} <= {SMOKE_TTFT_RATIO_MAX}")
     return 0
 
 

@@ -84,5 +84,6 @@ def lm_decode_specs(cfg: ModelConfig, shape: str, family: str = "kv",
         state["kv"] = _cache_specs(cfg, B, S, family)
     if family == "vlm_kv":
         state["kv"] = _cache_specs(cfg, B, S, "kv")
-        state["next_pos"] = SDS((B,), jnp.int32)
+        state["index"] = SDS((B,), jnp.int32)
+        state["pos_off"] = SDS((B,), jnp.int32)
     return {"token": SDS((B,), jnp.int32), "state": state}

@@ -87,7 +87,7 @@ def input_specs(shape: str, smoke: bool = False) -> dict:
         "token": SDS((B,), jnp.int32),
         "state": {
             "kv": {"k": SDS(kv, jnp.bfloat16), "v": SDS(kv, jnp.bfloat16)},
-            "index": SDS((), jnp.int32),
-            "next_pos": SDS((B,), jnp.int32),
+            "index": SDS((B,), jnp.int32),
+            "pos_off": SDS((B,), jnp.int32),
         },
     }

@@ -68,16 +68,19 @@ def input_specs(shape: str, smoke: bool = False) -> dict:
             "src_embeds": SDS((B, T, cfg.d_model), jnp.bfloat16),
             "tokens": SDS((B, S), jnp.int32),
         }
-    # decode: one token against self-attn cache of S + cross cache of T
+    # decode: one token against self-attn cache of S; the per-layer
+    # cross-KV (xk/xv) lives in the same cache dict, sized to max source
+    # length, with per-row src_len masking the valid rows
     L_ = cfg.n_layers
     kv = (L_, B, S, cfg.kv_heads, cfg.hd)
     cross = (L_, B, T, cfg.kv_heads, cfg.hd)
     return {
         "token": SDS((B,), jnp.int32),
         "state": {
-            "kv": {"k": SDS(kv, jnp.bfloat16), "v": SDS(kv, jnp.bfloat16)},
-            "cross": {"k": SDS(cross, jnp.bfloat16),
-                      "v": SDS(cross, jnp.bfloat16)},
-            "index": SDS((), jnp.int32),
+            "kv": {"k": SDS(kv, jnp.bfloat16), "v": SDS(kv, jnp.bfloat16),
+                   "xk": SDS(cross, jnp.bfloat16),
+                   "xv": SDS(cross, jnp.bfloat16)},
+            "src_len": SDS((B,), jnp.int32),
+            "index": SDS((B,), jnp.int32),
         },
     }

@@ -240,8 +240,11 @@ def param_shardings(params_tree, mesh: Mesh, fsdp: bool = False,
 # shards its channel axis; SSM scan state is (L, B, di, ds) (mamba1) or
 # (L, B, H, ...) (mamba2) — axis 2 either way. MLA latent leaves (c_kv /
 # k_pe / c_kv_pages / k_pe_pages) are rank-compressed, shared across
-# heads: replicated.
+# heads: replicated. Enc-dec cross-KV (xk/xv) is (L, B, T, KV, hd) like
+# self-attn KV: heads second-to-last. Per-row scalars (src_len, pos_off)
+# have no rule and stay replicated.
 SERVING_STATE_AXES: dict[str, int] = {"k": -2, "v": -2,
+                                      "xk": -2, "xv": -2,
                                       "k_pages": -2, "v_pages": -2,
                                       "conv": -1, "ssm": 2}
 

@@ -190,6 +190,25 @@ def serving_gemm_fleet(cfg, *, max_batch: int, max_len: int,
             for w in ws:
                 fleet |= set(gemm_shape_counts(cfg, w * b, head_tokens=w,
                                                kv_rows=w * cap_len, tp=tp))
+    if getattr(cfg, "kind", None) in ("encdec", "vlm"):
+        # prefill-once admission grid: encoder + cross-KV (encdec) or the
+        # patch-prefix decoder pass (vlm) runs once per request over the
+        # source/patch rows, bucketed by the full prefill ladder (admission
+        # is not capped at chunk_tokens) at pow2 widths plus the full batch
+        cap = lane_width if lane_width is not None else max_batch
+        widths = {1, max_batch}
+        a = 1
+        while a < cap:
+            a *= 2
+            widths.add(a)
+        for b in prefill_buckets(max_len, grain):
+            for w in sorted(widths):
+                if cfg.kind == "encdec":
+                    fleet |= set(gemm_shape_counts(
+                        cfg, 0, head_tokens=0, src_tokens=w * b, tp=tp))
+                else:
+                    fleet |= set(gemm_shape_counts(
+                        cfg, w * b, head_tokens=0, tp=tp))
     return sorted(fleet)
 
 

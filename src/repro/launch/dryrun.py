@@ -130,15 +130,19 @@ def batch_shardings(arch: str, shape: str, mesh, specs,
             },
         }
     elif kind == "encdec":
-        sharded_state["kv"] = {"k": kv_spec(st["kv"]["k"]),
-                               "v": kv_spec(st["kv"]["v"])}
-        sharded_state["cross"] = {
-            "k": ns(st["cross"]["k"], None, dp, None, mdl, None),
-            "v": ns(st["cross"]["v"], None, dp, None, mdl, None),
+        sharded_state["kv"] = {
+            "k": kv_spec(st["kv"]["k"]), "v": kv_spec(st["kv"]["v"]),
+            # cross-KV: head-sharded like self-attn, seq never sharded
+            # (source length is short and read-only after admission)
+            "xk": ns(st["kv"]["xk"], None, dp, None, mdl, None),
+            "xv": ns(st["kv"]["xv"], None, dp, None, mdl, None),
         }
-    if "next_pos" in st:
-        sharded_state["next_pos"] = ns(st["next_pos"], dp)
-    sharded_state["index"] = NamedSharding(mesh, P())
+        sharded_state["src_len"] = ns(st["src_len"], dp)
+    if "pos_off" in st:
+        sharded_state["pos_off"] = ns(st["pos_off"], dp)
+    idx = st["index"]
+    sharded_state["index"] = (ns(idx, dp) if getattr(idx, "shape", ())
+                              else NamedSharding(mesh, P()))
     out["state"] = sharded_state
     return out
 

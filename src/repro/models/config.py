@@ -187,7 +187,8 @@ def kv_cache_bytes(cfg: ModelConfig, tokens: int,
 def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
                       head_tokens: int | None = None,
                       kv_rows: int | None = None,
-                      tp: int = 1
+                      tp: int = 1,
+                      src_tokens: int | None = None
                       ) -> dict[tuple[int, int, int], float]:
     """Dominant (m, n, k) GEMMs of one forward pass over `n_tokens` rows,
     with per-step multiplicities — the denominator the serving engine's
@@ -203,6 +204,13 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
     over the *whole* latent cache, B * cache_len rows, every serving step
     — see `moe.mla_apply`); default = n_tokens, the no-cache training
     case where the cache is the sequence itself.
+
+    `src_tokens` sizes encdec's prefill-once admission fleet: the encoder
+    stack plus every decoder layer's cross-KV projection run over the
+    source rows exactly once per request (`encdec_admit`), so the engine
+    prices admission with ``n_tokens=0, src_tokens=T`` and steady-state
+    steps with ``src_tokens=0`` — the per-step cross-attention Q/O reads
+    are always counted for encdec. Zero-row GEMMs are dropped.
 
     Counts are an analytical estimate: MoE expert GEMMs are counted
     ``top_k + n_shared_experts`` times per layer at full `n_tokens` rows
@@ -239,9 +247,30 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
     counts: dict[tuple[int, int, int], float] = {}
 
     def add(shape: tuple[int, int, int], n: float) -> None:
+        if shape[0] <= 0 or n <= 0:
+            return
         counts[shape] = counts.get(shape, 0.0) + n
 
-    if cfg.kind == "mla_moe" and cfg.kv_lora_rank:
+    src = int(src_tokens) if src_tokens is not None else 0
+    if cfg.kind == "encdec":
+        # decoder: self-attention Q/K/V/O over the step's rows plus the
+        # cross-attention Q/O read of the admission-time cross-KV
+        add((t, shard(cfg.n_heads * hd), d), 2 * L)   # self + cross Q
+        add((t, shard(kv * hd), d), 2 * L)            # self K and V
+        add((t, shard(d), cfg.n_heads * hd), 2 * L)   # self + cross O
+        if src:
+            # prefill-once admission: encoder stack + per-decoder-layer
+            # cross-KV projection over the source rows
+            eL = cfg.n_encoder_layers
+            gm = 2 if cfg.gated_mlp else 1
+            add((src, shard(cfg.n_heads * hd), d), eL)
+            add((src, shard(kv * hd), d), 2 * eL)
+            add((src, shard(d), cfg.n_heads * hd), eL)
+            if cfg.d_ff:
+                add((src, shard(cfg.d_ff), d), gm * eL)
+                add((src, shard(d), cfg.d_ff), eL)
+            add((src, shard(kv * hd), d), 2 * L)      # cross-KV projection
+    elif cfg.kind == "mla_moe" and cfg.kv_lora_rank:
         # multi-head latent attention traces its own projection fleet
         # (moe.mla_apply), not the generic Q/K/V/O skeleton
         r, rq, pe = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
@@ -293,7 +322,8 @@ def gemm_shape_counts(cfg: ModelConfig, n_tokens: int,
 
 
 def collective_wire_bytes(cfg: ModelConfig, n_tokens: int, tp: int,
-                          head_tokens: int | None = None
+                          head_tokens: int | None = None,
+                          src_tokens: int | None = None
                           ) -> tuple[float, float]:
     """Per-chip ring traffic of one tensor-parallel forward pass.
 
@@ -325,10 +355,23 @@ def collective_wire_bytes(cfg: ModelConfig, n_tokens: int, tp: int,
     ring = (tp - 1) / tp
     elems = 0.0
     phases = 0.0
+    src = int(src_tokens) if src_tokens is not None else 0
     if attn_layers:
         # attention output projection: gather (t, H*hd) in, (t, d) out
         elems += attn_layers * t * (cfg.n_heads * hd + d)
         phases += 2 * attn_layers
+    if cfg.kind == "encdec":
+        # one more gather pair per decoder layer for the cross-attention
+        # output projection, plus the admission-time encoder stack
+        elems += L * t * (cfg.n_heads * hd + d)
+        phases += 2 * L
+        if src:
+            eL = cfg.n_encoder_layers
+            elems += eL * src * (cfg.n_heads * hd + d)
+            phases += 2 * eL
+            if cfg.d_ff:
+                elems += eL * src * (cfg.d_ff + d)
+                phases += 2 * eL
     ff = cfg.d_ff_expert if cfg.n_experts else cfg.d_ff
     if ff:
         ffn_layers = attn_layers if cfg.kind == "hybrid" else L

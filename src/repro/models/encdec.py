@@ -3,18 +3,31 @@
 Per the task spec the modality frontend is a STUB: `src_embeds` arrive as
 precomputed speech-frame embeddings (B, T_src, d_model). The text decoder is
 a standard causal transformer with cross-attention into the encoder output.
+
+Serving follows the prefill-once contract: the encoder and every decoder
+layer's cross-attention KV run ONCE at admission (`encdec_admit`) and land
+in the decode state next to the self-attention cache — `xk`/`xv` leaves of
+`max_len` source-row capacity, carried through chunk/decode calls unchanged
+like MLA's latent cache. Decoder self-attention then chunks through the
+standard right-pad / per-row-`index` path via the `transformer`
+lm generics, with a per-row `src_len` masking cross-attention keys to each
+row's true source length (non-causal attention is not right-pad-safe by
+construction — see `layers.attention_apply`).
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.sharding import shard_activation
 from repro.kernels import ops
 from repro.models import layers as L
+from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 
 Params = dict[str, Any]
@@ -32,10 +45,15 @@ def enc_block_init(key, cfg: ModelConfig) -> Params:
     }
 
 
-def enc_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions):
+def enc_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
+                    src_lens: jax.Array | None = None):
+    """Bidirectional encoder block. `src_lens` masks self-attention keys to
+    each row's valid source rows (required whenever the batch is
+    right-padded — encoder attention is non-causal, so pad keys would
+    otherwise take softmax weight)."""
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     attn, _ = L.attention_apply(p["attn"], h, cfg, positions=positions,
-                                causal=False)
+                                causal=False, kv_lens=src_lens)
     x = x + attn
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     x = x + L.swiglu_apply(p["mlp"], h)
@@ -55,40 +73,77 @@ def dec_block_init(key, cfg: ModelConfig) -> Params:
 
 
 def _cross_kv(p: Params, memory: jax.Array, cfg: ModelConfig):
+    from repro.distributed.tp import tp_column
+
     B, T, _ = memory.shape
     KV, hd = cfg.kv_heads, cfg.hd
-    k = ops.matmul(memory, p["wk"]).reshape(B, T, KV, hd)
-    v = ops.matmul(memory, p["wv"]).reshape(B, T, KV, hd)
+    k = tp_column(memory, p["wk"], cfg)
+    v = tp_column(memory, p["wv"], cfg)
     if cfg.qkv_bias:
-        k = k + p["bk"].reshape(KV, hd).astype(k.dtype)
-        v = v + p["bv"].reshape(KV, hd).astype(v.dtype)
-    return {"k": k, "v": v}
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return {"k": k.reshape(B, T, KV, hd), "v": v.reshape(B, T, KV, hd)}
 
 
-def _cross_attend(p: Params, x: jax.Array, ckv: dict, cfg: ModelConfig):
+def _cross_attend(p: Params, x: jax.Array, ckv: dict, cfg: ModelConfig, *,
+                  kv_len: jax.Array | None = None):
+    """Cross-attention over a precomputed (possibly right-padded) memory
+    KV; `kv_len` masks each row's keys to its true source length. Runs
+    through the tp_column/tp_row wrappers so gather-mode TP keeps the
+    bit-identical-to-tp=1 contract the serving engine stands on."""
+    from repro.distributed.tp import tp_column, tp_row
+
     B, S, _ = x.shape
     H, hd = cfg.n_heads, cfg.hd
-    q = ops.matmul(x, p["wq"])
+    q = tp_column(x, p["wq"], cfg)
     if cfg.qkv_bias:
         q = q + p["bq"].astype(q.dtype)
     q = q.reshape(B, S, H, hd)
-    out = L._sdpa(q, ckv["k"], ckv["v"], causal=False)
-    return ops.matmul(out.reshape(B, S, H * hd), p["wo"])
+    k, v = ckv["k"], ckv["v"]
+    if k.dtype != q.dtype:       # bf16 decode-state storage converts at read
+        k, v = k.astype(q.dtype), v.astype(q.dtype)
+    out = L._sdpa(q, k, v, causal=False, kv_len=kv_len)
+    return tp_row(out.reshape(B, S, H * hd), p["wo"], cfg)
 
 
 def dec_block_apply(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
                     cross_kv: dict, cache: dict | None = None,
-                    cache_index=None):
+                    cache_index=None, src_lens: jax.Array | None = None):
     h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
     attn, new_cache = L.attention_apply(
         p["self_attn"], h, cfg, positions=positions, kv_cache=cache,
         cache_index=cache_index)
     x = x + attn
     h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
-    x = x + _cross_attend(p["cross_attn"], h, cross_kv, cfg)
+    x = x + _cross_attend(p["cross_attn"], h, cross_kv, cfg, kv_len=src_lens)
     h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
     x = x + L.swiglu_apply(p["mlp"], h)
     return shard_activation(x, "batch", None, None), new_cache
+
+
+def dec_serve_block(p: Params, x: jax.Array, cfg: ModelConfig, *, positions,
+                    cache: dict | None = None, cache_index=None,
+                    seq_lens=None, src_len: jax.Array | None = None):
+    """Serving decoder block over the fused decode cache: self-attention
+    KV (dense ``k``/``v`` or paged ``k_pages``/``v_pages``/``table``) plus
+    the admission-time cross-attention KV (``xk``/``xv``, read-only, masked
+    to ``src_len``). Signature matches the `transformer` generics' block
+    contract; `src_len` is closed over per call."""
+    sa = {k: v for k, v in cache.items() if k not in ("xk", "xv")}
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn, new_sa = L.attention_apply(
+        p["self_attn"], h, cfg, positions=positions, kv_cache=sa,
+        cache_index=cache_index, seq_lens=seq_lens)
+    x = x + attn
+    h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + _cross_attend(p["cross_attn"], h,
+                          {"k": cache["xk"], "v": cache["xv"]}, cfg,
+                          kv_len=src_len)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.swiglu_apply(p["mlp"], h)
+    new_cache = {**new_sa, "xk": cache["xk"], "xv": cache["xv"]}
+    return (shard_activation(x, "batch", None, None), new_cache,
+            jnp.zeros((), jnp.float32))
 
 
 # ---------------- model ----------------
@@ -107,14 +162,23 @@ def encdec_init(key, cfg: ModelConfig) -> Params:
     }
 
 
-def encode(params: Params, src_embeds: jax.Array, cfg: ModelConfig):
+def _dec_view(params: Params) -> Params:
+    """Decoder-only params view in the layout the `transformer` lm
+    generics expect (embed / blocks / ln_f / head)."""
+    return {"embed": params["embed"], "blocks": params["decoder"],
+            "ln_f": params["ln_f"], "head": params["head"]}
+
+
+def encode(params: Params, src_embeds: jax.Array, cfg: ModelConfig,
+           src_lens: jax.Array | None = None):
     B, T, _ = src_embeds.shape
     positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
     x = shard_activation(src_embeds.astype(jnp.dtype(cfg.activation_dtype)),
                          "batch", None, None)
 
     def body(h, blk):
-        return enc_block_apply(blk, h, cfg, positions=positions), None
+        return enc_block_apply(blk, h, cfg, positions=positions,
+                               src_lens=src_lens), None
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, _ = jax.lax.scan(body_fn, x, params["encoder"])
@@ -166,47 +230,108 @@ def encdec_loss(params: Params, batch: dict, cfg: ModelConfig):
     return loss, metrics
 
 
-def encdec_prefill(params: Params, batch: dict, cfg: ModelConfig,
-                   max_len: int | None = None):
-    """Encode source + prefill decoder self-attn cache; precompute cross-KV."""
-    memory = encode(params, batch["src_embeds"], cfg)
-    # per-layer cross KV, stacked (L, B, T, KV, hd)
+# ---------------- serving (prefill-once admission + chunked decode) -------
+
+def encdec_init_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Zeroed decode state: self-attention KV plus cross-attention KV
+    (``xk``/``xv``, `max_len` source-row capacity — the source shares the
+    row's length budget) and a per-row ``src_len``/``index``."""
+    kv = tfm.init_kv_cache(cfg, batch, max_len, dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd)
+    kv["xk"] = jnp.zeros(shape, dtype)
+    kv["xv"] = jnp.zeros(shape, dtype)
+    return {"kv": kv,
+            "src_len": jnp.zeros((batch,), jnp.int32),
+            "index": jnp.zeros((batch,), jnp.int32)}
+
+
+def encdec_admit_dims(cfg: ModelConfig, extras: dict | None
+                      ) -> tuple[int, int]:
+    """(cache-prefix rows, source rows) one request's admission consumes.
+    The encoder writes no decoder-cache rows (prefix 0); the source length
+    sizes the cross-KV leaves and the admission GEMM fleet."""
+    if not extras or "src_embeds" not in extras:
+        raise ValueError(
+            "encdec requests need extras={'src_embeds': (T_src, d_model)}")
+    return 0, int(np.asarray(extras["src_embeds"]).shape[0])
+
+
+def encdec_pack_admit(cfg: ModelConfig, extras_list: list, width: int,
+                      bucket: int) -> dict:
+    """Host-side admission batch: source embeddings right-padded to the
+    shared `bucket`, rows padded to `width` (pad rows are all-zero with
+    src_len 0 — fully masked downstream)."""
+    src = np.zeros((width, bucket, cfg.d_model), np.float32)
+    sl = np.zeros((width,), np.int32)
+    for i, ex in enumerate(extras_list):
+        if not ex:
+            continue
+        e = np.asarray(ex["src_embeds"], np.float32)
+        src[i, :e.shape[0]] = e
+        sl[i] = e.shape[0]
+    return {"src_embeds": jnp.asarray(src), "src_len": jnp.asarray(sl)}
+
+
+def encdec_admit(params: Params, packed: dict, state: dict,
+                 cfg: ModelConfig) -> dict:
+    """Prefill-once admission: encode the (padded) source and write every
+    decoder layer's cross-attention KV into the decode state. Touches only
+    the ``xk``/``xv``/``src_len`` leaves — the self-attention cache (dense
+    or paged) threads through untouched."""
+    src_len = jnp.asarray(packed["src_len"], jnp.int32)
+    memory = encode(params, packed["src_embeds"], cfg, src_lens=src_len)
     cross = jax.vmap(
         lambda blk: _cross_kv(blk["cross_attn"], memory, cfg)
     )(params["decoder"])
-    tokens = batch["tokens"]
-    B, S = tokens.shape
-    max_len = max_len or S
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    cache = batch.get("cache")
-    if cache is None:
-        cache = {
-            "k": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_heads, cfg.hd),
-                           jnp.bfloat16),
-            "v": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_heads, cfg.hd),
-                           jnp.bfloat16),
-        }
-    x = params["embed"]["table"][tokens].astype(
-        jnp.dtype(cfg.activation_dtype))
-    x, cache = _decode_stack(params, x, None, cfg, positions=positions,
-                             cross_cache=cross, cache=cache,
-                             cache_index=jnp.int32(0))
-    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = ops.matmul(x[:, -1:], params["head"]["w"], out_dtype=jnp.float32)
-    return logits[:, 0], {"kv": cache, "cross": cross, "index": jnp.int32(S)}
+    kv = dict(state["kv"])
+    T = memory.shape[1]
+    kv["xk"] = kv["xk"].at[:, :, :T].set(cross["k"].astype(kv["xk"].dtype))
+    kv["xv"] = kv["xv"].at[:, :, :T].set(cross["v"].astype(kv["xv"].dtype))
+    return {**state, "kv": kv, "src_len": src_len}
+
+
+def encdec_prefill_chunk(params: Params, tokens: jax.Array,
+                         lengths: jax.Array, state: dict, cfg: ModelConfig
+                         ) -> tuple[jax.Array, dict]:
+    """One admission-prefill chunk of the *decoder* (standard right-pad /
+    per-row-`index` contract via `transformer.lm_prefill_chunk`); the
+    cross-KV computed at admission rides along read-only."""
+    src_len = jnp.asarray(state["src_len"], jnp.int32)
+    block = functools.partial(dec_serve_block, src_len=src_len)
+    logits, st = tfm.lm_prefill_chunk(
+        _dec_view(params), tokens, lengths,
+        {"kv": state["kv"], "index": state["index"]}, cfg, block)
+    return logits, {**st, "src_len": src_len}
 
 
 def encdec_decode_step(params: Params, token: jax.Array, state: dict,
                        cfg: ModelConfig):
-    B = token.shape[0]
-    idx = state["index"]
-    positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
-    x = params["embed"]["table"][token[:, None]].astype(
-        jnp.dtype(cfg.activation_dtype))
-    x, cache = _decode_stack(params, x, None, cfg, positions=positions,
-                             cross_cache=state["cross"], cache=state["kv"],
-                             cache_index=idx)
-    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = ops.matmul(x, params["head"]["w"], out_dtype=jnp.float32)
-    return logits[:, 0], {"kv": cache, "cross": state["cross"],
-                          "index": idx + 1}
+    src_len = jnp.asarray(state["src_len"], jnp.int32)
+    block = functools.partial(dec_serve_block, src_len=src_len)
+    logits, st = tfm.lm_decode_step(
+        _dec_view(params), token,
+        {"kv": state["kv"], "index": state["index"]}, cfg, block)
+    return logits, {**st, "src_len": src_len}
+
+
+def encdec_prefill(params: Params, batch: dict, cfg: ModelConfig,
+                   max_len: int | None = None):
+    """Single-shot prefill: admission (encode + cross-KV) plus one decoder
+    chunk over the whole prompt. Same code path as the serving engine's
+    chunked admission, so the returned state layout (and every bit of the
+    cache) matches a chunked prefill of the same rows."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    src = batch["src_embeds"]
+    src_lens = batch.get("src_lens")
+    if src_lens is None:
+        src_lens = jnp.full((B,), src.shape[1], jnp.int32)
+    state = encdec_init_state(cfg, B, max_len)
+    state = encdec_admit(
+        params, {"src_embeds": src, "src_len": src_lens}, state, cfg)
+    lengths = batch.get("lengths")
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    return encdec_prefill_chunk(params, tokens, lengths, state, cfg)

@@ -365,12 +365,20 @@ def attention_apply(
     cache_index: jax.Array | None = None,
     seq_lens: jax.Array | None = None,    # per-row valid rows of a chunk
     xa: jax.Array | None = None,          # cross-attention memory
+    kv_lens: jax.Array | None = None,     # per-row valid KEY rows (non-causal)
 ) -> tuple[jax.Array, dict | None]:
     """Standard (GQA) attention with optional KV cache and cross-attention.
 
     `seq_lens` (with a per-row `cache_index`) masks the KV write to each
     row's valid tokens — the chunked-prefill junk-free write contract
-    (see `cache_update`)."""
+    (see `cache_update`).
+
+    `kv_lens` masks the *keys* of the non-cached and cached-cross paths to
+    each row's valid rows. Causal self-attention hides right-pad keys for
+    free (pad keys sit at positions > every valid query); non-causal
+    attention — encoder self-attention, cross-attention over a padded
+    memory — does not, so right-padded batches must pass `kv_lens` or the
+    zero-pad keys take softmax weight."""
     B, S, d = x.shape
     H, KV, hd = config.n_heads, config.kv_heads, config.hd
     from repro.distributed.tp import tp_column, tp_row
@@ -435,10 +443,11 @@ def attention_apply(
         out = _sdpa(q, ck_c, cv_c, causal=True, q_offset=cache_index,
                     kv_len=cache_index + S)
     elif kv_cache is not None:  # cached cross-attention (enc-dec decode)
-        out = _sdpa(q, kv_cache["k"], kv_cache["v"], causal=False)
+        out = _sdpa(q, kv_cache["k"], kv_cache["v"], causal=False,
+                    kv_len=kv_lens)
         new_cache = kv_cache
     else:
-        out = _sdpa(q, k, v, causal=causal and xa is None)
+        out = _sdpa(q, k, v, causal=causal and xa is None, kv_len=kv_lens)
     y = tp_row(out.reshape(B, S, H * hd), p["wo"], config)
     return y, new_cache
 

@@ -60,13 +60,19 @@ def moe_ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig
                   ) -> tuple[jax.Array, jax.Array]:
     """Returns (out, aux_loss). x: (B, S, d).
 
-    Sort/scatter dispatch: tokens are ranked within their expert via a
-    stable argsort (first-come-first-served, identical semantics to the
-    textbook cumsum-one-hot dispatch) and scattered into a static
-    (E, capacity, d) buffer. Memory is O(T*K*d) — no (T, E, C) dispatch
-    tensor — which is what keeps the 1M-token x 160-expert DeepSeek-V2
-    train step compilable. Under EP sharding (experts on "model") XLA
-    lowers the scatter/gather to the expected all-to-all pattern.
+    Sort/scatter dispatch: tokens are ranked within their (row, expert)
+    group via a stable argsort (first-come-first-served, identical
+    semantics to the textbook cumsum-one-hot dispatch) and scattered into
+    a static (E, B*capacity, d) buffer. Capacity is PER ROW — derived from
+    S, not the flattened T = B*S — so whether a row's tokens reach their
+    experts never depends on which other rows share the batch: a request
+    served alone and the same request served in a full continuous-batching
+    wave take bit-identical expert paths, and decode steps (S=1, distinct
+    top-k experts) can never drop a token. Memory is O(T*K*d) — no
+    (T, E, C) dispatch tensor — which is what keeps the 1M-token x
+    160-expert DeepSeek-V2 train step compilable. Under EP sharding
+    (experts on "model") XLA lowers the scatter/gather to the expected
+    all-to-all pattern.
     """
     B, S, d = x.shape
     T = B * S
@@ -79,24 +85,26 @@ def moe_ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    capacity = max(1, int(cfg.capacity_factor * T * K / E))
+    capacity = max(1, int(cfg.capacity_factor * S * K / E))           # per row
     TK = T * K
     idx_flat = gate_idx.reshape(TK)                                   # expert id
-    order = jnp.argsort(idx_flat, stable=True)
-    sorted_idx = idx_flat[order]
-    group_start = jnp.searchsorted(sorted_idx, jnp.arange(E),
-                                   side="left")                       # (E,)
-    pos_sorted = jnp.arange(TK, dtype=jnp.int32) - group_start[sorted_idx]
+    row_flat = jnp.arange(TK, dtype=jnp.int32) // (S * K)             # batch row
+    grp = row_flat * E + idx_flat                                     # (row, e)
+    order = jnp.argsort(grp, stable=True)
+    sorted_grp = grp[order]
+    group_start = jnp.searchsorted(sorted_grp, jnp.arange(B * E),
+                                   side="left")                       # (B*E,)
+    pos_sorted = jnp.arange(TK, dtype=jnp.int32) - group_start[sorted_grp]
     pos_flat = jnp.zeros((TK,), jnp.int32).at[order].set(
         pos_sorted.astype(jnp.int32))
     keep = pos_flat < capacity
-    pos_c = jnp.where(keep, pos_flat, 0)
+    slot = row_flat * capacity + jnp.where(keep, pos_flat, 0)
 
     gate_flat = (gate_vals.reshape(TK) * keep.astype(gate_vals.dtype))
     x_rep = jnp.repeat(xt, K, axis=0)                                 # (TK, d)
     contrib = jnp.where(keep[:, None], x_rep.astype(jnp.float32), 0.0)
-    xe = jnp.zeros((E, capacity, d), jnp.float32).at[
-        idx_flat, pos_c].add(contrib)
+    xe = jnp.zeros((E, B * capacity, d), jnp.float32).at[
+        idx_flat, slot].add(contrib)
     # NOTE: sharding the capacity dim over "batch" here looks like it should
     # data-parallelize the expert GEMM, but SPMD then lowers the token
     # scatter as a giant cross-shard exchange (measured 14x collective blowup
@@ -112,7 +120,7 @@ def moe_ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig
     ye = jnp.einsum("ecf,efd->ecd", h, w["w_down"])                   # (E,C,d)
     ye = shard_activation(ye, "expert", None, None)
 
-    y_tok = ye[idx_flat, pos_c].astype(jnp.float32)                   # (TK, d)
+    y_tok = ye[idx_flat, slot].astype(jnp.float32)                    # (TK, d)
     y_tok = y_tok * gate_flat[:, None]
     out = y_tok.reshape(T, K, d).sum(axis=1).astype(x.dtype)
 
@@ -130,34 +138,40 @@ def moe_ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig
 # ---------------- explicit shard_map MoE (production EP path) ----------------
 
 
-def _local_dispatch(xt, logits, cfg: ModelConfig, capacity: int):
-    """Per-shard top-k dispatch into (E, capacity, d) — same math as the
-    SPMD path but over this shard's tokens only (per-device capacity,
-    production semantics)."""
+def _local_dispatch(xt, logits, cfg: ModelConfig, capacity: int,
+                    n_rows: int):
+    """Per-shard top-k dispatch into (E, n_rows*capacity, d) — same math
+    as the SPMD path but over this shard's tokens only. `capacity` is per
+    batch row (this shard holds ``n_rows`` rows of S = T/n_rows tokens),
+    so expert admission is independent of batch composition."""
     T, d = xt.shape
     E, K = cfg.n_experts, cfg.top_k
+    S = T // n_rows
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, K)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
                                         1e-9)
     TK = T * K
     idx_flat = gate_idx.reshape(TK)
-    order = jnp.argsort(idx_flat, stable=True)
-    sorted_idx = idx_flat[order]
-    group_start = jnp.searchsorted(sorted_idx, jnp.arange(E), side="left")
-    pos_sorted = jnp.arange(TK, dtype=jnp.int32) - group_start[sorted_idx]
+    row_flat = jnp.arange(TK, dtype=jnp.int32) // (S * K)
+    grp = row_flat * E + idx_flat
+    order = jnp.argsort(grp, stable=True)
+    sorted_grp = grp[order]
+    group_start = jnp.searchsorted(sorted_grp, jnp.arange(n_rows * E),
+                                   side="left")
+    pos_sorted = jnp.arange(TK, dtype=jnp.int32) - group_start[sorted_grp]
     pos_flat = jnp.zeros((TK,), jnp.int32).at[order].set(
         pos_sorted.astype(jnp.int32))
     keep = pos_flat < capacity
-    pos_c = jnp.where(keep, pos_flat, 0)
+    slot = row_flat * capacity + jnp.where(keep, pos_flat, 0)
     gate_flat = gate_vals.reshape(TK) * keep.astype(gate_vals.dtype)
     x_rep = jnp.repeat(xt, K, axis=0)
     contrib = jnp.where(keep[:, None], x_rep.astype(jnp.float32), 0.0)
-    xe = jnp.zeros((E, capacity, d), jnp.float32).at[idx_flat, pos_c].add(
-        contrib)
+    xe = jnp.zeros((E, n_rows * capacity, d), jnp.float32).at[
+        idx_flat, slot].add(contrib)
     density = jnp.zeros((E,), jnp.float32).at[idx_flat].add(1.0) / TK
     aux = cfg.router_aux_coef * E * jnp.sum(density * probs.mean(0))
-    return xe.astype(xt.dtype), idx_flat, pos_c, gate_flat, aux
+    return xe.astype(xt.dtype), idx_flat, slot, gate_flat, aux
 
 
 def moe_ffn_shard_map(p: Params, x: jax.Array, cfg: ModelConfig
@@ -188,8 +202,7 @@ def moe_ffn_shard_map(p: Params, x: jax.Array, cfg: ModelConfig
     for a in dp_ax:
         n_data *= mesh.shape[a]
     n_model = mesh.shape["model"]
-    T_loc = (B // n_data) * S
-    capacity = max(1, int(cfg.capacity_factor * T_loc * K / E))
+    capacity = max(1, int(cfg.capacity_factor * S * K / E))  # per row
     E_loc = E // n_model
 
     def local_fn(x_loc, router_w, w_gate, w_up, w_down, shared):
@@ -202,8 +215,8 @@ def moe_ffn_shard_map(p: Params, x: jax.Array, cfg: ModelConfig
             w_up = jax.lax.all_gather(w_up, fsdp_axis, axis=1, tiled=True)
             w_down = jax.lax.all_gather(w_down, fsdp_axis, axis=2, tiled=True)
         logits = (xt.astype(jnp.float32) @ router_w.astype(jnp.float32))
-        xe, idx_flat, pos_c, gate_flat, aux = _local_dispatch(
-            xt, logits, cfg, capacity)
+        xe, idx_flat, slot, gate_flat, aux = _local_dispatch(
+            xt, logits, cfg, capacity, Bl)
         # my expert block
         j = jax.lax.axis_index("model")
         xe_my = jax.lax.dynamic_slice_in_dim(xe, j * E_loc, E_loc, axis=0)
@@ -215,7 +228,7 @@ def moe_ffn_shard_map(p: Params, x: jax.Array, cfg: ModelConfig
         rel = idx_flat - j * E_loc
         mine = (rel >= 0) & (rel < E_loc)
         rel_c = jnp.clip(rel, 0, E_loc - 1)
-        y_tok = ye_my[rel_c, pos_c].astype(jnp.float32)
+        y_tok = ye_my[rel_c, slot].astype(jnp.float32)
         y_tok = jnp.where(mine[:, None], y_tok, 0.0) * gate_flat[:, None]
         partial = y_tok.reshape(Bl * Sl, K, d).sum(axis=1)
         if cfg.n_shared_experts and shared is not None:

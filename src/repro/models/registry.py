@@ -38,6 +38,20 @@ class ModelApi:
     # (cfg, num_pages, page_size) -> pool leaves (L, P, T, ...); the
     # engine pairs it with a per-row page table (see repro.serving.paging)
     init_page_pool: Callable | None = None
+    # prefill-once admission hooks for modality families (encdec source
+    # encoding + cross-KV, VLM patch prefix). A family is an "admit
+    # family" iff `admit` is non-None.
+    #   admit_dims(cfg, extras) -> (prefix_len, src_len) host ints: cache
+    #     rows the admission writes ahead of the prompt, and side
+    #     (non-cache) source rows it encodes.
+    #   pack_admit(cfg, extras_list, width, bucket) -> packed host batch
+    #     (rows padded to `width`, sequence dim to `bucket`).
+    #   admit(params, packed, state, cfg) -> state: jittable and
+    #     batch-generic — the wave path admits a full batch in one call,
+    #     the continuous path packs fresh admissions and splices rows.
+    admit_dims: Callable | None = None
+    pack_admit: Callable | None = None
+    admit: Callable | None = None
 
 
 def _zero_index_state(init_cache, key: str = "kv"):
@@ -162,6 +176,13 @@ def _encdec_api() -> ModelApi:
         loss=encdec.encdec_loss,
         prefill=encdec.encdec_prefill,
         decode_step=encdec.encdec_decode_step,
+        prefill_chunk=encdec.encdec_prefill_chunk,
+        init_state=encdec.encdec_init_state,
+        # decoder self-attention KV pages; cross-KV stays dense per-request
+        init_page_pool=tfm.init_kv_page_pool,
+        admit_dims=encdec.encdec_admit_dims,
+        pack_admit=encdec.encdec_pack_admit,
+        admit=encdec.encdec_admit,
     )
 
 
@@ -172,6 +193,12 @@ def _vlm_api() -> ModelApi:
         prefill=vlm.vlm_prefill,
         decode_step=vlm.vlm_decode_step,
         init_cache=lambda cfg, b, ml: tfm.init_kv_cache(cfg, b, ml),
+        prefill_chunk=vlm.vlm_prefill_chunk,
+        init_state=vlm.vlm_init_state,
+        init_page_pool=tfm.init_kv_page_pool,
+        admit_dims=vlm.vlm_admit_dims,
+        pack_admit=vlm.vlm_pack_admit,
+        admit=vlm.vlm_admit,
     )
 
 

@@ -247,7 +247,8 @@ def lm_prefill(params: Params, batch: dict, cfg: ModelConfig,
 
 def lm_prefill_chunk(params: Params, tokens: jax.Array, lengths: jax.Array,
                      state: dict, cfg: ModelConfig,
-                     block_apply: Callable = dense_block_apply
+                     block_apply: Callable = dense_block_apply,
+                     positions: jax.Array | None = None
                      ) -> tuple[jax.Array, dict]:
     """One admission-prefill chunk, fused into the serving loop.
 
@@ -266,11 +267,17 @@ def lm_prefill_chunk(params: Params, tokens: jax.Array, lengths: jax.Array,
     whole (bucketed) prompt: attention reads the same cache with the same
     masks, and the SSM serve-scan block size divides every chunk bucket
     (see `ssm.SERVE_CHUNK`).
+
+    `positions` overrides the default per-row ``base + arange(S)`` rotary
+    positions (families whose position ids are not the cache index — e.g.
+    the VLM's mRoPE text offsets — pass their own; cache writes still land
+    at the per-row cache index).
     """
     B, S = tokens.shape
     base = jnp.asarray(state["index"], jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
-    positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    if positions is None:
+        positions = base[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     x = _embed(params, tokens, cfg)
 
     def chunk_block(bp, h, c, **kw):
@@ -289,16 +296,20 @@ def lm_prefill_chunk(params: Params, tokens: jax.Array, lengths: jax.Array,
 
 def lm_decode_step(params: Params, token: jax.Array, state: dict,
                    cfg: ModelConfig,
-                   block_apply: Callable = dense_block_apply
+                   block_apply: Callable = dense_block_apply,
+                   positions: jax.Array | None = None
                    ) -> tuple[jax.Array, dict]:
     """One-token decode. token: (B,) int32. state: {"kv", "index"}.
 
     ``index`` is either a scalar (all rows at the same position — the wave
     contract) or (B,) (each slot at its own position — the continuous-
-    batching contract; see `lm_prefill`)."""
+    batching contract; see `lm_prefill`). `positions` overrides the rotary
+    position ids (defaults to the cache index)."""
     B = token.shape[0]
     idx = state["index"]
-    if jnp.ndim(idx) == 0:
+    if positions is not None:
+        pass
+    elif jnp.ndim(idx) == 0:
         positions = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
     else:
         positions = idx[:, None].astype(jnp.int32)

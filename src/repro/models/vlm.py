@@ -5,6 +5,13 @@ The sequence is [patch embeddings | text tokens]; M-RoPE position ids are
 (t, h, w) triples — image patches advance h/w at fixed t, text advances all
 three together (Qwen2-VL's scheme). `input_specs` supplies `positions_3d`;
 helpers here build them for the smoke tests.
+
+Serving follows the prefill-once contract: the patch prefix runs through
+the decoder ONCE at admission (`vlm_admit`), landing its KV in rows
+[0, prefix) of the cache; the text tail then chunks through the standard
+right-pad / per-row-`index` path via the `transformer` lm generics with
+mRoPE positions rebuilt per row from `index + pos_off`, where
+``pos_off = t0 - n_patches`` is carried in the decode state.
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers as L
+from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.models.transformer import (
     _unembed,
@@ -34,15 +42,21 @@ def vlm_init(key, cfg: ModelConfig) -> Params:
 
 
 def build_mrope_positions(n_patches: int, grid_hw: tuple[int, int],
-                          text_len: int) -> np.ndarray:
-    """(S, 3) position ids: patches at t=0 on an h/w grid, then text."""
+                          text_len: int, text_start: int = 0) -> np.ndarray:
+    """(n_patches + text_len, 3) position ids: patches at t=0 on an h/w
+    grid, then text rows ``text_start .. text_start + text_len`` at
+    ``t0 + row`` (all three axes advance together). `text_start` makes the
+    helper per-row-offset aware: a chunked text tail resumes mid-sequence
+    without re-emitting the patch prefix."""
     gh, gw = grid_hw
     assert gh * gw == n_patches
+    t0 = max(gh, gw)
+    text = np.arange(text_start, text_start + text_len)[:, None] + t0
+    text = np.repeat(text, 3, axis=1)
+    if n_patches == 0:
+        return text.astype(np.int32)
     hh, ww = np.meshgrid(np.arange(gh), np.arange(gw), indexing="ij")
     patch = np.stack([np.zeros(n_patches), hh.ravel(), ww.ravel()], axis=1)
-    t0 = max(gh, gw)
-    text = np.arange(text_len)[:, None] + t0
-    text = np.repeat(text, 3, axis=1)
     return np.concatenate([patch, text], axis=0).astype(np.int32)
 
 
@@ -78,23 +92,102 @@ def vlm_prefill(params: Params, batch: dict, cfg: ModelConfig,
                                cache_index=jnp.int32(0))
     x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     logits = _unembed(params, x[:, -1:], cfg)
-    # next positions continue from max text position + 1
+    # next positions continue from max text position + 1; the state carries
+    # the fixed mRoPE offset pos_off = next_pos - index instead of next_pos
+    # itself so chunked and single-shot prefill share one layout.
     next_pos = batch["positions_3d"][:, -1, 0] + 1
     return logits[:, 0], {"kv": cache, "index": jnp.int32(S),
-                          "next_pos": next_pos}
+                          "pos_off": (next_pos - S).astype(jnp.int32)}
+
+
+def _mrope3(pos: jax.Array) -> jax.Array:
+    """Text-token (…, 3) triples: all three axes share the scalar id."""
+    return jnp.repeat(pos[..., None].astype(jnp.int32), 3, axis=-1)
 
 
 def vlm_decode_step(params: Params, token: jax.Array, state: dict,
                     cfg: ModelConfig):
-    idx = state["index"]
-    pos_scalar = state["next_pos"]                       # (B,)
-    positions = jnp.repeat(pos_scalar[:, None, None], 3, axis=2)  # (B,1,3)
-    x = params["embed"]["table"][token[:, None]].astype(
-        jnp.dtype(cfg.activation_dtype))
-    x, cache, _ = _scan_blocks(params, x, cfg, dense_block_apply,
-                               positions=positions.astype(jnp.int32),
-                               cache=state["kv"], cache_index=idx)
-    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = _unembed(params, x, cfg)
-    return logits[:, 0], {"kv": cache, "index": idx + 1,
-                          "next_pos": pos_scalar + 1}
+    off = jnp.asarray(state["pos_off"], jnp.int32)    # (B,)
+    idx = state["index"]                              # scalar or (B,)
+    positions = _mrope3((idx + off)[:, None])         # (B, 1, 3)
+    logits, st = tfm.lm_decode_step(
+        params, token, {"kv": state["kv"], "index": idx}, cfg,
+        dense_block_apply, positions=positions)
+    return logits, {**st, "pos_off": off}
+
+
+# ---------------- serving (patch-prefix admission + chunked text) --------
+
+def vlm_init_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return {"kv": init_kv_cache(cfg, batch, max_len),
+            "index": jnp.zeros((batch,), jnp.int32),
+            "pos_off": jnp.zeros((batch,), jnp.int32)}
+
+
+def vlm_admit_dims(cfg: ModelConfig, extras: dict | None) -> tuple[int, int]:
+    """(cache-prefix rows, source rows): the patch prefix occupies cache
+    rows; there is no side (non-cache) source. Text-only requests (no
+    extras) admit nothing and serve exactly like a dense LM."""
+    if not extras or "patch_embeds" not in extras:
+        return 0, 0
+    return int(np.asarray(extras["patch_embeds"]).shape[0]), 0
+
+
+def vlm_pack_admit(cfg: ModelConfig, extras_list: list, width: int,
+                   bucket: int) -> dict:
+    """Host-side admission batch: patch embeddings right-padded to the
+    shared `bucket`, rows padded to `width`; grid mRoPE positions and the
+    per-row text offset ``pos_off = t0 - n_patches`` are built here."""
+    pe = np.zeros((width, bucket, cfg.d_model), np.float32)
+    plen = np.zeros((width,), np.int32)
+    off = np.zeros((width,), np.int32)
+    pos = np.zeros((width, bucket, 3), np.int32)
+    for i, ex in enumerate(extras_list):
+        if not ex or "patch_embeds" not in ex:
+            continue
+        e = np.asarray(ex["patch_embeds"], np.float32)
+        p = e.shape[0]
+        gh, gw = ex["grid_hw"]
+        pe[i, :p] = e
+        plen[i] = p
+        pos[i, :p] = build_mrope_positions(p, (gh, gw), 0)
+        off[i] = max(gh, gw) - p
+    return {"patch_embeds": jnp.asarray(pe), "prefix_len": jnp.asarray(plen),
+            "pos_off": jnp.asarray(off), "positions": jnp.asarray(pos)}
+
+
+def vlm_admit(params: Params, packed: dict, state: dict,
+              cfg: ModelConfig) -> dict:
+    """Prefill-once admission: run the patch prefix through the decoder,
+    writing its KV into rows [0, prefix_len) of each row's cache (dense or
+    paged — `seq_lens` masks pad-row writes), and start the text tail at
+    ``index = prefix_len``. Attention is causal over the prefix, matching
+    `vlm_prefill`'s single-shot pass bit for bit."""
+    plen = jnp.asarray(packed["prefix_len"], jnp.int32)
+    x = packed["patch_embeds"].astype(jnp.dtype(cfg.activation_dtype))
+
+    def block(bp, h, c, **kw):
+        return dense_block_apply(bp, h, c, seq_lens=plen, **kw)
+
+    _, cache, _ = _scan_blocks(params, x, cfg, block,
+                               positions=packed["positions"],
+                               cache=state["kv"],
+                               cache_index=jnp.zeros_like(plen))
+    return {**state, "kv": cache, "index": plen,
+            "pos_off": jnp.asarray(packed["pos_off"], jnp.int32)}
+
+
+def vlm_prefill_chunk(params: Params, tokens: jax.Array, lengths: jax.Array,
+                      state: dict, cfg: ModelConfig
+                      ) -> tuple[jax.Array, dict]:
+    """One text-tail chunk via `transformer.lm_prefill_chunk`, with mRoPE
+    positions rebuilt per row from the cache index plus the admission
+    offset (text id = index + pos_off)."""
+    B, S = tokens.shape
+    off = jnp.asarray(state["pos_off"], jnp.int32)
+    base = jnp.asarray(state["index"], jnp.int32)
+    pos = (base + off)[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    logits, st = tfm.lm_prefill_chunk(
+        params, tokens, lengths, {"kv": state["kv"], "index": base}, cfg,
+        dense_block_apply, positions=_mrope3(pos))
+    return logits, {**st, "pos_off": off}

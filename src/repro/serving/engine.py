@@ -52,13 +52,15 @@ from repro.models.config import ModelConfig
 # families whose decode state supports per-row indices + slot surgery and
 # whose prefill honors the right-padded `lengths` contract (attention KV
 # caches via per-row cache_update/attention_mask; SSM/SSD state via
-# seq_lens pad-skipping — encdec/vlm thread extra inputs and are served in
-# wave mode). MoE families note: rows are batch-independent — and
-# continuous/wave token streams bit-identical — only while expert capacity
-# doesn't bind (capacity-factor token dropping is first-come-first-served
-# across the flattened batch); serve MoE with a capacity_factor sized for
-# the decode batch.
-CONTINUOUS_KINDS = ("dense", "moe", "mla_moe", "mamba1", "mamba2", "hybrid")
+# seq_lens pad-skipping). encdec/vlm are *admit families*: their modality
+# inputs (source embeddings / patch prefix) run through a prefill-once
+# admission call (`ModelApi.admit`) whose outputs live in the decode state
+# like any other cache leaf, after which the text prompt chunks through
+# the same right-pad path as everyone else. MoE expert capacity is per
+# row (`moe.moe_ffn_apply`), so rows are batch-independent at any
+# capacity factor.
+CONTINUOUS_KINDS = ("dense", "moe", "mla_moe", "mamba1", "mamba2",
+                    "hybrid", "encdec", "vlm")
 
 
 @dataclasses.dataclass
@@ -72,6 +74,10 @@ class Request:
     submit_s: float = 0.0       # stamped by ServingEngine.submit
     submit_model_s: float = 0.0  # engine model-clock at submission
     sla: str | None = None      # SLA-class name (FleetScheduler telemetry)
+    # modality inputs consumed by the family's prefill-once admission:
+    # encdec {"src_embeds": (T, d)}, vlm {"patch_embeds": (P, d),
+    # "grid_hw": (gh, gw)}; None for text-only requests
+    extras: dict | None = None
 
 
 @dataclasses.dataclass
@@ -104,6 +110,10 @@ class _Slot:
     rng: np.random.Generator | None = None   # per-request sampling stream
     pages: list[int] | None = None  # paged layout: owned/shared page ids
     index: int = 0              # paged layout: host-tracked cache position
+    # paged admit families: per-request dense admission leaves (encdec
+    # cross-KV + src_len, vlm pos_off) concatenated into each call's state
+    extra_top: dict | None = None
+    extra_kv: dict | None = None
 
 
 @dataclasses.dataclass
@@ -123,12 +133,17 @@ class _Admission:
     ready: "_Slot | None" = None  # prefilled + first token sampled
     first_tok: int = 0
     pages: list[int] | None = None  # paged layout: reserved page ids
+    prefix: int = 0             # admission-prefix cache rows (vlm patches)
+    extra_top: dict | None = None   # paged admit families (see _Slot)
+    extra_kv: dict | None = None
 
 
 # families whose cache the paged layout supports: per-token KV (or MLA
 # latent) rows that page cleanly. SSM/hybrid state is O(1)-per-row (or
-# mixed) and stays dense.
-PAGED_KINDS = ("dense", "moe", "mla_moe")
+# mixed) and stays dense. encdec/vlm page their decoder self-attention
+# KV; encdec's cross-KV stays dense per-request (read-only after
+# admission, never grows).
+PAGED_KINDS = ("dense", "moe", "mla_moe", "encdec", "vlm")
 
 
 class ServingEngine:
@@ -323,25 +338,6 @@ class ServingEngine:
                 fleet, dtype=cfg.activation_dtype,
                 objective=tune_objective, chip=chip,
                 rank_mode=tune_rank_mode)
-        if (cfg.n_experts and mode != "wave"
-                and cfg.capacity_factor * cfg.top_k < cfg.n_experts):
-            # capacity = cf*T*K/E binds when too many tokens pick one
-            # expert; dropping is first-come-first-served across the
-            # flattened batch, so a bound batch makes a request's tokens
-            # depend on its neighbors (and breaks wave/continuous
-            # bit-parity). One expert receives at most T assignments
-            # (top-k indices are distinct per token), so cf >= E/K
-            # guarantees no drop at any T.
-            import warnings
-
-            warnings.warn(
-                f"continuous batching with capacity_factor="
-                f"{cfg.capacity_factor} < n_experts/top_k="
-                f"{cfg.n_experts / cfg.top_k:g}: expert capacity can "
-                f"bind, making generations depend on batch composition; "
-                f"raise capacity_factor (>= n_experts/top_k guarantees "
-                f"batch-independent serving) or use wave mode",
-                stacklevel=2)
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, cfg, max_len=max_len))
         # decode/chunk/splice rebind their state output over the input:
@@ -354,6 +350,13 @@ class ServingEngine:
             lambda p, t, ln, s: model.prefill_chunk(p, t, ln, s, cfg),
             donate_argnums=(3,))
             if model.prefill_chunk is not None else None)
+        # prefill-once admission call for admit families (encdec source
+        # encoding + cross-KV, vlm patch prefix); batch-generic, donates
+        # the state it writes into
+        self._admit_fn = (jax.jit(
+            lambda p, pk, s: model.admit(p, pk, s, cfg),
+            donate_argnums=(2,))
+            if getattr(model, "admit", None) is not None else None)
         self._splice_fn = None          # built lazily with the axes spec
         self._state_axes = None
         # model clock: predicted seconds of dispatched engine calls (the
@@ -462,14 +465,43 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # queue
     # ------------------------------------------------------------------
+    def _row_capacity(self) -> int | None:
+        """Per-row cache capacity in tokens, or None when unbounded —
+        the ONE length bound `submit`/`_budget` apply, uniformly per row.
+        Attention KV caches (and encdec's cross-KV leaves) hold `max_len`
+        rows; attention-free SSM state is O(1) per row, so its capacity
+        is unbounded (long prompts scan through in multiple chunks)."""
+        return None if self.cfg.attention_free else self.max_len
+
+    def _admit_dims(self, req: Request) -> tuple[int, int]:
+        """(cache-prefix rows, side source rows) this request's admission
+        consumes ahead of its prompt — (0, 0) for families without
+        admission hooks. Validates the request's `extras` as a side
+        effect (encdec requires source embeddings)."""
+        if self.model.admit_dims is None:
+            return (0, 0)
+        return self.model.admit_dims(self.cfg, req.extras)
+
     def submit(self, req: Request) -> None:
-        """Queue a request (stamps submit wall/model-clock times)."""
-        # attention-free (SSM) decode state is O(1) per token — no
-        # length-bounded KV cache, so no prompt/budget bound applies
-        if not self.cfg.attention_free and len(req.prompt) >= self.max_len:
-            raise ValueError(
-                f"prompt of {len(req.prompt)} tokens does not fit "
-                f"max_len={self.max_len} (need >= 1 decode position)")
+        """Queue a request (stamps submit wall/model-clock times).
+
+        One uniform per-row bound across every family: the row's
+        admission prefix + prompt must fit its cache capacity with at
+        least one decode position to spare, and an encdec source must fit
+        the row's cross-KV capacity. Unbounded-capacity (attention-free)
+        rows skip the bound entirely."""
+        prefix, src = self._admit_dims(req)
+        cap = self._row_capacity()
+        if cap is not None:
+            if prefix + len(req.prompt) >= cap:
+                raise ValueError(
+                    f"admission prefix {prefix} + prompt of "
+                    f"{len(req.prompt)} tokens does not fit "
+                    f"max_len={cap} (need >= 1 decode position)")
+            if src > cap:
+                raise ValueError(
+                    f"source of {src} rows does not fit the per-row "
+                    f"cross-KV capacity max_len={cap}")
         if req.submit_s == 0.0:
             req.submit_s = time.perf_counter()
         req.submit_model_s = self._clock
@@ -516,12 +548,17 @@ class ServingEngine:
         from repro.models.config import kv_cache_bytes
 
         scale = 2.0 if self.kv_layout == "paged" else 1.0
+        if self.cfg.kind == "encdec":
+            # decode reads each row's dense cross-KV leaves (max_len
+            # source-row capacity) alongside the self-attention cache
+            scale += 1.0
         shard = 1 if self.cfg.kind == "mla_moe" else self.tp
         return (scale * kv_cache_bytes(self.cfg, batch_rows * self.max_len)
                 / max(shard, 1))
 
     def _step_energy(self, key, n_rows: int, head_rows: int | None = None,
-                     batch_rows: int | None = None):
+                     batch_rows: int | None = None,
+                     src_rows: int | None = None):
         """Predicted StepEnergyEstimate for a step over `n_rows` GEMM rows
         (decode: max_batch; prefill/chunk: padded token count, with the LM
         head sized to the rows actually unembedded and MLA's cache-wide
@@ -540,10 +577,12 @@ class ServingEngine:
             kv_rows = (batch_rows * self.max_len
                        if batch_rows is not None else None)
             wire_b, n_coll = collective_wire_bytes(
-                self.cfg, n_rows, self.tp, head_tokens=head_rows)
+                self.cfg, n_rows, self.tp, head_tokens=head_rows,
+                src_tokens=src_rows)
             est = gemm_fleet_energy(
                 gemm_shape_counts(self.cfg, n_rows, head_tokens=head_rows,
-                                  kv_rows=kv_rows, tp=self.tp),
+                                  kv_rows=kv_rows, tp=self.tp,
+                                  src_tokens=src_rows),
                 chip=self.chip or "tpu_v5e",
                 dtype=self.cfg.activation_dtype,
                 configs=self.pretuned or None,
@@ -596,6 +635,21 @@ class ServingEngine:
             ("chunk", int(width), int(chunk)),
             int(width * chunk), int(width), batch_rows=int(width)))
 
+    def _admit_cost(self, width: int, bucket: int
+                    ) -> tuple[float, float, object]:
+        """(energy_j, step_s, est) of one prefill-once admission call:
+        encdec prices the encoder stack + per-decoder-layer cross-KV
+        projections over `width * bucket` source rows (no decoder-token
+        rows); vlm prices the patch prefix through the decoder. Neither
+        runs the LM head."""
+        if self.cfg.kind == "encdec":
+            return self._cost(self._step_energy(
+                ("admit", int(width), int(bucket)), 0, 0,
+                batch_rows=int(width), src_rows=int(width * bucket)))
+        return self._cost(self._step_energy(
+            ("admit", int(width), int(bucket)), int(width * bucket), 0,
+            batch_rows=int(width)))
+
     def decode_step_estimate(self):
         """Predicted `StepEnergyEstimate` of one lockstep decode step
         over the full slot table — the public handle the fleet
@@ -646,10 +700,16 @@ class ServingEngine:
     def _continuous_supported(self) -> bool:
         if self.cfg.kind not in CONTINUOUS_KINDS:
             return False
+        if (self.model.admit_dims is not None
+                and (self.model.admit is None
+                     or self.model.pack_admit is None)):
+            return False
         if self.kv_layout == "paged":
             return (self.model.prefill_chunk is not None
                     and self.model.init_page_pool is not None)
-        if self.admission == "chunked":
+        if self.admission == "chunked" or self.model.admit is not None:
+            # admit families run serial admission through the same
+            # admit + full-prompt-chunk path chunked admission uses
             return (self.model.prefill_chunk is not None
                     and self.model.init_state is not None)
         return (self.model.init_cache is not None
@@ -684,13 +744,16 @@ class ServingEngine:
         return buckets[min(i, len(buckets) - 1)]
 
     def _budget(self, req: Request) -> int:
-        """Effective token budget: >= 1, bounded by KV-cache room for
-        families with a length-bounded cache (attention-free SSM state
-        has no such bound)."""
-        if self.cfg.attention_free:
+        """Effective token budget: >= 1, bounded by the row's remaining
+        cache room — capacity minus its admission prefix and its own
+        prompt length. This is the uniform per-row `lengths` bound; no row
+        is ever clamped by another row's padded length."""
+        cap = self._row_capacity()
+        if cap is None:
             return max(1, req.max_new_tokens)
+        prefix, _ = self._admit_dims(req)
         return max(1, min(req.max_new_tokens,
-                          self.max_len - len(req.prompt)))
+                          cap - prefix - len(req.prompt)))
 
     def _init_state(self, batch: int):
         """Zeroed decode-state pytree of `batch` rows (head-axis-sharded
@@ -726,14 +789,43 @@ class ServingEngine:
                 dst, L.take_slot_state(src, axes, i), axes, j),
             donate_argnums=(0,))
 
+    def _admit_rows(self, reqs: list[Request], width: int
+                    ) -> tuple[dict, float]:
+        """Prefill-once admission of `reqs` into a fresh `width`-row zero
+        state, one batched call (the wave path admits a whole batch at
+        once; chunked admission packs the step's fresh admissions).
+        Returns (admitted state, total admission energy)."""
+        dims = [self._admit_dims(r) for r in reqs]
+        bucket = self._bucket(max(max(p, s) for p, s in dims) or 1)
+        packed = self.model.pack_admit(
+            self.cfg, [r.extras for r in reqs], width, bucket)
+        state = self._admit_fn(self.params, packed,
+                               self._init_state(width))
+        adm_j, adm_s, adm_est = self._admit_cost(width, bucket)
+        self._tick(adm_s, adm_est)
+        return state, adm_j
+
     def _prefill_slot(self, req: Request, rng) -> tuple[int, dict, float]:
         """Single-shot slot prefill (`admission="serial"`): one request
         alone, right-padded to a pow2 bucket; samples its first token.
-        Returns (first_token, slot_state, prefill_energy_j)."""
+        Admit families run their admission call plus one full-prompt
+        chunk — the exact path chunked admission takes, so serial/chunked
+        parity holds by construction. Returns (first_token, slot_state,
+        prefill_energy_j)."""
         n = len(req.prompt)
         bucket = self._bucket(n)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.prompt
+        if self._admit_fn is not None:
+            state, adm_j = self._admit_rows([req], 1)
+            logits, state = self._chunk(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([n], np.int32), state)
+            pre_j, pre_s, pre_est = self._chunk_cost(1, bucket)
+            self._tick(pre_s, pre_est)
+            logits = np.asarray(logits, np.float32)
+            tok = int(self._sample(logits, [rng])[0])
+            return tok, state, adm_j + pre_j
         logits, state = self._prefill(
             self.params, {"tokens": jnp.asarray(toks),
                           "lengths": jnp.asarray([n], np.int32)})
@@ -958,12 +1050,38 @@ class ServingEngine:
                 lane_dirty.clear()
                 self._stats["lane_rebuilds"] += 1
             lane_free.sort()
+            fresh: list[_Admission] = []
             for a in adm:
                 if a.row < 0:
                     a.row = lane_free.pop(0)
-                    if a.row in lane_dirty:
+                    if self._admit_fn is not None:
+                        # admit families: the admission splice below
+                        # overwrites the whole row (a complete batch-1
+                        # state), so no zeroing splice is needed
+                        lane_dirty.discard(a.row)
+                        fresh.append(a)
+                    elif a.row in lane_dirty:
                         lane_dirty.discard(a.row)
                         zero_lane_row(a.row)
+            if fresh:
+                # prefill-once admission: one packed call over this
+                # step's fresh admissions, each row spliced into its lane
+                # slot (encoder + cross-KV for encdec, patch prefix for
+                # vlm — their outputs are decode-state leaves)
+                Wb = 1
+                while Wb < len(fresh):
+                    Wb *= 2
+                t_adm = time.perf_counter()
+                src_state, adm_j = self._admit_rows(
+                    [a.req for a in fresh], Wb)
+                for i, a in enumerate(fresh):
+                    adm_state = self._splice_fn(adm_state, src_state,
+                                                jnp.int32(i),
+                                                jnp.int32(a.row))
+                    a.chunk_energy_j += adm_j / Wb
+                    a.prefix = self._admit_dims(a.req)[0]
+                    if a.t_start == 0.0:
+                        a.t_start = t_adm
             pending = [a for a in adm if a.ready is None]
             rem = [len(a.req.prompt) - a.base for a in pending]
             # shortest-remainder-first bucket: short admissions finish in
@@ -1143,6 +1261,62 @@ class ServingEngine:
         adm: list[_Admission] = []
         alloc = self._allocator
         pool = self._pool
+        pool_keys = set(pool)
+        admit_family = self._admit_fn is not None
+        extra_top_spec: dict = {}
+        extra_kv_spec: dict = {}
+        if admit_family:
+            # admit families carry dense per-request leaves alongside the
+            # page pool (encdec cross-KV + src_len, vlm pos_off): discover
+            # them — and their batch axes — from the dense state spec. A
+            # dense leaf is "extra" iff the pool holds no paged twin.
+            self._ensure_splice()
+            spec1 = jax.eval_shape(lambda: self.model.init_state(
+                self.cfg, 1, self.max_len))
+            extra_top_spec = {k: v for k, v in spec1.items()
+                              if k not in ("kv", "index")}
+            extra_kv_spec = {k: v for k, v in spec1["kv"].items()
+                             if f"{k}_pages" not in pool_keys
+                             and k not in pool_keys}
+
+        def _zero_leaf(spec, axis: int, width: int):
+            shape = list(spec.shape)
+            shape[axis] = width
+            return jnp.zeros(tuple(shape), spec.dtype)
+
+        def zero_extras(width: int) -> tuple[dict, dict]:
+            top = {k: _zero_leaf(v, self._state_axes[k], width)
+                   for k, v in extra_top_spec.items()}
+            kvx = {k: _zero_leaf(v, self._state_axes["kv"][k], width)
+                   for k, v in extra_kv_spec.items()}
+            return top, kvx
+
+        def gather_extras(recs: list, width: int) -> tuple[dict, dict]:
+            """Per-call extra state: concatenate each record's batch-1
+            admission leaves along the leaf's batch axis (zero rows for
+            empty slots). Records are _Admission or _Slot objects. The
+            result feeds a buffer-donating jit, so a width-1 gather must
+            COPY — returning the record's stored leaf would let donation
+            delete it out from under the next step."""
+            rows = list(recs[:width]) + [None] * (width - len(recs[:width]))
+            ztop, zkv = zero_extras(1)
+
+            def cat(parts, axis):
+                if len(parts) == 1:
+                    return jnp.copy(parts[0])
+                return jnp.concatenate(parts, axis=axis)
+
+            top = {}
+            kvx = {}
+            for k in extra_top_spec:
+                parts = [(r.extra_top[k] if r is not None and r.extra_top
+                          else ztop[k]) for r in rows]
+                top[k] = cat(parts, self._state_axes[k])
+            for k in extra_kv_spec:
+                parts = [(r.extra_kv[k] if r is not None and r.extra_kv
+                          else zkv[k]) for r in rows]
+                kvx[k] = cat(parts, self._state_axes["kv"][k])
+            return top, kvx
 
         def dev_table(rows: list[list[int] | None], width: int):
             """(L, width, n_pg) device table from per-row page lists
@@ -1175,12 +1349,21 @@ class ServingEngine:
             """Admit queued requests while the lane has room and the pool
             can cover their full reservation; on exhaustion the request
             waits at the head of the queue for a retirement — unless
-            nothing is in flight to retire, which is a hard failure."""
+            nothing is in flight to retire, which is a hard failure.
+            Admit families run their prefill-once admission call here:
+            the patch prefix writes through the reserved pages (vlm), the
+            cross-KV lands in per-request dense leaves (encdec); prefix
+            reuse is disabled for them — their self-attention KV depends
+            on the modality input, not the token prefix alone."""
+            nonlocal pool
             while self.queue and len(adm) < self.lane_width:
                 req = self.queue[0]
+                prefix, src = self._admit_dims(req)
                 try:
                     a = alloc.admit(np.asarray(req.prompt, np.int32),
-                                    self._budget(req))
+                                    self._budget(req),
+                                    prefix_rows=prefix,
+                                    reuse=not admit_family)
                 except PageCacheFull:
                     if not adm and not any(s is not None for s in slots):
                         raise
@@ -1188,8 +1371,26 @@ class ServingEngine:
                 self.queue.popleft()
                 apply_copies(a.copies)
                 rng = None if self.greedy else self._req_rng(req.uid)
-                adm.append(_Admission(req=req, rng=rng, base=a.base,
-                                      pages=a.pages))
+                rec = _Admission(req=req, rng=rng, base=a.base,
+                                 pages=a.pages, prefix=prefix)
+                if admit_family and (prefix or src):
+                    bucket = self._bucket(max(prefix, src))
+                    packed = self.model.pack_admit(
+                        self.cfg, [req.extras], 1, bucket)
+                    top0, kv0 = zero_extras(1)
+                    st = {"kv": {**pool, "table": dev_table([a.pages], 1),
+                                 **kv0},
+                          "index": jnp.zeros((1,), jnp.int32), **top0}
+                    st = self._admit_fn(self.params, packed, st)
+                    pool = {k: st["kv"][k] for k in pool_keys}
+                    rec.extra_top = {k: st[k] for k in extra_top_spec}
+                    rec.extra_kv = {k: st["kv"][k]
+                                    for k in extra_kv_spec}
+                    adm_j, adm_s, adm_est = self._admit_cost(1, bucket)
+                    self._tick(adm_s, adm_est)
+                    rec.chunk_energy_j += adm_j
+                    rec.t_start = time.perf_counter()
+                adm.append(rec)
 
         def splice_ready() -> None:
             """Move parked admissions into free decode slots — a pure
@@ -1229,19 +1430,27 @@ class ServingEngine:
             base = np.zeros(W, np.int32)
             rows: list[list[int] | None] = [None] * W
             t_disp = time.perf_counter()
+            recs: list[_Admission | None] = [None] * W
             for a in pending:
                 n = min(C, len(a.req.prompt) - a.base)
                 toks[a.row, :n] = a.req.prompt[a.base:a.base + n]
                 lens[a.row] = n
-                base[a.row] = a.base
+                # cache positions sit past the admission prefix (vlm
+                # patch rows occupy [0, prefix) of the row's pages)
+                base[a.row] = a.prefix + a.base
                 rows[a.row] = a.pages
+                recs[a.row] = a
                 if a.t_start == 0.0:
                     a.t_start = t_disp
-            state = {"kv": {**pool, "table": dev_table(rows, W)},
-                     "index": jnp.asarray(base)}
+            extra_top, extra_kv = (gather_extras(recs, W)
+                                   if admit_family else ({}, {}))
+            state = {"kv": {**pool, "table": dev_table(rows, W),
+                            **extra_kv},
+                     "index": jnp.asarray(base), **extra_top}
             logits, state = self._chunk(
                 self.params, jnp.asarray(toks), jnp.asarray(lens), state)
-            pool = {k: v for k, v in state["kv"].items() if k != "table"}
+            pool = {k: v for k, v in state["kv"].items()
+                    if k in pool_keys}
             logits = np.asarray(logits, np.float32)
             now = time.perf_counter()
             est_j, est_s, est = self._chunk_cost(W, C)
@@ -1260,17 +1469,22 @@ class ServingEngine:
                 if a.base < plen:
                     keep.append(a)
                     continue
-                # prompt fully cached: publish its pages to the prefix
-                # registry (may snapshot a partial last page)
-                apply_copies(alloc.register(
-                    np.asarray(a.req.prompt, np.int32), a.pages, a.base))
+                if not admit_family:
+                    # prompt fully cached: publish its pages to the
+                    # prefix registry (may snapshot a partial last page).
+                    # Admit families never register — their KV depends on
+                    # the modality input, so token-prefix reuse is unsound
+                    apply_copies(alloc.register(
+                        np.asarray(a.req.prompt, np.int32), a.pages,
+                        a.base))
                 tok = int(self._sample(logits[a.row:a.row + 1],
                                        [a.rng])[0])
                 srec = _Slot(req=a.req, tokens=[tok],
                              prefill_energy_j=a.chunk_energy_j,
                              t_start=a.t_start, t_first=now,
                              t_first_model=self._clock, rng=a.rng,
-                             pages=a.pages, index=plen)
+                             pages=a.pages, index=a.prefix + plen,
+                             extra_top=a.extra_top, extra_kv=a.extra_kv)
                 if (a.req.eos_id is not None and tok == a.req.eos_id) or (
                         self._budget(a.req) <= 1):
                     self._finish(srec, now, decode_energy_j, results)
@@ -1293,15 +1507,20 @@ class ServingEngine:
             if not any(s is not None for s in slots):
                 return
             self._tick(decode_cost[1], decode_cost[2])
+            extra_top, extra_kv = (gather_extras(slots, B)
+                                   if admit_family else ({}, {}))
             state = {"kv": {**pool,
                             "table": dev_table(
                                 [s.pages if s else None for s in slots],
-                                B)},
+                                B),
+                            **extra_kv},
                      "index": jnp.asarray(np.array(
-                         [s.index if s else 0 for s in slots], np.int32))}
+                         [s.index if s else 0 for s in slots], np.int32)),
+                     **extra_top}
             logits, state = self._decode(
                 self.params, jnp.asarray(token_buf), state)
-            pool = {k: v for k, v in state["kv"].items() if k != "table"}
+            pool = {k: v for k, v in state["kv"].items()
+                    if k in pool_keys}
             logits = np.asarray(logits, np.float32)
             cur = self._sample(
                 logits, [s.rng if s is not None else None for s in slots])
@@ -1413,35 +1632,43 @@ class ServingEngine:
         B = len(batch_reqs)
         lens = np.array([len(r.prompt) for r in batch_reqs], np.int32)
         S = int(lens.max())
-        use_lengths = self.cfg.kind in CONTINUOUS_KINDS
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(batch_reqs):
-            if use_lengths:
-                toks[i, :lens[i]] = r.prompt       # right-pad + lengths
-            else:
-                toks[i, S - lens[i]:] = r.prompt   # legacy left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if use_lengths:
-            batch["lengths"] = jnp.asarray(lens)
+            toks[i, :lens[i]] = r.prompt           # right-pad + lengths
         t0 = time.perf_counter()
-        logits, state = self._prefill(self.params, batch)
-        logits = np.asarray(logits, np.float32)
-        t_first = time.perf_counter()
-        prefill_j, prefill_s, pre_est = self._prefill_cost(B * S,
-                                                           head_rows=B)
+        if self._admit_fn is not None:
+            # admit families: one batched prefill-once admission (all B
+            # rows in a single call against a width-B zero state) + one
+            # full-width chunk over the right-padded prompts — the same
+            # path chunked admission runs, so wave/chunked parity holds
+            # by construction
+            state, adm_j = self._admit_rows(batch_reqs, B)
+            Sb = self._bucket(S)
+            wt = np.zeros((B, Sb), np.int32)
+            wt[:, :S] = toks
+            logits, state = self._chunk(
+                self.params, jnp.asarray(wt), jnp.asarray(lens), state)
+            logits = np.asarray(logits, np.float32)
+            t_first = time.perf_counter()
+            prefill_j, prefill_s, pre_est = self._chunk_cost(B, Sb)
+            prefill_j += adm_j
+        else:
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray(lens)}
+            logits, state = self._prefill(self.params, batch)
+            logits = np.asarray(logits, np.float32)
+            t_first = time.perf_counter()
+            prefill_j, prefill_s, pre_est = self._prefill_cost(
+                B * S, head_rows=B)
         self._tick(prefill_s, pre_est)
         t_first_model = self._clock
         est = self._step_energy(("decode", B), B, batch_rows=B)
         decode_energy_j, decode_step_s, _ = self._cost(est)
 
+        # per-row budgets: the uniform `lengths` bound (each row clamps by
+        # its own prefix + prompt, never by the wave's shared padded
+        # length)
         budgets = np.array([self._budget(r) for r in batch_reqs])
-        if not use_lengths and not self.cfg.attention_free:
-            # left-padded rows share the scalar cache index starting at the
-            # padded length S, so every row's KV room is max_len - S (not
-            # max_len - its own prompt length); without this clamp decode
-            # writes past max_len and dynamic_update_slice silently
-            # corrupts the last cache slot for the whole batch
-            budgets = np.minimum(budgets, self.max_len - S)
         out: list[list[int]] = [[] for _ in range(B)]
         done = np.zeros(B, bool)
         steps = 0

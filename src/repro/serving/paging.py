@@ -211,7 +211,8 @@ class PageAllocator:
     # ------------------------------------------------------------------
     # engine-facing operations
     # ------------------------------------------------------------------
-    def admit(self, prompt: np.ndarray, budget: int) -> Admission:
+    def admit(self, prompt: np.ndarray, budget: int, *,
+              prefix_rows: int = 0, reuse: bool = True) -> Admission:
         """Reserve a request's full page capacity (prompt + ``budget``
         generated tokens), reusing registered shared-prefix pages.
 
@@ -222,10 +223,20 @@ class PageAllocator:
         copy-on-write; ``copies`` lists the device page copies to apply.
         Raises `PageCacheFull` with no state change when the pool cannot
         cover the reservation.
+
+        ``prefix_rows`` reserves extra leading cache rows written by an
+        admission hook ahead of the prompt (e.g. a VLM patch prefix);
+        ``reuse=False`` skips prefix matching entirely — admit-family rows
+        carry modality-dependent cache content, so token-keyed sharing
+        would be unsound (``base`` stays 0).
         """
         T = self.page_size
         plen = len(prompt)
-        n_total = max(1, math.ceil((plen + max(budget, 1)) / T))
+        n_total = max(1, math.ceil(
+            (int(prefix_rows) + plen + max(budget, 1)) / T))
+        if not reuse:
+            owned = self.alloc(n_total)
+            return Admission(pages=owned, base=0, copies=[])
         shared, covered = self.match(prompt)
         base = min(covered, plen - 1)
         # the page holding position `base` gets written -> must be owned

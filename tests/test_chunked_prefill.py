@@ -36,9 +36,33 @@ FAMILY_KW = {
                    ssm_headdim=16, ssm_ngroups=1),
     "hybrid": dict(d_ff=128, ssm_state=8, expand=2, d_conv=4,
                    ssm_headdim=16, ssm_ngroups=1, attn_every=2),
+    "encdec": dict(d_ff=128, n_encoder_layers=2, gated_mlp=False),
+    "vlm": dict(d_ff=128, qkv_bias=True, mrope=True,
+                mrope_sections=(4, 2, 2)),
 }
 
 FAMILIES = sorted(FAMILY_KW)
+
+
+def family_extras(kind: str, cfg: ModelConfig, uid: int) -> dict | None:
+    """Per-request admission extras: encdec always carries a source
+    embedding (lengths straddle the bucket grid), vlm mixes image
+    requests with one text-only request (uid 2) that must serve exactly
+    like a dense LM."""
+    if kind == "encdec":
+        rng = np.random.default_rng(1000 + uid)
+        t = 6 + 3 * (uid % 3)
+        return {"src_embeds": rng.standard_normal(
+            (t, cfg.d_model)).astype(np.float32)}
+    if kind == "vlm":
+        grid = {0: (4, 4), 1: (2, 3), 2: None, 3: (3, 2)}[uid % 4]
+        if grid is None:
+            return None
+        gh, gw = grid
+        rng = np.random.default_rng(2000 + uid)
+        return {"patch_embeds": rng.standard_normal(
+            (gh * gw, cfg.d_model)).astype(np.float32), "grid_hw": grid}
+    return None
 
 
 @pytest.fixture(scope="module")
@@ -62,7 +86,8 @@ def serve(served, kind, reqs, *, mode="continuous", admission="chunked",
                         max_len=max_len, mode=mode, admission=admission,
                         chunk_tokens=chunk_tokens, **ekw)
     for uid, p, mnt in reqs:
-        eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=mnt))
+        eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=mnt,
+                           extras=family_extras(kind, cfg, uid)))
     return eng, {r.uid: r for r in eng.run_until_empty()}
 
 
@@ -100,7 +125,8 @@ class TestChunkedParity:
         for uid, _, _ in reqs:
             np.testing.assert_array_equal(rc[uid].tokens, rw[uid].tokens)
 
-    @pytest.mark.parametrize("kind", ["dense", "mamba2", "hybrid"])
+    @pytest.mark.parametrize("kind", ["dense", "mamba2", "hybrid",
+                                      "encdec", "vlm"])
     def test_chunk_size_invariance(self, served, kind):
         """The stream must not depend on the chunking grid (8 vs 16 vs
         whole-prompt chunks)."""
@@ -237,6 +263,110 @@ class TestChunkedParity:
         assert rc[0].n_tokens == 4
         _, rw = serve(served, "mamba1", reqs, mode="wave", max_len=32)
         np.testing.assert_array_equal(rc[0].tokens, rw[0].tokens)
+
+
+# ---------------------------------------------------------------------------
+# prefill-once admission families (encdec source encoding, vlm patches)
+# ---------------------------------------------------------------------------
+
+
+class TestAdmitFamilies:
+    def test_encdec_prefill_once_cross_kv_carry(self, served):
+        """The cross-KV computed ONCE at admission is carried bit-exactly
+        through chunked decoder prefill: admit + chunks reproduces the
+        single-shot `encdec_prefill` state leaf for leaf."""
+        cfg, model, params = served["encdec"]
+        p = prompt(42, 21, cfg.vocab)
+        ex = family_extras("encdec", cfg, 0)
+        T, n, max_len, bucket = ex["src_embeds"].shape[0], len(p), 64, 16
+        toks = np.zeros((1, 32), np.int32)
+        toks[0, :n] = p
+        src = np.zeros((1, bucket, cfg.d_model), np.float32)
+        src[0, :T] = ex["src_embeds"]
+        _, ref = model.prefill(
+            params, {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray([n], np.int32),
+                     "src_embeds": jnp.asarray(src),
+                     "src_lens": jnp.asarray([T], np.int32)},
+            cfg, max_len=max_len)
+        st = model.init_state(cfg, 1, max_len)
+        st = model.admit(params, model.pack_admit(cfg, [ex], 1, bucket),
+                         st, cfg)
+        for lo in range(0, n, 8):
+            ln = min(8, n - lo)
+            ch = np.zeros((1, 8), np.int32)
+            ch[0, :ln] = p[lo:lo + ln]
+            _, st = model.prefill_chunk(
+                params, jnp.asarray(ch), jnp.asarray([ln], np.int32),
+                st, cfg)
+        np.testing.assert_array_equal(np.asarray(st["index"]),
+                                      np.asarray(ref["index"]))
+        np.testing.assert_array_equal(np.asarray(st["src_len"]),
+                                      np.asarray(ref["src_len"]))
+        for k in ("xk", "xv"):
+            np.testing.assert_array_equal(np.asarray(st["kv"][k]),
+                                          np.asarray(ref["kv"][k]))
+        # decoder self-attn KV: compare the written region (pad tails
+        # past each chunk grid's bucket differ by construction)
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(st["kv"][k][:, :, :n]),
+                                          np.asarray(ref["kv"][k][:, :, :n]))
+
+    def test_vlm_patch_prefix_carry(self, served):
+        """The patch prefix lands in cache rows [0, P) at admission and
+        the chunked text tail starts at index = P with mRoPE positions
+        resuming mid-sequence — matching single-shot `vlm_prefill`."""
+        from repro.models.vlm import build_mrope_positions
+
+        cfg, model, params = served["vlm"]
+        p = prompt(43, 11, cfg.vocab)
+        ex = family_extras("vlm", cfg, 0)
+        P = ex["patch_embeds"].shape[0]
+        n, max_len = len(p), 64
+        pos = build_mrope_positions(P, ex["grid_hw"], n)
+        _, ref = model.prefill(
+            params, {"tokens": jnp.asarray(p[None]),
+                     "patch_embeds": jnp.asarray(ex["patch_embeds"][None]),
+                     "positions_3d": jnp.asarray(pos[None])},
+            cfg, max_len=max_len)
+        st = model.init_state(cfg, 1, max_len)
+        st = model.admit(params, model.pack_admit(cfg, [ex], 1, P),
+                         st, cfg)
+        assert int(np.asarray(st["index"])[0]) == P
+        for lo in range(0, n, 8):
+            ln = min(8, n - lo)
+            ch = np.zeros((1, 8), np.int32)
+            ch[0, :ln] = p[lo:lo + ln]
+            logits, st = model.prefill_chunk(
+                params, jnp.asarray(ch), jnp.asarray([ln], np.int32),
+                st, cfg)
+        np.testing.assert_array_equal(np.asarray(st["pos_off"]),
+                                      np.asarray(ref["pos_off"]))
+        S = P + n
+        for k in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(st["kv"][k][:, :, :S]),
+                np.asarray(ref["kv"][k][:, :, :S]))
+
+    def test_encdec_requires_src_embeds(self, served):
+        cfg, model, params = served["encdec"]
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64)
+        with pytest.raises(ValueError, match="src_embeds"):
+            eng.submit(Request(uid=0, prompt=prompt(0, 5),
+                               max_new_tokens=2))
+
+    def test_source_longer_than_max_len_rejected(self, served):
+        """The uniform per-row bound covers the source side too: a
+        source that cannot fit the cross-KV capacity is rejected at
+        submit, not silently truncated."""
+        cfg, model, params = served["encdec"]
+        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=32)
+        rng = np.random.default_rng(0)
+        big = {"src_embeds": rng.standard_normal(
+            (40, cfg.d_model)).astype(np.float32)}
+        with pytest.raises(ValueError):
+            eng.submit(Request(uid=0, prompt=prompt(0, 5),
+                               max_new_tokens=2, extras=big))
 
 
 # ---------------------------------------------------------------------------

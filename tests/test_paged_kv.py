@@ -30,8 +30,29 @@ def tiny_cfg(**kw) -> ModelConfig:
     if kw.get("kind") == "mla_moe":
         base.update(n_experts=4, top_k=2, d_ff_expert=64,
                     capacity_factor=2.0, kv_lora_rank=16, rope_head_dim=8)
+    if kw.get("kind") == "encdec":
+        base.update(n_encoder_layers=2, gated_mlp=False)
+    if kw.get("kind") == "vlm":
+        base.update(qkv_bias=True, mrope=True, mrope_sections=(4, 2, 2))
     base.update(kw)
     return ModelConfig(**base)
+
+
+def _extras(cfg: ModelConfig | None, uid: int) -> dict | None:
+    """Admission extras for the modality families (None otherwise)."""
+    if cfg is None or cfg.kind not in ("encdec", "vlm"):
+        return None
+    rng = np.random.default_rng(500 + uid)
+    if cfg.kind == "encdec":
+        t = 5 + 2 * (uid % 3)
+        return {"src_embeds": rng.standard_normal(
+            (t, cfg.d_model)).astype(np.float32)}
+    grid = [(4, 4), (2, 3), None][uid % 3]
+    if grid is None:
+        return None
+    gh, gw = grid
+    return {"patch_embeds": rng.standard_normal(
+        (gh * gw, cfg.d_model)).astype(np.float32), "grid_hw": grid}
 
 
 def prompt(seed: int, n: int, vocab: int = 97) -> np.ndarray:
@@ -230,7 +251,7 @@ class TestPagedPrimitives:
 # ---------------------------------------------------------------------------
 
 
-def _mkreqs(vocab=97):
+def _mkreqs(vocab=97, cfg: ModelConfig | None = None):
     rng = np.random.default_rng(42)
     shared = rng.integers(0, vocab, 20)
     out = []
@@ -240,7 +261,7 @@ def _mkreqs(vocab=97):
         else:
             p = rng.integers(0, vocab, 10 + i)
         out.append(Request(uid=i, prompt=p.astype(np.int32),
-                           max_new_tokens=6))
+                           max_new_tokens=6, extras=_extras(cfg, i)))
     return out
 
 
@@ -255,17 +276,26 @@ def _serve(cfg, reqs, **kw):
 
 
 class TestPagedEngine:
-    @pytest.mark.parametrize("kind", ["dense", "moe", "mla_moe"])
+    @pytest.mark.parametrize("kind", ["dense", "moe", "mla_moe",
+                                      "encdec", "vlm"])
     def test_bit_parity_with_dense_layout(self, kind):
         """Token streams are bit-identical between the dense and paged
-        layouts for every paged family (SSM exempt by construction)."""
+        layouts for every paged family (SSM exempt by construction).
+        Admit families page only decoder self-attention KV — the
+        admission leaves (cross-KV, src_len, pos_off) stay dense — and
+        opt out of the token-keyed prefix registry (their cache rows
+        depend on modality input, so sharing would be unsound): despite
+        the shared 20-token prompt prefix, no prefix hit may fire."""
         cfg = tiny_cfg(kind=kind)
-        dense, _ = _serve(cfg, _mkreqs())
-        paged, eng = _serve(cfg, _mkreqs(), kv_layout="paged", page_size=8)
+        dense, _ = _serve(cfg, _mkreqs(cfg=cfg))
+        paged, eng = _serve(cfg, _mkreqs(cfg=cfg), kv_layout="paged",
+                            page_size=8)
         assert dense == paged
         rep = eng.report()
         assert rep["paging"]["pages_in_use"] >= 0
         assert rep["paging"]["peak_in_use"] > 0
+        if kind in ("encdec", "vlm"):
+            assert rep["paging"]["prefix_hits"] == 0
 
     def test_prefix_reuse_skips_prefill_and_keeps_parity(self):
         """A later request sharing a completed request's prefix maps the

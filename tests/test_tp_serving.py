@@ -56,7 +56,11 @@ _PRELUDE = """
                        ssm_headdim=16, ssm_ngroups=1),
         "hybrid": dict(d_ff=128, ssm_state=8, expand=2, d_conv=4,
                        ssm_headdim=16, ssm_ngroups=1, attn_every=2),
+        "encdec": dict(d_ff=128, n_encoder_layers=2, gated_mlp=False),
+        "vlm": dict(d_ff=128, qkv_bias=True, mrope=True,
+                    mrope_sections=(4, 2, 2)),
     }
+    LM_FAMILIES = ("dense", "hybrid", "mamba1", "mamba2", "mla_moe", "moe")
 
     def build(kind, **over):
         kw = dict(BASE, kind=kind, **FAMILY_KW[kind])
@@ -66,12 +70,29 @@ _PRELUDE = """
         params = model.init(jax.random.key(0), cfg)
         return cfg, model, params
 
-    def reqs(vocab, specs):
+    def extras(cfg, uid):
+        rng = np.random.default_rng(900 + uid)
+        if cfg.kind == "encdec":
+            t = 5 + 2 * (uid % 3)
+            return {"src_embeds": rng.standard_normal(
+                (t, cfg.d_model)).astype(np.float32)}
+        if cfg.kind == "vlm":
+            grid = [(4, 4), (2, 3), None][uid % 3]
+            if grid is None:
+                return None
+            gh, gw = grid
+            return {"patch_embeds": rng.standard_normal(
+                (gh * gw, cfg.d_model)).astype(np.float32),
+                "grid_hw": grid}
+        return None
+
+    def reqs(cfg, specs):
         out = []
         for uid, (seed, n, mnt) in enumerate(specs):
             p = np.random.default_rng(seed).integers(
-                0, vocab, n).astype(np.int32)
-            out.append(Request(uid=uid, prompt=p, max_new_tokens=mnt))
+                0, cfg.vocab, n).astype(np.int32)
+            out.append(Request(uid=uid, prompt=p, max_new_tokens=mnt,
+                               extras=extras(cfg, uid)))
         return out
 
     SPECS = [(0, 11, 10), (1, 7, 8), (2, 19, 6), (3, 5, 12), (4, 13, 4)]
@@ -79,7 +100,7 @@ _PRELUDE = """
     def serve(cfg, model, params, tp, **kw):
         eng = ServingEngine(model, params, cfg, max_batch=2, max_len=64,
                             tp=tp, **kw)
-        for r in reqs(cfg.vocab, SPECS):
+        for r in reqs(cfg, SPECS):
             eng.submit(r)
         res = {r.uid: r.tokens.tolist() for r in eng.run_until_empty()}
         return eng, res, eng.report()
@@ -91,7 +112,7 @@ class TestTpBitParity:
         """Every continuously-served family: tp=2 greedy streams ==
         tp=1, with nonzero wire time and overlap telemetry at tp=2."""
         stdout = _run_sub("""
-            for kind in sorted(FAMILY_KW):
+            for kind in LM_FAMILIES:
                 _, r1, _ = serve(*build(kind), tp=1)
                 _, r2, rep = serve(*build(kind), tp=2)
                 assert r1 == r2, (kind, r1, r2)
@@ -105,6 +126,25 @@ class TestTpBitParity:
         assert "OK" in stdout
         for kind in ("dense", "moe", "mla_moe", "mamba1", "mamba2",
                      "hybrid"):
+            assert f"PARITY {kind}" in stdout
+
+    def test_admit_families_tp2_streams_identical(self):
+        """encdec and vlm under tp=2: the admission pass (encoder +
+        cross-KV projection, patch prefix) runs through the gather-mode
+        sharded params, and greedy streams stay bit-identical to tp=1.
+        Cross-KV and patch admission use tp_column/tp_row, so the tp=2
+        contraction order matches tp=1 exactly."""
+        stdout = _run_sub("""
+            for kind in ("encdec", "vlm"):
+                _, r1, _ = serve(*build(kind), tp=1)
+                _, r2, rep = serve(*build(kind), tp=2)
+                assert r1 == r2, (kind, r1, r2)
+                assert rep["collective_wire_s"] > 0.0, kind
+                print("PARITY", kind)
+            print("OK")
+        """)
+        assert "OK" in stdout
+        for kind in ("encdec", "vlm"):
             assert f"PARITY {kind}" in stdout
 
     def test_dense_tp4_streams_identical(self):
@@ -159,7 +199,7 @@ class TestTpPagedKv:
             held1 = int((alloc.refs > 0).sum())
             # second drain over the same prompts: prefix registry may
             # hold pages, but repeated serving must not accumulate refs
-            for r in reqs(eng.cfg.vocab, SPECS):
+            for r in reqs(eng.cfg, SPECS):
                 r.uid += 100
                 eng.submit(r)
             r_again = {r.uid - 100: r.tokens.tolist()
