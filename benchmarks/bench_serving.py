@@ -40,11 +40,20 @@ baseline at equal streams; smoke gates pin interactive SLO attainment
 A second scenario routes an encdec fleet (admission extras through the
 scheduler) and asserts placement never changes tokens.
 
+``--chaos`` replays the fleet mix under a deterministic fault plan
+(one stall caught by the straggler detector, one state-preserved crash
+whose in-flight requests migrate, plus a predictor-artifact-corruption
+scenario that degrades tuning to BASELINE configs); smoke gates pin
+interactive attainment under faults (``CHAOS_SLO_ATTAIN_MIN``), zero
+lost requests, the faulted-vs-healthy J/token ratio
+(``CHAOS_JTOK_RATIO_MAX``), and bit-identical streams, dumping
+artifacts/bench/serving_chaos.json (the plan and seed included).
+
 ``--seed N`` re-seeds every workload generator and is recorded in each
 JSON payload, so an artifact diff across seeds is a one-flag experiment.
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
-      [--seed N] [--fleet | --tp N | --grain]
+      [--seed N] [--fleet | --chaos | --tp N | --grain]
 """
 
 from __future__ import annotations
@@ -703,6 +712,152 @@ def run_fleet(smoke: bool, seed: int) -> tuple[list[dict], dict]:
     return rows, payload
 
 
+# ---- chaos smoke: --chaos ----
+# deterministic fault schedule on the fleet model clock: one stall (the
+# detector-and-evict path) and one state-preserved crash (the migration
+# path), both pinned to fractions of the measured no-fault makespan.
+# gates: interactive SLO attainment under faults, zero requests lost,
+# fleet J/token within a bounded factor of the no-fault run, and token
+# streams bit-identical to the no-fault run (migration preserves state;
+# replay re-derives the same greedy stream).
+CHAOS_SLO_ATTAIN_MIN = float(os.environ.get("CHAOS_SLO_ATTAIN_MIN", "0.90"))
+CHAOS_JTOK_RATIO_MAX = float(os.environ.get("CHAOS_JTOK_RATIO_MAX", "1.3"))
+CHAOS_STALL_FACTOR = float(os.environ.get("CHAOS_STALL_FACTOR", "8.0"))
+
+
+def _serve_chaos(cfg, model, params, seed: int, n_long: int, n_short: int,
+                 plan=None):
+    """One warmed + timed fleet pass with an optional `FaultPlan` armed
+    *after* the warm-up reset, so event times land on the measured run's
+    clock. Interactive requests use a defer (not shed) overload policy:
+    faults may stretch latency but must never drop work — the zero-lost
+    gate depends on it."""
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.scheduler import FleetScheduler, SLAClass
+
+    engines = {
+        name: ServingEngine(model, params, cfg, max_batch=FLEET_MAX_BATCH,
+                            max_len=FLEET_MAX_LEN, mode="continuous",
+                            admission="chunked", chunk_tokens=FLEET_CHUNK,
+                            chip=chip)
+        for name, chip in FLEET_CHIPS.items()}
+    sched = FleetScheduler(
+        engines,
+        sla={"interactive": SLAClass("interactive", FLEET_TTFT_SLO_S,
+                                     policy="defer", defer_s=0.01,
+                                     max_defers=2),
+             "batch": SLAClass("batch", None)})
+    for pass_uid0 in (100_000, 0):      # warm-up, then the timed pass
+        for uid, prompt, mnt, sla in _fleet_workload(cfg, n_long,
+                                                     n_short, seed):
+            sched.submit(Request(uid=pass_uid0 + uid, prompt=prompt,
+                                 max_new_tokens=mnt), sla=sla)
+        if pass_uid0:
+            sched.run_until_empty()
+            sched.reset_stats()
+    sched.arm_faults(plan)
+    t0 = time.perf_counter()
+    results = sched.run_until_empty()
+    rep = sched.report()
+    rep["wall_s"] = time.perf_counter() - t0
+    return results, rep, sched
+
+
+def run_chaos(smoke: bool, seed: int) -> tuple[list[dict], dict]:
+    """Chaos smoke: the fleet mix served healthy, then under a seeded
+    1-stall + 1-crash plan, then under mid-run predictor-artifact
+    corruption. Faults may move work and stretch latency but must never
+    lose a request or change a token."""
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    cfg, model, params = _build(smoke)
+    n_long, n_short = (2, 8) if smoke else (4, 16)
+    n_reqs = n_long + n_short
+
+    base_out, base_rep, _ = _serve_chaos(cfg, model, params, seed,
+                                         n_long, n_short)
+    horizon = base_rep["makespan_model_s"]
+    ref = {r.uid: np.asarray(r.tokens) for r in base_out}
+
+    def _check(results, rep, label):
+        if len(results) != n_reqs:
+            raise AssertionError(
+                f"{label}: {n_reqs - len(results)} request(s) lost "
+                f"({len(results)}/{n_reqs} completed)")
+        for r in results:
+            if not np.array_equal(np.asarray(r.tokens), ref[r.uid]):
+                raise AssertionError(
+                    f"{label}: stream mismatch for request {r.uid} — "
+                    f"faults changed tokens")
+        assert rep["requests"] == n_reqs
+
+    # stall early (straggler-detector eviction path), then crash the
+    # other member with device state intact (migration path) once the
+    # stalled one is back to absorb its in-flight work
+    plan = FaultPlan([
+        FaultEvent(0.15 * horizon, "stall", "ada",
+                   factor=CHAOS_STALL_FACTOR, duration_s=0.25 * horizon),
+        FaultEvent(0.55 * horizon, "crash", "v5e", state_lost=False),
+    ], seed=seed)
+    chaos_out, chaos_rep, _ = _serve_chaos(cfg, model, params, seed,
+                                           n_long, n_short, plan=plan)
+    _check(chaos_out, chaos_rep, "chaos")
+    if chaos_rep["faults"]["crashes"] != 1:
+        raise AssertionError("chaos plan's crash event did not fire")
+
+    # separate scenario: predictor-artifact corruption mid-run must
+    # degrade tuning to BASELINE configs and keep serving — flagged,
+    # streams untouched
+    corrupt = FaultPlan([
+        FaultEvent(0.3 * horizon, "artifact_corruption", "v5e"),
+    ], seed=seed)
+    deg_out, deg_rep, _ = _serve_chaos(cfg, model, params, seed,
+                                       n_long, n_short, plan=corrupt)
+    _check(deg_out, deg_rep, "degraded")
+    if deg_rep["faults"]["degraded_members"] != ["v5e"]:
+        raise AssertionError(
+            "artifact corruption did not flag the member as degraded: "
+            f"{deg_rep['faults']['degraded_members']}")
+
+    base_jtok = base_rep["fleet_j_per_token"]
+    jtok_ratio = (chaos_rep["fleet_j_per_token"] / base_jtok
+                  if base_jtok > 0 else 0.0)
+    f = chaos_rep["faults"]
+    payload = {
+        "seed": seed,
+        "n_requests": n_reqs,
+        "n_long": n_long,
+        "chips": dict(FLEET_CHIPS),
+        "ttft_slo_model_s": FLEET_TTFT_SLO_S,
+        "stall_factor": CHAOS_STALL_FACTOR,
+        "plan": f["plan"],
+        "no_fault": base_rep,
+        "chaos": chaos_rep,
+        "degraded": deg_rep,
+        "attainment": chaos_rep["attainment"],
+        "jtok_ratio_chaos_vs_no_fault": jtok_ratio,
+        "requests_lost": n_reqs - len(chaos_out),
+        "chaos_attain_gate_min": CHAOS_SLO_ATTAIN_MIN,
+        "chaos_jtok_gate_max_ratio": CHAOS_JTOK_RATIO_MAX,
+    }
+    dump("serving_chaos", payload)
+    rows = [
+        row("serve_chaos", chaos_rep["wall_s"] * 1e6,
+            f"crashes={f['crashes']} evictions={f['evictions']} "
+            f"stalls={f['stalls']} migrations={f['migrations']} "
+            f"replays={f['replays']} "
+            f"lost_J={f['lost_energy_j']:.2e} "
+            f"attainment={chaos_rep['attainment']:.3f} "
+            f"(gate >= {CHAOS_SLO_ATTAIN_MIN}) "
+            f"J/tok=x{jtok_ratio:.3f} vs no-fault "
+            f"(gate <= {CHAOS_JTOK_RATIO_MAX})"),
+        row("serve_chaos_degraded", deg_rep["wall_s"] * 1e6,
+            f"degraded={deg_rep['faults']['degraded_members']} "
+            f"streams bit-identical to healthy run"),
+    ]
+    return rows, payload
+
+
 # ---- SSM serve-grain sweep: --grain ----
 GRAINS = (8, 32, 64)
 GRAIN_PROMPT_LEN = 448
@@ -923,6 +1078,39 @@ def main(argv: list[str]) -> int:
               f"attainment {fp['attainment']:.3f} >= "
               f"{FLEET_SLO_ATTAIN_MIN}, J/tok x{jr:.3f} vs best single "
               f"engine [{fp['best_baseline']}] <= {FLEET_JTOK_RATIO_MAX}")
+    if "--chaos" in argv:
+        special = True
+        c_rows, cp = run_chaos(smoke, seed)
+        for r in c_rows:
+            print(f"{r['name']}: {r['derived']}")
+        if cp["no_fault"]["fleet_j_per_token"] <= 0.0:
+            print("CHAOS GATE FAILED: no-fault fleet J/token is 0 "
+                  "(energy model unavailable?) — gate cannot assess")
+            return 1
+        if cp["requests_lost"] != 0:
+            print(f"CHAOS GATE FAILED: {cp['requests_lost']} request(s) "
+                  f"lost under the fault plan")
+            return 1
+        if cp["attainment"] < CHAOS_SLO_ATTAIN_MIN:
+            print(f"CHAOS GATE FAILED: interactive SLO attainment "
+                  f"{cp['attainment']:.3f} < {CHAOS_SLO_ATTAIN_MIN} "
+                  f"under 1 crash + 1 stall")
+            return 1
+        jr = cp["jtok_ratio_chaos_vs_no_fault"]
+        if jr > CHAOS_JTOK_RATIO_MAX:
+            print(f"CHAOS GATE FAILED: fleet J/token under faults is "
+                  f"x{jr:.3f} of the no-fault run > "
+                  f"{CHAOS_JTOK_RATIO_MAX}")
+            return 1
+        if cp["degraded"]["faults"]["degraded_members"] != ["v5e"]:
+            print("CHAOS GATE FAILED: artifact corruption did not flag "
+                  "the degraded member")
+            return 1
+        print(f"chaos gates ok (seed {cp['seed']}): streams "
+              f"bit-identical to the no-fault run, 0 requests lost, "
+              f"attainment {cp['attainment']:.3f} >= "
+              f"{CHAOS_SLO_ATTAIN_MIN}, J/tok x{jr:.3f} <= "
+              f"{CHAOS_JTOK_RATIO_MAX}, BASELINE downgrade flagged")
     if "--tp" in argv:
         tp = int(argv[argv.index("--tp") + 1])
         _ensure_devices(tp)

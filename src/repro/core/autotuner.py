@@ -62,6 +62,16 @@ BASELINE = BlockConfig(128, 128, 128)  # untuned default (paper's baseline)
 _CACHE_FILE_VERSION = 1
 
 
+def baseline_configs(shapes) -> dict[tuple, BlockConfig]:
+    """Map every (m, n, k) shape to the paper's BASELINE block config —
+    the degraded-mode tuning table the serving engine installs when a
+    predictor artifact is corrupt (`ServingEngine.retune`): pricing and
+    scheduling keep working on the untuned baseline instead of raising
+    mid-serve, and the fallback is explicit in reports rather than an
+    absent-config default."""
+    return {tuple(int(x) for x in s): BASELINE for s in shapes}
+
+
 def _roundup(x: int, q: int) -> int:
     return max(q, math.ceil(x / q) * q)
 

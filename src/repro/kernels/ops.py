@@ -63,7 +63,8 @@ def _tuned_config(m: int, n: int, k: int, dtype: str,
 def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
                     objective: str = "runtime",
                     chip: str | None = None,
-                    rank_mode: str = "auto") -> dict[tuple, BlockConfig]:
+                    rank_mode: str = "auto",
+                    strict: bool = False) -> dict[tuple, BlockConfig]:
     """Pre-tune a fleet of (m, n, k) GEMM shapes in one batched
     `tune_many` pass and prime the trace-time config cache, so the first
     jit trace of a model pays zero per-shape tuning latency.
@@ -79,6 +80,12 @@ def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
     "trace" force one). Returns {shape: BlockConfig}; on any tuner
     failure (e.g. no artifacts and no substrate) returns {} and traces
     fall back to DEFAULT_CONFIG exactly like the untuned path.
+
+    ``strict=True`` re-raises tuner failures instead of degrading
+    silently — the serving engine's mid-run `retune` needs to *observe*
+    a corrupt predictor artifact (`core.predictor.ArtifactError`) so it
+    can flag degraded-mode tuning rather than quietly pricing on
+    defaults.
     """
     shapes = [tuple(int(x) for x in s) for s in shapes]
     # validate eagerly: a rank_mode typo must stay loud, not vanish into
@@ -94,6 +101,8 @@ def warm_gemm_cache(shapes, *, dtype: str = "bfloat16",
         best = get_tuner(chip=chip_name).tune_many(
             shapes, dtype=dtype, objective=objective, rank_mode=rank_mode)
     except Exception:
+        if strict:
+            raise
         return {}
     for m, n, k in shapes:
         # the tuner cache is hot now, so this just fills the lru wrapper

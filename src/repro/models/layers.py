@@ -561,6 +561,21 @@ def insert_slot_state(batch_state, slot_state, axes, slot: jax.Array):
     return jax.tree.map(insert, batch_state, slot_state, axes)
 
 
+def state_structures_match(a, b) -> bool:
+    """True when two decode-state pytrees (or their ShapeDtypeStructs)
+    share treedef, per-leaf shapes, and dtypes — the structural gate for
+    splicing a checkpointed batch-1 slot row into another engine's state
+    (`ServingEngine.adopt`): a tp or family mismatch shows up here as a
+    shape/treedef difference before any device op runs."""
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    return all(tuple(x.shape) == tuple(y.shape)
+               and jnp.dtype(x.dtype) == jnp.dtype(y.dtype)
+               for x, y in zip(la, lb))
+
+
 # ---------------- losses ----------------
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,

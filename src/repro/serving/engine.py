@@ -74,6 +74,12 @@ class Request:
     submit_s: float = 0.0       # stamped by ServingEngine.submit
     submit_model_s: float = 0.0  # engine model-clock at submission
     sla: str | None = None      # SLA-class name (FleetScheduler telemetry)
+    # tokens a failed attempt already emitted (fault recovery): the
+    # request prefills over prompt + replay[:-1] and decodes from the
+    # last emitted token, so the client-visible stream stays an
+    # append-only continuation and the final Result carries the full
+    # stream exactly once. Chunked-admission path only.
+    replay: list[int] | None = None
     # modality inputs consumed by the family's prefill-once admission:
     # encdec {"src_embeds": (T, d)}, vlm {"patch_embeds": (P, d),
     # "grid_hw": (gh, gw)}; None for text-only requests
@@ -136,6 +142,31 @@ class _Admission:
     prefix: int = 0             # admission-prefix cache rows (vlm patches)
     extra_top: dict | None = None   # paged admit families (see _Slot)
     extra_kv: dict | None = None
+    # effective prefill token sequence: the prompt, extended by the
+    # already-emitted replay prefix for fault-recovery requests (the
+    # last replay token is decoded, not prefilled)
+    eff: np.ndarray | None = None
+
+
+class _LiveState:
+    """The chunked stepper's cross-yield mutable state, held on the
+    engine (not in generator locals) so `checkpoint_inflight` can
+    surgically extract in-flight rows when the fleet scheduler declares
+    this member crashed or evicted."""
+
+    __slots__ = ("slots", "batch_state", "token_buf", "adm", "adm_state",
+                 "adm_w", "lane_free", "lane_dirty", "zero_src")
+
+    def __init__(self, max_batch: int):
+        self.slots: list[_Slot | None] = [None] * max_batch
+        self.batch_state = None
+        self.token_buf = np.zeros(max_batch, np.int32)
+        self.adm: list[_Admission] = []
+        self.adm_state = None
+        self.adm_w = 0
+        self.lane_free: list[int] = []
+        self.lane_dirty: set[int] = set()
+        self.zero_src = None
 
 
 # families whose cache the paged layout supports: per-token KV (or MLA
@@ -376,8 +407,15 @@ class ServingEngine:
         # snapshot refreshed after every step (routing reads it).
         self.chunk_policy = None
         self._stepper = None
+        self._live: _LiveState | None = None
         self._lane_view = {"pending": 0, "pending_tokens": 0,
                            "parked": 0, "resident": 0, "in_flight": 0}
+        # fault recovery: decode-state rows checkpointed off a failed
+        # fleet member, waiting for a free decode slot here (`adopt`);
+        # degraded-mode tuning flag set by `retune` on ArtifactError
+        self._adopted: deque[dict] = deque()
+        self.tuning_degraded = False
+        self._degraded_reason: str | None = None
         # engine-level counters (reset per run_* call family, reported
         # cumulatively)
         self._stats = {
@@ -392,6 +430,11 @@ class ServingEngine:
             # width growths only)
             "model_s": 0.0, "wire_s": 0.0, "hidden_wire_s": 0.0,
             "lane_rebuilds": 0,
+            # fault-recovery ledger: energy a failed attempt spent on
+            # work that had to be replayed (charged here, to the failed
+            # member, never to the request's final Result) and rows this
+            # engine adopted from a failed member
+            "lost_energy_j": 0.0, "adopted_in": 0,
         }
 
     # ------------------------------------------------------------------
@@ -441,10 +484,12 @@ class ServingEngine:
 
     @property
     def has_work(self) -> bool:
-        """True while the engine holds queued or in-flight requests. May
-        stay True for one extra `serve_step()` after the last retirement
-        (the step that observes the drained loop returns `[]`)."""
-        return bool(self.queue) or self._stepper is not None
+        """True while the engine holds queued or in-flight requests
+        (adopted rows included). May stay True for one extra
+        `serve_step()` after the last retirement (the step that observes
+        the drained loop returns `[]`)."""
+        return (bool(self.queue) or bool(self._adopted)
+                or self._stepper is not None)
 
     @property
     def lane_view(self) -> dict:
@@ -812,6 +857,9 @@ class ServingEngine:
         chunk — the exact path chunked admission takes, so serial/chunked
         parity holds by construction. Returns (first_token, slot_state,
         prefill_energy_j)."""
+        if req.replay:
+            raise ValueError(
+                "replay requests require chunked admission (serve_step)")
         n = len(req.prompt)
         bucket = self._bucket(n)
         toks = np.zeros((1, bucket), np.int32)
@@ -939,7 +987,7 @@ class ServingEngine:
         drive to exhaustion."""
         self._activate()
         if self._stepper is None:
-            if not self.queue:
+            if not self.queue and not self._adopted:
                 return []
             if (self.mode == "wave" or self.admission != "chunked"
                     or self.kv_layout != "dense"
@@ -955,6 +1003,7 @@ class ServingEngine:
             return next(self._stepper)
         except StopIteration:
             self._stepper = None
+            self._live = None
             self._lane_view = dict.fromkeys(self._lane_view, 0)
             return []
 
@@ -966,60 +1015,86 @@ class ServingEngine:
         slots all drain."""
         B = self.max_batch
         results: list[Result] = []
-        slots: list[_Slot | None] = [None] * B
-        batch_state = None
-        token_buf = np.zeros(B, np.int32)
+        # cross-yield mutable state lives on the engine (`_LiveState`)
+        # so `checkpoint_inflight` can extract in-flight rows when the
+        # fleet scheduler declares this member crashed or evicted
+        lv = self._live = _LiveState(B)
         decode_cost = self._decode_cost()
         decode_energy_j = decode_cost[0]
-        adm: list[_Admission] = []
-        adm_state = None
-        adm_w = 0
-        # lane-row free list: vacated rows (spliced-out, or finished on
-        # their first token) are reused in place by later admissions —
-        # the device lane state reallocates only when the pow2 width must
-        # *grow* past its high-water mark (satellite of the stall fix:
-        # steady-state churn costs zero lane rebuilds). A vacated row
-        # still holds its old occupant's state (cache write index, SSM
-        # scan carry), so reused rows are zeroed by a one-row splice
-        # before the new admission's first chunk.
-        lane_free: list[int] = []
-        lane_dirty: set[int] = set()
-        zero_src = None
+        # lane-row free list (lv.lane_free): vacated rows (spliced-out,
+        # or finished on their first token) are reused in place by later
+        # admissions — the device lane state reallocates only when the
+        # pow2 width must *grow* past its high-water mark (satellite of
+        # the stall fix: steady-state churn costs zero lane rebuilds). A
+        # vacated row still holds its old occupant's state (cache write
+        # index, SSM scan carry), so reused rows are zeroed by a one-row
+        # splice before the new admission's first chunk.
 
         def zero_lane_row(r: int) -> None:
             """Overwrite lane row `r` with zeros (row 0 of a cached
             1-row zero state — the splice jit donates only dst, so the
             source survives reuse)."""
-            nonlocal adm_state, zero_src
-            if zero_src is None:
-                zero_src = self._init_state(1)
-            adm_state = self._splice_fn(adm_state, zero_src,
-                                        jnp.int32(0), jnp.int32(r))
+            if lv.zero_src is None:
+                lv.zero_src = self._init_state(1)
+            lv.adm_state = self._splice_fn(lv.adm_state, lv.zero_src,
+                                           jnp.int32(0), jnp.int32(r))
+
+        def adopt_ready() -> None:
+            """Splice adopted decode-state rows (checkpointed off a
+            failed fleet member) into free decode slots. The row's
+            accumulated energy rides in as its prefill energy, so the
+            final Result's attribution covers both attempts; already
+            terminal rows retire immediately (defensive — the scheduler
+            migrates only live requests)."""
+            free = [b for b in range(B) if lv.slots[b] is None]
+            now = time.perf_counter()
+            while self._adopted and free:
+                rec = self._adopted.popleft()
+                b = free.pop(0)
+                if lv.batch_state is None:
+                    lv.batch_state = self._init_state(B)
+                lv.batch_state = self._splice_fn(
+                    lv.batch_state, rec["state"], jnp.int32(0),
+                    jnp.int32(b))
+                req = rec["req"]
+                slot = _Slot(req=req,
+                             tokens=[int(t) for t in rec["tokens"]],
+                             prefill_energy_j=float(rec["energy_j"]),
+                             t_start=now, t_first=now,
+                             t_first_model=self._clock,
+                             rng=rec.get("rng"))
+                self._stats["adopted_in"] += 1
+                tok = slot.tokens[-1]
+                if (req.eos_id is not None and tok == req.eos_id) or (
+                        len(slot.tokens) >= self._budget(req)):
+                    self._finish(slot, now, decode_energy_j, results)
+                    continue
+                lv.slots[b] = slot
+                lv.token_buf[b] = tok
 
         def splice_ready() -> None:
             """Move parked (prefilled) admissions into free decode slots,
             FIFO by first-token time; their lane rows return to the free
             list."""
-            nonlocal adm, batch_state
-            free = [b for b in range(B) if slots[b] is None]
+            free = [b for b in range(B) if lv.slots[b] is None]
             if not free:
                 return
             keep: list[_Admission] = []
-            for a in adm:
+            for a in lv.adm:
                 if a.ready is None or not free:
                     keep.append(a)
                     continue
                 b = free.pop(0)
-                if batch_state is None:
-                    batch_state = self._init_state(B)
-                batch_state = self._splice_fn(
-                    batch_state, adm_state, jnp.int32(a.row),
+                if lv.batch_state is None:
+                    lv.batch_state = self._init_state(B)
+                lv.batch_state = self._splice_fn(
+                    lv.batch_state, lv.adm_state, jnp.int32(a.row),
                     jnp.int32(b))
-                lane_free.append(a.row)
-                lane_dirty.add(a.row)
-                slots[b] = a.ready
-                token_buf[b] = a.first_tok
-            adm = keep
+                lv.lane_free.append(a.row)
+                lv.lane_dirty.add(a.row)
+                lv.slots[b] = a.ready
+                lv.token_buf[b] = a.first_tok
+            lv.adm = keep
 
         def chunk_stage() -> bool:
             """Run one chunk call over the rows still prefilling (parked
@@ -1028,40 +1103,39 @@ class ServingEngine:
             Returns True when a request finished outright on its first
             sampled token (a lane row freed — the caller re-admits in
             the same pass)."""
-            nonlocal adm, adm_state, adm_w, lane_free
-            W = adm_w or 1
-            while W < len(adm):
+            W = lv.adm_w or 1
+            while W < len(lv.adm):
                 W *= 2
-            if adm_state is None or W > adm_w:
+            if lv.adm_state is None or W > lv.adm_w:
                 # width growth (or first build): reallocate, carrying
                 # every in-progress row across *at its own index* — row
                 # assignments are sticky so no repacking splices happen
                 new_state = self._init_state(W)
                 held = set()
-                for a in adm:
+                for a in lv.adm:
                     if a.row >= 0:
                         held.add(a.row)
                         if a.base > 0:
                             new_state = self._splice_fn(
-                                new_state, adm_state, jnp.int32(a.row),
+                                new_state, lv.adm_state, jnp.int32(a.row),
                                 jnp.int32(a.row))
-                adm_state, adm_w = new_state, W
-                lane_free = [r for r in range(W) if r not in held]
-                lane_dirty.clear()
+                lv.adm_state, lv.adm_w = new_state, W
+                lv.lane_free = [r for r in range(W) if r not in held]
+                lv.lane_dirty.clear()
                 self._stats["lane_rebuilds"] += 1
-            lane_free.sort()
+            lv.lane_free.sort()
             fresh: list[_Admission] = []
-            for a in adm:
+            for a in lv.adm:
                 if a.row < 0:
-                    a.row = lane_free.pop(0)
+                    a.row = lv.lane_free.pop(0)
                     if self._admit_fn is not None:
                         # admit families: the admission splice below
                         # overwrites the whole row (a complete batch-1
                         # state), so no zeroing splice is needed
-                        lane_dirty.discard(a.row)
+                        lv.lane_dirty.discard(a.row)
                         fresh.append(a)
-                    elif a.row in lane_dirty:
-                        lane_dirty.discard(a.row)
+                    elif a.row in lv.lane_dirty:
+                        lv.lane_dirty.discard(a.row)
                         zero_lane_row(a.row)
             if fresh:
                 # prefill-once admission: one packed call over this
@@ -1075,15 +1149,15 @@ class ServingEngine:
                 src_state, adm_j = self._admit_rows(
                     [a.req for a in fresh], Wb)
                 for i, a in enumerate(fresh):
-                    adm_state = self._splice_fn(adm_state, src_state,
-                                                jnp.int32(i),
-                                                jnp.int32(a.row))
+                    lv.adm_state = self._splice_fn(lv.adm_state, src_state,
+                                                   jnp.int32(i),
+                                                   jnp.int32(a.row))
                     a.chunk_energy_j += adm_j / Wb
                     a.prefix = self._admit_dims(a.req)[0]
                     if a.t_start == 0.0:
                         a.t_start = t_adm
-            pending = [a for a in adm if a.ready is None]
-            rem = [len(a.req.prompt) - a.base for a in pending]
+            pending = [a for a in lv.adm if a.ready is None]
+            rem = [len(a.eff) - a.base for a in pending]
             # shortest-remainder-first bucket: short admissions finish in
             # cheap narrow calls (their TTFT is the point); long prompts
             # still progress min(C, rem) tokens per step and get full
@@ -1096,7 +1170,7 @@ class ServingEngine:
                 # ladder bucket is functionally valid — parity holds
                 # because chunk boundaries stay bucket/grain aligned
                 want = self.chunk_policy(
-                    self, [(a.req, len(a.req.prompt) - a.base)
+                    self, [(a.req, len(a.eff) - a.base)
                            for a in pending])
                 if want:
                     C = self._chunk_bucket(int(want))
@@ -1112,14 +1186,14 @@ class ServingEngine:
             lens = np.zeros(W, np.int32)
             t_disp = time.perf_counter()
             for a in pending:
-                n = min(C, len(a.req.prompt) - a.base)
-                toks[a.row, :n] = a.req.prompt[a.base:a.base + n]
+                n = min(C, len(a.eff) - a.base)
+                toks[a.row, :n] = a.eff[a.base:a.base + n]
                 lens[a.row] = n
                 if a.t_start == 0.0:
                     a.t_start = t_disp
-            logits, adm_state = self._chunk(
+            logits, lv.adm_state = self._chunk(
                 self.params, jnp.asarray(toks), jnp.asarray(lens),
-                adm_state)
+                lv.adm_state)
             logits = np.asarray(logits, np.float32)
             now = time.perf_counter()
             est_j, est_s, est = self._chunk_cost(W, C)
@@ -1129,74 +1203,281 @@ class ServingEngine:
             self._stats["idle_energy_j"] += (W - len(pending)) * est_j / W
             keep: list[_Admission] = []
             freed = False
-            for a in adm:
+            for a in lv.adm:
                 if a.ready is not None:
                     keep.append(a)
                     continue
                 a.base += int(lens[a.row])
                 a.chunk_energy_j += est_j / W
-                if a.base < len(a.req.prompt):
+                if a.base < len(a.eff):
                     keep.append(a)
                     continue
-                tok = int(self._sample(logits[a.row:a.row + 1],
-                                       [a.rng])[0])
-                srec = _Slot(req=a.req, tokens=[tok],
+                replay = a.req.replay
+                if replay:
+                    # fault replay: the emitted prefix is forced, not
+                    # resampled — the stream stays an exact append-only
+                    # continuation. Non-greedy rows burn the failed
+                    # attempt's Gumbel draws so later tokens keep bit
+                    # parity with the no-fault run.
+                    if a.rng is not None:
+                        for _ in replay:
+                            a.rng.gumbel(size=logits.shape[-1])
+                    tok = int(replay[-1])
+                    toks0 = [int(t) for t in replay]
+                else:
+                    tok = int(self._sample(logits[a.row:a.row + 1],
+                                           [a.rng])[0])
+                    toks0 = [tok]
+                srec = _Slot(req=a.req, tokens=toks0,
                              prefill_energy_j=a.chunk_energy_j,
                              t_start=a.t_start, t_first=now,
                              t_first_model=self._clock, rng=a.rng)
-                # EOS or a 1-token budget on the first sampled token:
-                # finished before ever occupying a decode slot
+                # EOS or an exhausted budget on the first (or last
+                # replayed) token: finished before occupying a decode
+                # slot
                 if (a.req.eos_id is not None and tok == a.req.eos_id) or (
-                        self._budget(a.req) <= 1):
+                        len(toks0) >= self._budget(a.req)):
                     self._finish(srec, now, decode_energy_j, results)
-                    lane_free.append(a.row)
-                    lane_dirty.add(a.row)
+                    lv.lane_free.append(a.row)
+                    lv.lane_dirty.add(a.row)
                     freed = True
                     continue
                 a.ready = srec
                 a.first_tok = tok
                 keep.append(a)
-            adm = keep
-            if not adm:
-                adm_state, adm_w = None, 0
-                lane_free = []
-                lane_dirty.clear()
+            lv.adm = keep
+            if not lv.adm:
+                lv.adm_state, lv.adm_w = None, 0
+                lv.lane_free = []
+                lv.lane_dirty.clear()
             return freed
 
         emitted = 0
-        while self.queue or adm or any(s is not None for s in slots):
+        while (self.queue or self._adopted or lv.adm
+               or any(s is not None for s in lv.slots)):
             t_it0 = time.perf_counter()
-            # ---- admit + chunk: fill free lane rows from the queue and
-            # run one chunk call; a request finishing on its first
-            # sampled token frees its lane row again, so keep admitting
-            # until the lane is full of live work or the queue drains ----
+            # ---- adopt + admit + chunk: splice adopted rows and fill
+            # free lane rows from the queue, then run one chunk call; a
+            # request finishing on its first sampled token frees its
+            # lane row again, so keep admitting until the lane is full
+            # of live work or the queue drains ----
+            adopt_ready()
             splice_ready()
             while True:
-                while self.queue and len(adm) < self.lane_width:
+                while self.queue and len(lv.adm) < self.lane_width:
                     req = self.queue.popleft()
                     rng = None if self.greedy else self._req_rng(req.uid)
-                    adm.append(_Admission(req=req, rng=rng))
-                if not any(a.ready is None for a in adm):
+                    eff = np.asarray(req.prompt, np.int32)
+                    if req.replay and len(req.replay) > 1:
+                        eff = np.concatenate(
+                            [eff, np.asarray(req.replay[:-1], np.int32)])
+                    lv.adm.append(_Admission(req=req, rng=rng, eff=eff))
+                if not any(a.ready is None for a in lv.adm):
                     break
                 freed = chunk_stage()
                 if not (freed and self.queue):
                     break
+            adopt_ready()
             splice_ready()
             # ---- one lockstep decode step over the residents ----
-            batch_state = self._decode_step(
-                slots, batch_state, token_buf, decode_cost, results)
+            lv.batch_state = self._decode_step(
+                lv.slots, lv.batch_state, lv.token_buf, decode_cost,
+                results)
             self._stats["wall_s"] += time.perf_counter() - t_it0
-            pending_n = sum(a.ready is None for a in adm)
+            pending_n = sum(a.ready is None for a in lv.adm)
             self._lane_view = {
                 "pending": pending_n,
-                "pending_tokens": sum(len(a.req.prompt) - a.base
-                                      for a in adm if a.ready is None),
-                "parked": len(adm) - pending_n,
-                "resident": sum(s is not None for s in slots),
-                "in_flight": len(adm),
+                "pending_tokens": sum(len(a.eff) - a.base
+                                      for a in lv.adm if a.ready is None),
+                "parked": len(lv.adm) - pending_n,
+                "resident": sum(s is not None for s in lv.slots),
+                "in_flight": len(lv.adm),
             }
             new, emitted = results[emitted:], len(results)
             yield new
+        self._live = None
+
+    # ------------------------------------------------------------------
+    # fault recovery (repro.serving.faults / scheduler)
+    # ------------------------------------------------------------------
+    def state_compatible(self, other: "ServingEngine") -> bool:
+        """True when a decode-state row checkpointed from `other` can be
+        spliced into this engine with a bit-identical continuation:
+        same model/params objects, config, cache geometry, layout, and
+        sampling contract (seed + greedy). The scheduler consults this
+        to choose migration over replay."""
+        return (self.model is other.model
+                and self.params is other.params
+                and self.cfg == other.cfg
+                and self.max_len == other.max_len
+                and self.tp == other.tp
+                and self.kv_layout == "dense"
+                and other.kv_layout == "dense"
+                and self.seed == other.seed
+                and self.greedy == other.greedy)
+
+    def checkpoint_inflight(self, *, state_lost: bool = False
+                            ) -> list[dict]:
+        """Surgically extract every in-flight request for recovery on
+        another member, then clear this engine (crash semantics: the
+        queue, lane, and slot table are gone afterwards).
+
+        Each record carries the request, its emitted tokens, its
+        accumulated attributable energy, its sampling stream, the
+        engine-relative TTFT if the first token was already emitted, and
+        — for rows whose device state survives (resident decode slots
+        and parked admissions, unless ``state_lost``) — the batch-1
+        decode-state pytree `layers.take_slot_state` carves out, ready
+        for `adopt` on a compatible member. Mid-prefill admissions and
+        queued requests always restart from scratch (their partial chunk
+        energy is the failed attempt's lost spend — the scheduler
+        charges it back via `charge_lost_energy`)."""
+        from repro.models import layers as L
+
+        records: list[dict] = []
+        lv = self._live
+        decode_j = self._decode_cost()[0]
+
+        def rec(req, tokens, state, energy, rng, ttft, lost=0.0):
+            records.append({
+                "req": req, "tokens": list(tokens), "state": state,
+                "energy_j": float(energy), "rng": rng,
+                "ttft_model_s": ttft, "lost_energy_j": float(lost)})
+
+        if lv is not None:
+            for b, slot in enumerate(lv.slots):
+                if slot is None:
+                    continue
+                state = None
+                if not state_lost and lv.batch_state is not None:
+                    state = L.take_slot_state(lv.batch_state,
+                                              self._state_axes, b)
+                energy = (slot.prefill_energy_j
+                          + slot.steps * decode_j / self.max_batch)
+                rec(slot.req, slot.tokens, state, energy, slot.rng,
+                    max(slot.t_first_model - slot.req.submit_model_s,
+                        0.0),
+                    lost=0.0 if state is not None else energy)
+            for a in lv.adm:
+                if a.ready is not None:
+                    state = None
+                    if not state_lost and lv.adm_state is not None:
+                        state = L.take_slot_state(lv.adm_state,
+                                                  self._state_axes, a.row)
+                    energy = a.ready.prefill_energy_j
+                    rec(a.req, a.ready.tokens, state, energy, a.rng,
+                        max(a.ready.t_first_model
+                            - a.req.submit_model_s, 0.0),
+                        lost=0.0 if state is not None else energy)
+                else:
+                    # mid-prefill: partial chunks cannot migrate — the
+                    # spend so far is lost to the failed attempt
+                    rec(a.req, [], None, 0.0, None, None,
+                        lost=a.chunk_energy_j)
+        for r in self._adopted:
+            records.append(dict(r) if state_lost is False
+                           else {**r, "state": None,
+                                 "lost_energy_j": r["energy_j"],
+                                 "energy_j": 0.0})
+        for req in self.queue:
+            rec(req, req.replay or [], None, 0.0, None, None)
+        self.queue.clear()
+        self._adopted.clear()
+        self._stepper = None
+        self._live = None
+        self._lane_view = dict.fromkeys(self._lane_view, 0)
+        return records
+
+    def adopt(self, record: dict) -> None:
+        """Accept a checkpointed decode-state row from a failed member
+        (migration). The row waits in the adoption queue until a decode
+        slot frees; `has_work` counts it. Raises when the record carries
+        no state or a structurally incompatible one — the scheduler
+        falls back to replay."""
+        from repro.models import layers as L
+
+        if record.get("state") is None:
+            raise ValueError(
+                "adopt needs a checkpointed state row; replay lost-state "
+                "requests instead")
+        if self.kv_layout != "dense" or self.admission != "chunked":
+            raise ValueError(
+                "adoption requires chunked continuous serving on the "
+                "dense KV layout")
+        self._ensure_splice()
+        spec = jax.eval_shape(
+            lambda: self.model.init_state(self.cfg, 1, self.max_len))
+        if not L.state_structures_match(record["state"], spec):
+            raise ValueError(
+                "checkpointed state row is structurally incompatible "
+                "with this engine's decode state")
+        self._adopted.append(record)
+
+    def charge_lost_energy(self, j: float) -> None:
+        """Charge energy a failed attempt spent on work that must be
+        replayed: real spend with no surviving owner, folded into this
+        engine's idle share (so fleet ledgers still sum) and tracked in
+        `lost_energy_j` for the robustness report."""
+        self._stats["idle_energy_j"] += float(j)
+        self._stats["lost_energy_j"] += float(j)
+
+    def retune(self, *, objective: str = "runtime",
+               rank_mode: str = "auto", _inject=None) -> bool:
+        """Re-tune the engine's GEMM fleet mid-run (e.g. after a chip or
+        artifact change). On `ArtifactError` — a corrupt or missing
+        predictor artifact, or the injected fault ``_inject`` — tuning
+        degrades to the paper's BASELINE block configs instead of
+        raising: serving continues, pricing uses BASELINE everywhere,
+        and `report()` carries ``tuning_degraded`` plus the reason.
+        Token streams are unaffected either way (block configs change
+        cost predictions, never semantics). Returns True when tuning
+        succeeded, False when it degraded."""
+        from repro.core.predictor import ArtifactError
+        from repro.kernels import ops
+
+        fleet = ops.serving_gemm_fleet(
+            self.cfg, max_batch=self.max_batch, max_len=self.max_len,
+            include_slot_prefill=self._continuous_supported(),
+            chunk_tokens=(self.chunk_tokens
+                          if self.admission == "chunked" else None),
+            lane_width=(self.lane_width
+                        if self.admission == "chunked" else None),
+            tp=self.tp, grain=self.ssm_grain)
+        try:
+            if _inject is not None:
+                raise _inject
+            self.pretuned = ops.warm_gemm_cache(
+                fleet, dtype=self.cfg.activation_dtype,
+                objective=objective, chip=self.chip,
+                rank_mode=rank_mode, strict=True)
+            self.tuning_degraded = False
+            self._degraded_reason = None
+        except ArtifactError as e:
+            from repro.core.autotuner import baseline_configs
+
+            self.pretuned = baseline_configs(fleet)
+            self.tuning_degraded = True
+            self._degraded_reason = str(e)
+        # step-energy estimates were priced under the old configs
+        self._step_energy_cache.clear()
+        return not self.tuning_degraded
+
+    # ------------------------------------------------------------------
+    # paged layout: pool pressure (fault injection / degraded mode)
+    # ------------------------------------------------------------------
+    def inject_page_pressure(self, pages: int) -> int:
+        """Squeeze `pages` pages out of the paged KV pool (an external
+        tenant, a chaos fault). Returns how many were actually taken;
+        `release_page_pressure` gives them back."""
+        if self._allocator is None:
+            raise ValueError("page pressure requires kv_layout='paged'")
+        return self._allocator.squeeze(pages)
+
+    def release_page_pressure(self) -> int:
+        """Return every squeezed page to the paged KV pool."""
+        if self._allocator is None:
+            raise ValueError("page pressure requires kv_layout='paged'")
+        return self._allocator.unsqueeze()
 
     def _ensure_pool(self) -> None:
         """Build the device page pool and the jitted page-copy call on
@@ -1247,6 +1528,9 @@ class ServingEngine:
         masks, and every unmasked position holds the same written values.
         """
         self._ensure_pool()
+        if any(r.replay for r in self.queue):
+            raise ValueError(
+                "replay requests require the dense KV layout")
         t_run0 = time.perf_counter()
         from repro.serving.paging import PageCacheFull
 
@@ -1365,6 +1649,13 @@ class ServingEngine:
                                     prefix_rows=prefix,
                                     reuse=not admit_family)
                 except PageCacheFull:
+                    # degraded mode: under pool pressure the shared-
+                    # prefix registry is a cache, not a promise — shed
+                    # it (dropping the registry's references frees
+                    # sole-owner pages now, shared ones at their last
+                    # reader) and retry before deferring the admission
+                    if alloc.shed_registry():
+                        continue
                     if not adm and not any(s is not None for s in slots):
                         raise
                     break
@@ -1625,6 +1916,9 @@ class ServingEngine:
         energy attribution reflects the waste)."""
         if not self.queue:
             return []
+        if any(r.replay for r in self.queue):
+            raise ValueError(
+                "replay requests require chunked admission (serve_step)")
         self._activate()
         t_run0 = time.perf_counter()
         batch_reqs = [self.queue.popleft()
@@ -1787,4 +2081,11 @@ class ServingEngine:
             "attributed_energy_j": s["energy_j"],
             "idle_energy_j": s["idle_energy_j"],
             "j_per_token": total_j / toks if toks else 0.0,
+            # robustness surface: replayed work charged to this engine
+            # as the failed attempt, rows adopted from failed members,
+            # and whether tuning fell back to BASELINE configs
+            "lost_energy_j": s["lost_energy_j"],
+            "adopted_in": s["adopted_in"],
+            "tuning_degraded": self.tuning_degraded,
+            "tuning_degraded_reason": self._degraded_reason,
         }

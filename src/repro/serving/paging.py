@@ -92,9 +92,13 @@ class PageAllocator:
         self._chains: dict[bytes, _PrefixEntry] = {}
         self._partials: dict[bytes, tuple[bytes, _PrefixEntry]] = {}
         self._clock = 0
+        # pages parked aside by `squeeze` (simulated external pressure):
+        # neither free nor referenced until `unsqueeze` returns them
+        self._squeezed: list[int] = []
         self.stats = {
             "allocs": 0, "frees": 0, "cow_forks": 0, "evictions": 0,
             "prefix_hits": 0, "prefix_hit_tokens": 0, "peak_in_use": 0,
+            "squeezed": 0, "registry_sheds": 0,
         }
 
     # ------------------------------------------------------------------
@@ -305,6 +309,46 @@ class PageAllocator:
                     _PrefixEntry(page=snap, n_tokens=plen,
                                  last_hit=self._clock))
         return copies
+
+    # ------------------------------------------------------------------
+    # degraded modes: pool pressure + registry shedding
+    # ------------------------------------------------------------------
+    def squeeze(self, n: int) -> int:
+        """Remove up to `n` pages from the free list, modelling external
+        pool pressure (another tenant, a chaos fault) — the pages are
+        parked aside, not freed, and `unsqueeze` returns them. Returns
+        how many were actually taken (the free list may be shorter)."""
+        take = min(int(n), len(self._free))
+        for _ in range(take):
+            self._squeezed.append(self._free.pop())
+        self.stats["squeezed"] = len(self._squeezed)
+        return take
+
+    def unsqueeze(self) -> int:
+        """Return every squeezed page to the free list (pressure
+        relieved). Returns the count returned."""
+        n = len(self._squeezed)
+        self._free.extend(self._squeezed)
+        self._squeezed.clear()
+        self.stats["squeezed"] = 0
+        return n
+
+    def shed_registry(self) -> int:
+        """Drop EVERY shared-prefix registry entry, releasing the
+        registry's reference on each page: sole-owner pages return to
+        the free list immediately, shared ones when their last reader
+        retires. This is the engine's first response to sustained pool
+        pressure — the registry is a latency cache, and shedding it can
+        never change token streams (prefix reuse only skips recompute of
+        identical KV rows). Returns the number of entries dropped."""
+        entries = ([e for e in self._chains.values()]
+                   + [e for _, e in self._partials.values()])
+        self._chains.clear()
+        self._partials.clear()
+        for e in entries:
+            self.release([e.page])
+        self.stats["registry_sheds"] += len(entries)
+        return len(entries)
 
     def report(self) -> dict:
         """Allocator counters for the engine's serving report."""

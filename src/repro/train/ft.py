@@ -24,7 +24,13 @@ class StragglerConfig:
 
 
 class StragglerDetector:
-    """Tracks per-host step-time EWMAs; flags persistent outliers."""
+    """Tracks per-host step-time EWMAs; flags persistent outliers.
+
+    The serving fleet reuses this over per-member `serve_step` model
+    times (`serving/scheduler.py`): a stalled member's EWMA crosses
+    `threshold` x the fleet median and, after `patience` consecutive
+    slow observations, the scheduler evicts it and migrates its
+    in-flight requests. A recovered host re-enters via `reset`."""
 
     def __init__(self, n_hosts: int, cfg: StragglerConfig | None = None):
         self.cfg = cfg or StragglerConfig()
@@ -38,12 +44,27 @@ class StragglerDetector:
         self._ewma[host] = (step_time_s if prev is None
                             else (1 - a) * prev + a * step_time_s)
 
+    def reset(self, host: int) -> None:
+        """Forget a host's history — a recovered (or replaced) straggler
+        starts a fresh EWMA and a zero streak, so a past stall cannot
+        re-flag it the moment it rejoins."""
+        self._ewma[host] = None
+        self._slow_streak[host] = 0
+
     def update_flags(self) -> list[int]:
-        """Call once per step after all records; returns flagged hosts."""
+        """Call once per step after all records; returns flagged hosts.
+
+        The reference is the *true* median of known EWMAs (central pair
+        averaged for even counts): taking the upper-median element made
+        the slowest of two hosts its own reference, so a 2-host fleet
+        could never flag its straggler. A single-host fleet never flags
+        (no peer to compare against)."""
         known = [e for e in self._ewma if e is not None]
         if len(known) < max(2, self.n_hosts // 2):
             return []
-        med = sorted(known)[len(known) // 2]
+        ks = sorted(known)
+        n = len(ks)
+        med = ks[n // 2] if n % 2 else 0.5 * (ks[n // 2 - 1] + ks[n // 2])
         flagged = []
         for h in range(self.n_hosts):
             e = self._ewma[h]

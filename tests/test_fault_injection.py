@@ -1,0 +1,567 @@
+"""Chaos property suite: fault injection, migration/replay recovery,
+and overload admission control on the serving fleet.
+
+The invariants, under ANY seeded fault schedule:
+
+* **Exactly-once**: every submitted request reaches exactly one
+  terminal disposition (finished, or shed/lost with a logged status);
+  no request is served twice and none is dropped silently.
+* **Stream integrity**: client-visible token streams are append-only
+  across failures — a replayed request's forced prefix reproduces what
+  already streamed, and a migrated decode-state row continues
+  bit-identically — so final streams match a no-fault single-engine
+  reference exactly (the engine's bit-parity contract survives chaos).
+* **Ledger conservation**: fleet energy still sums from the per-engine
+  ledgers, with the failed attempt's unusable spend charged to the
+  failed member (`lost_energy_j`), never double-counted and never
+  vanishing.
+* **Degraded continuity**: predictor-artifact corruption downgrades
+  tuning to BASELINE configs (flagged in `report()`), and page-pool
+  pressure sheds the shared-prefix registry — both change costs and
+  latency only, never tokens.
+
+Runs under hypothesis when available, with a deterministic seeded
+fallback — the same two-tier pattern as `tests/test_fleet_scheduler.py`,
+whose helpers this suite mirrors.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autotuner import BASELINE
+from repro.core.predictor import ArtifactError
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.faults import FaultEvent, FaultPlan, retry_backoff_s
+from repro.serving.paging import PageAllocator
+from repro.serving.scheduler import FleetScheduler, SLAClass
+from repro.train.ft import StragglerConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="chaos-test", kind="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+        param_dtype="float32", activation_dtype="float32", remat=False,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+_SERVED_CACHE: dict = {}
+
+
+def _get_served():
+    """Memoized (cfg, model, params) triple shared by every test (and
+    by the hypothesis tier, which bypasses fixture injection)."""
+    if "served" not in _SERVED_CACHE:
+        cfg = tiny_cfg()
+        model = get_model(cfg)
+        params = model.init(jax.random.key(0), cfg)
+        _SERVED_CACHE["served"] = (cfg, model, params)
+    return _SERVED_CACHE["served"]
+
+
+@pytest.fixture(scope="module")
+def served():
+    return _get_served()
+
+
+def make_engine(served, chip: str = "tpu_v5e", **kw) -> ServingEngine:
+    cfg, model, params = served
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk_tokens", 16)
+    kw.setdefault("seed", 0)
+    return ServingEngine(model, params, cfg, chip=chip, **kw)
+
+
+def make_fleet(served, slo: float | None = 0.5,
+               **sched_kw) -> FleetScheduler:
+    """Two-member heterogeneous fleet (TPU v5e + RTX 4070) sharing
+    params and sampling seed — the members are `state_compatible`, so
+    migration is available whenever checkpointed state survives."""
+    engines = {"v5e": make_engine(served, "tpu_v5e"),
+               "ada": make_engine(served, "rtx4070")}
+    if slo is None:
+        return FleetScheduler(engines, **sched_kw)
+    sched_kw.setdefault("default_sla", "interactive")
+    sla = sched_kw.pop("sla", {"interactive": SLAClass("interactive", slo)})
+    return FleetScheduler(engines, sla=sla, **sched_kw)
+
+
+def workload(seed: int, n: int, lo: int = 3, hi: int = 40,
+             max_budget: int = 8) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(0, 256, int(rng.integers(lo, hi))
+                                    ).astype(np.int32),
+                max_new_tokens=int(rng.integers(1, max_budget + 1)))
+        for i in range(n)]
+
+
+_REF_CACHE: dict = {}
+
+
+def _reference(served, seed: int, n: int) -> tuple[dict, float]:
+    """(no-fault streams by uid, single-engine makespan) for a seeded
+    workload — the parity oracle and the horizon faults are pinned
+    against. Memoized: the reference is placement-independent."""
+    key = (seed, n)
+    if key not in _REF_CACHE:
+        ref = make_engine(served, "tpu_v5e")
+        for r in workload(seed, n):
+            ref.submit(r)
+        streams = {r.uid: list(r.tokens) for r in ref.run_until_empty()}
+        _REF_CACHE[key] = (streams, ref.report()["model_s"])
+    return _REF_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# the core chaos property check
+# ---------------------------------------------------------------------------
+
+
+def _check_chaos(served, seed: int, n: int, results, sched,
+                 *, allow_non_ok: bool = False):
+    """Assert the exactly-once, provenance, parity, and ledger
+    invariants after a (possibly faulty) fleet run."""
+    reqs = workload(seed, n)
+    rep = sched.report()
+    log = sched.request_log
+
+    # exactly-once: one terminal disposition per submitted request
+    assert sorted(log) == sorted(r.uid for r in reqs)
+    ok_uids = sorted(r.uid for r in results)
+    assert len(set(ok_uids)) == len(ok_uids)
+    assert ok_uids == sorted(u for u, d in log.items()
+                             if d["status"] == "ok")
+    if not allow_non_ok:
+        assert all(d["status"] == "ok" for d in log.values())
+
+    # provenance: finished on the member it was (last) routed to
+    for r in results:
+        assert log[r.uid]["engine"] == sched.routed_to[r.uid]
+
+    # stream integrity: bit-identical to the no-fault reference —
+    # migration continues the exact state, replay forces the exact
+    # prefix, and greedy continuation is deterministic either way
+    streams, _ = _reference(served, seed, n)
+    for r in results:
+        np.testing.assert_array_equal(
+            r.tokens, streams[r.uid],
+            err_msg=f"uid {r.uid} stream diverged under faults")
+
+    # ledger conservation: fleet total still sums from the members
+    # (lost replayed spend rides in the failed member's idle share)
+    ledger = sum(e["engine"]["energy_j"] + e["gap_idle_j"]
+                 for e in rep["engines"].values())
+    np.testing.assert_allclose(rep["fleet_energy_j"], ledger, rtol=1e-9)
+    attributed = sum(r.energy_j for r in results)
+    assert rep["fleet_energy_j"] >= attributed - 1e-9
+    assert rep["faults"]["lost_energy_j"] >= 0.0
+    return rep, log
+
+
+def _run_chaos(served, seed: int, n: int, slo, plan, **fleet_kw):
+    sched = make_fleet(served, slo=slo, fault_plan=plan, **fleet_kw)
+    for r in workload(seed, n):
+        sched.submit(r)
+    results = sched.run_until_empty()
+    return results, sched
+
+
+# ---------------------------------------------------------------------------
+# hypothesis tier (skipped when the package is absent)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=3, deadline=None)
+    @given(seed=st.integers(0, 2**16 - 1), n=st.integers(2, 5),
+           slo=st.sampled_from([0.5, None]),
+           plan_seed=st.integers(0, 2**16 - 1))
+    def test_chaos_invariants_hypothesis(seed, n, slo, plan_seed):
+        served = _get_served()
+        _, horizon = _reference(served, seed, n)
+        plan = FaultPlan.random(["v5e", "ada"], plan_seed,
+                                horizon_s=max(horizon, 1e-6))
+        results, sched = _run_chaos(served, seed, n, slo, plan)
+        _check_chaos(served, seed, n, results, sched)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fallback tier (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,n,slo,plan_seed", [
+    (11, 5, 0.5, 101),
+    (29, 4, None, 7),       # best-effort under chaos
+])
+def test_chaos_invariants_seeded(served, seed, n, slo, plan_seed):
+    _, horizon = _reference(served, seed, n)
+    plan = FaultPlan.random(["v5e", "ada"], plan_seed,
+                            horizon_s=max(horizon, 1e-6))
+    results, sched = _run_chaos(served, seed, n, slo, plan)
+    _check_chaos(served, seed, n, results, sched)
+
+
+# ---------------------------------------------------------------------------
+# targeted recovery paths
+# ---------------------------------------------------------------------------
+
+
+def _step_until_resident(sched, name: str, budget: int = 500):
+    """Drive the scheduler until member `name` holds live decode
+    state; returns the results retired along the way."""
+    out = []
+    m = sched.members[name]
+    for _ in range(budget):
+        out.extend(sched.step())
+        lv = m.engine._live
+        if lv is not None and any(s is not None for s in lv.slots):
+            return out
+    pytest.skip(f"{name} never held a decode slot")
+
+
+def test_crash_with_state_migrates_bit_identical(served):
+    """A crash that preserves device state migrates every resident
+    request to the compatible survivor: streams bit-identical to the
+    no-fault run, zero replays for the migrated rows."""
+    seed, n = 7, 6
+    sched = make_fleet(served, slo=0.5)
+    for r in workload(seed, n):
+        sched.submit(r)
+    results = _step_until_resident(sched, "v5e")
+    sched._fail_member(sched.members["v5e"], evict=False,
+                       state_lost=False)
+    assert sched._recovery, "crash with in-flight work must checkpoint"
+    had_state = sum(1 for rec in sched._recovery
+                    if rec.get("state") is not None)
+    results += sched.run_until_empty()
+    rep, log = _check_chaos(served, seed, n, results, sched)
+    assert rep["faults"]["crashes"] == 1
+    assert rep["engines"]["v5e"]["crashed"]
+    if had_state:
+        assert rep["faults"]["migrations"] >= had_state
+        assert any(d["migrations"] > 0 for d in log.values())
+    # the dead member's idle-floor horizon truncates at the crash
+    assert (rep["engines"]["v5e"]["gap_idle_model_s"]
+            <= rep["makespan_model_s"] + 1e-12)
+
+
+def test_crash_state_lost_replays_append_only(served):
+    """Losing device state with the node forces replay: requests
+    requeue with their emitted tokens as a forced prefix (streams stay
+    append-only and land bit-identical), the retry pays backoff, and
+    the failed attempt's spend is charged as lost energy."""
+    seed, n = 13, 6
+    sched = make_fleet(served, slo=0.5)
+    for r in workload(seed, n):
+        sched.submit(r)
+    results = _step_until_resident(sched, "ada")
+    sched._fail_member(sched.members["ada"], evict=False,
+                       state_lost=True)
+    emitted = {rec["req"].uid: list(rec["tokens"])
+               for rec in sched._recovery}
+    assert any(toks for toks in emitted.values())
+    results += sched.run_until_empty()
+    rep, log = _check_chaos(served, seed, n, results, sched)
+    assert rep["faults"]["migrations"] == 0
+    assert rep["faults"]["replays"] >= len(emitted)
+    assert rep["faults"]["lost_energy_j"] > 0.0
+    final = {r.uid: list(r.tokens) for r in results}
+    for uid, prefix in emitted.items():
+        assert final[uid][:len(prefix)] == prefix, \
+            f"uid {uid}: replay rewrote already-streamed tokens"
+        assert log[uid]["retries"] >= 1
+
+
+def test_stall_is_detected_and_evicted(served):
+    """A stall injected through the plan is *detected* via the
+    straggler EWMAs over observed/predicted step ratios — the scheduler
+    never reads the schedule — and the flagged member is evicted with
+    its work migrated; streams stay bit-identical."""
+    seed, n = 23, 8
+    plan = FaultPlan([FaultEvent(0.0, "stall", "ada", factor=8.0,
+                                 duration_s=1e9)])
+    results, sched = _run_chaos(
+        served, seed, n, 0.5, plan,
+        straggler_cfg=StragglerConfig(patience=2))
+    rep, _ = _check_chaos(served, seed, n, results, sched)
+    assert rep["faults"]["stalls"] == 1
+    assert rep["faults"]["evictions"] >= 1
+    assert rep["engines"]["ada"]["evictions"] >= 1
+
+
+def test_artifact_corruption_degrades_not_fails(served):
+    """Mid-run predictor-artifact corruption downgrades the member's
+    tuning to BASELINE configs: serving continues, the report flags the
+    degraded mode, and streams are bit-identical to a healthy run
+    (block configs price work; they never change tokens)."""
+    seed, n = 31, 5
+    _, horizon = _reference(served, seed, n)
+    plan = FaultPlan([FaultEvent(0.3 * horizon, "artifact_corruption",
+                                 "v5e")])
+    results, sched = _run_chaos(served, seed, n, 0.5, plan)
+    rep, _ = _check_chaos(served, seed, n, results, sched)
+    assert rep["faults"]["degraded_members"] == ["v5e"]
+    assert rep["engines"]["v5e"]["tuning_degraded"]
+    assert not rep["engines"]["ada"]["tuning_degraded"]
+
+
+def test_retune_injected_artifact_error_falls_back_to_baseline(served):
+    eng = make_engine(served)
+    ok = eng.retune(_inject=ArtifactError("chaos: corrupt artifact"))
+    assert not ok
+    assert eng.tuning_degraded
+    assert eng.pretuned and all(c == BASELINE
+                                for c in eng.pretuned.values())
+    rep = eng.report()
+    assert rep["tuning_degraded"]
+    assert "corrupt" in rep["tuning_degraded_reason"]
+
+
+def test_checkpoint_adopt_roundtrip_engine_level(served):
+    """The slot-surgery primitive under the scheduler: checkpointed
+    rows adopted by a compatible engine (plus replays for the rest)
+    reproduce the reference streams exactly, and the failed engine is
+    left empty."""
+    seed, n = 41, 4
+    streams, _ = _reference(served, seed, n)
+    src = make_engine(served, "tpu_v5e")
+    for r in workload(seed, n):
+        src.submit(r)
+    done = []
+    while src.has_work:
+        done.extend(src.serve_step())
+        lv = src._live
+        if lv is not None and any(s is not None for s in lv.slots):
+            break
+    records = src.checkpoint_inflight()
+    assert not src.has_work and records
+    dst = make_engine(served, "tpu_v5e")
+    assert dst.state_compatible(src)
+    for rec in records:
+        if rec["state"] is not None:
+            dst.adopt(rec)
+        else:
+            req = rec["req"]
+            req.replay = list(rec["tokens"]) or None
+            dst.submit(req)
+    while dst.has_work:
+        done.extend(dst.serve_step())
+    assert sorted(r.uid for r in done) == sorted(streams)
+    for r in done:
+        np.testing.assert_array_equal(r.tokens, streams[r.uid])
+
+
+def test_replay_prefix_continues_stream_engine_level(served):
+    """A fresh engine serving a request with a forced replay prefix
+    emits exactly the reference stream (prefix re-emitted, greedy tail
+    identical)."""
+    prompt = np.arange(10, dtype=np.int32)
+    ref_eng = make_engine(served)
+    ref_eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    (ref_r,) = ref_eng.run_until_empty()
+    ref = list(ref_r.tokens)
+    assert len(ref) >= 2
+    req = Request(uid=0, prompt=prompt, max_new_tokens=6,
+                  replay=list(ref[:2]))
+    eng = make_engine(served)
+    eng.submit(req)
+    out = []
+    while eng.has_work:
+        out.extend(eng.serve_step())
+    (r,) = out
+    np.testing.assert_array_equal(r.tokens, ref)
+
+
+def test_replay_rejected_off_the_chunked_path(served):
+    """Replay is a chunked-admission (serve_step) contract; the serial
+    and wave paths refuse it loudly instead of double-emitting."""
+    req = workload(53, 1)[0]
+    req.replay = [1, 2]
+    eng = make_engine(served)
+    eng.submit(req)
+    with pytest.raises(ValueError, match="replay"):
+        eng.run_wave()
+
+
+# ---------------------------------------------------------------------------
+# overload admission control
+# ---------------------------------------------------------------------------
+
+
+def test_shed_policy_records_terminal_disposition(served):
+    """An unattainable SLO with policy='shed' rejects every request —
+    each still gets exactly one logged disposition, and the per-class
+    counters match."""
+    n = 4
+    sched = make_fleet(
+        served, slo=0.5,
+        sla={"interactive": SLAClass("interactive", 1e-12,
+                                     policy="shed")})
+    for r in workload(61, n):
+        sched.submit(r)
+    results = sched.run_until_empty()
+    assert results == []
+    log = sched.request_log
+    assert len(log) == n
+    assert all(d["status"] == "shed" for d in log.values())
+    rep = sched.report()
+    assert rep["sla"]["interactive"]["shed"] == n
+    assert rep["faults"]["shed"] == {"interactive": n}
+    assert rep["requests"] == n
+
+
+def test_defer_policy_backs_off_then_accepts(served):
+    """policy='defer' rotates infeasible admissions with capped
+    backoff, then accepts late rather than starving — every request
+    still completes exactly once, streams unchanged."""
+    seed, n = 67, 4
+    sched = make_fleet(
+        served, slo=0.5,
+        sla={"interactive": SLAClass("interactive", 1e-12,
+                                     policy="defer", defer_s=0.01,
+                                     max_defers=2)})
+    for r in workload(seed, n):
+        sched.submit(r)
+    results = sched.run_until_empty()
+    rep, log = _check_chaos(served, seed, n, results, sched)
+    assert len(results) == n
+    assert rep["sla"]["interactive"]["deferred"] >= 1
+    assert rep["faults"]["shed"] == {}
+
+
+def test_backlog_watermark_triggers_admission_control(served):
+    """Crossing `admission_watermark_tokens` applies the SLA policy
+    even when placements are predicted feasible (the overload valve)."""
+    seed, n = 71, 4
+    sched = make_fleet(
+        served, slo=0.5,
+        sla={"interactive": SLAClass("interactive", 1e6,
+                                     policy="defer", defer_s=0.01,
+                                     max_defers=3)},
+        admission_watermark_tokens=1)
+    for r in workload(seed, n):
+        sched.submit(r)
+    results = sched.run_until_empty()
+    rep, _ = _check_chaos(served, seed, n, results, sched)
+    assert len(results) == n
+    assert rep["sla"]["interactive"]["deferred"] >= 1
+    loose = make_fleet(served, slo=1e6)
+    for r in workload(seed, n):
+        loose.submit(r)
+    loose.run_until_empty()
+    assert loose.report()["sla"]["interactive"]["deferred"] == 0
+
+
+# ---------------------------------------------------------------------------
+# page-pool pressure + registry shedding
+# ---------------------------------------------------------------------------
+
+
+def test_page_pressure_squeeze_unsqueeze():
+    alloc = PageAllocator(8, 4)            # page 0 reserved: 7 usable
+    assert alloc.squeeze(3) == 3
+    assert alloc.free_pages == 4
+    assert alloc.stats["squeezed"] == 3
+    assert alloc.squeeze(100) == 4        # clamped to the free list
+    assert alloc.free_pages == 0
+    assert alloc.unsqueeze() == 7
+    assert alloc.free_pages == 7
+    assert alloc.stats["squeezed"] == 0
+
+
+def test_registry_shed_frees_pages_and_counts():
+    alloc = PageAllocator(8, 4)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = alloc.alloc(2)
+    alloc.register(prompt, pages, written=8)
+    assert alloc.match(prompt)[1] > 0      # registry is live
+    before = alloc.free_pages
+    shed = alloc.shed_registry()
+    assert shed >= 1
+    assert alloc.stats["registry_sheds"] == shed
+    assert alloc.free_pages >= before      # registry refs released
+    assert alloc.match(prompt)[1] == 0     # cold after the shed
+    alloc.release(pages)
+    assert alloc.free_pages == 7           # nothing leaked (page 0 held)
+
+
+def test_page_pressure_requires_paged_engine(served):
+    eng = make_engine(served)              # dense layout
+    with pytest.raises(ValueError, match="paged"):
+        eng.inject_page_pressure(2)
+    paged = make_engine(served, kv_layout="paged", page_size=8)
+    assert paged.inject_page_pressure(2) == 2
+    assert paged.release_page_pressure() == 2
+
+
+# ---------------------------------------------------------------------------
+# the fault plan itself
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_due_pops_in_order():
+    plan = FaultPlan([FaultEvent(2.0, "crash", "b"),
+                      FaultEvent(1.0, "stall", "a", factor=4.0)])
+    assert plan.due(0.5) == []
+    fired = plan.due(1.5)
+    assert [e.kind for e in fired] == ["stall"]
+    assert plan.remaining == 1
+    assert [e.kind for e in plan.due(10.0)] == ["crash"]
+    assert plan.due(10.0) == []
+    assert len(plan) == 2
+
+
+def test_fault_plan_random_is_deterministic_and_keeps_a_survivor():
+    members = ["a", "b"]
+    p1 = FaultPlan.random(members, 5, horizon_s=1.0, n_events=10,
+                          kinds=("crash",))
+    p2 = FaultPlan.random(members, 5, horizon_s=1.0, n_events=10,
+                          kinds=("crash",))
+    assert p1.report() == p2.report()
+    crashes = [e for e in p1._events if e.kind == "crash"]
+    assert len(crashes) <= 1               # never the whole fleet
+    assert all(0.0 <= e.t_model_s <= 1.0 for e in p1._events)
+
+
+def test_fault_plan_report_tracks_fired():
+    plan = FaultPlan([FaultEvent(1.0, "stall", "a", factor=2.0)], seed=9)
+    rep = plan.report()
+    assert rep["seed"] == 9 and not rep["events"][0]["fired"]
+    plan.due(2.0)
+    assert plan.report()["events"][0]["fired"]
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(0.0, "meteor", "a")
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent(0.0, "stall", "a", factor=1.0)
+
+
+def test_retry_backoff_caps():
+    assert retry_backoff_s(1) == 0.05
+    assert retry_backoff_s(2) == 0.1
+    assert retry_backoff_s(20) == 1.0      # capped
+    assert retry_backoff_s(3, base_s=0.01, cap_s=0.02) == 0.02
+    with pytest.raises(ValueError):
+        retry_backoff_s(0)

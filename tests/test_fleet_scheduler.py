@@ -267,6 +267,32 @@ def test_reset_stats_rezeroes_ledger(served):
     assert len(sched.run_until_empty()) == 3
 
 
+def test_draining_fleet_cannot_livelock(served):
+    """Regression for the run_until_empty livelock edge: work pending
+    while every member sits parked *and draining* (race-to-idle's end
+    state). `_candidates` excludes draining members at every widen
+    level, and nothing in the old `step()` ever cleared the flag — so
+    driving `step()` directly spun forever, returning [] with a
+    non-empty queue. The rescue pass must wake a member (clearing its
+    drain) or shed per policy; bounded stepping must finish the
+    request."""
+    sched = make_fleet(served, slo=0.5)
+    now = sched.fleet_now()
+    for m in sched.members.values():
+        m.draining = True
+        sched._park(m, now)
+    sched.submit(Request(uid=0, prompt=np.zeros(6, np.int32),
+                         max_new_tokens=3))
+    results = []
+    for _ in range(200):
+        results.extend(sched.step())
+        if results:
+            break
+    assert [r.uid for r in results] == [0], \
+        "scheduler livelocked with a draining fleet and pending work"
+    assert sched.request_log[0]["status"] == "ok"
+
+
 def test_serve_step_contract(served):
     """The engine stepper the scheduler stands on: steps interleave
     with submissions, yield per-step retirements, and drain exactly the

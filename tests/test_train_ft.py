@@ -1,0 +1,196 @@
+"""Fault-tolerance primitives: `train.ft` straggler detection edges and
+the SIGTERM preemption -> final-save path.
+
+The serving fleet reuses `StragglerDetector` over per-member step-time
+ratios (`serving/scheduler.py`), so its boundary behavior — patience
+reset on recovery, the strict threshold inequality, the two-host median,
+the single-host no-peer gate — is load-bearing for eviction decisions,
+not just training telemetry. Signal-delivery tests run in a subprocess
+so a real SIGTERM exercises the installed handler without killing the
+test runner.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.train.ft import StragglerConfig, StragglerDetector
+
+
+def _detector(n_hosts: int, *, threshold: float = 1.5,
+              patience: int = 3) -> StragglerDetector:
+    return StragglerDetector(
+        n_hosts, StragglerConfig(threshold=threshold, patience=patience))
+
+
+def _prime(det: StragglerDetector, ewmas: dict[int, float]) -> None:
+    """Set each host's EWMA exactly (the first record seeds it)."""
+    for host, v in ewmas.items():
+        det.record(host, v)
+
+
+# ---------------------------------------------------------------------------
+# EWMA / flagging edges
+# ---------------------------------------------------------------------------
+
+
+def test_patience_resets_on_recovery():
+    """A host that dips back under the threshold before `patience`
+    consecutive slow steps restarts its streak from zero."""
+    det = _detector(3, patience=3)
+    _prime(det, {0: 1.0, 1: 1.0, 2: 10.0})
+    assert det.update_flags() == []
+    assert det.update_flags() == []          # streak at 2, not flagged
+    # recovery: hammer fast steps until the EWMA is back under 1.5x med
+    while det._ewma[2] > 1.5:
+        det.record(2, 1.0)
+    assert det.update_flags() == []          # streak reset
+    # slow again: the old streak must not carry over
+    det.record(2, 100.0)
+    assert det.update_flags() == []
+    assert det.update_flags() == []
+    assert det.update_flags() == [2]         # fresh 3-streak completes
+
+
+def test_threshold_boundary_is_strict():
+    """Exactly threshold x median is healthy; only strictly above
+    counts toward the streak."""
+    det = _detector(3, threshold=1.5, patience=1)
+    _prime(det, {0: 1.0, 1: 1.0, 2: 1.5})    # med = 1.0, bound = 1.5
+    assert det.update_flags() == []
+    det2 = _detector(3, threshold=1.5, patience=1)
+    _prime(det2, {0: 1.0, 1: 1.0, 2: 1.5 + 1e-9})
+    assert det2.update_flags() == [2]
+
+
+def test_single_host_fleet_never_flags():
+    """One host has no peer to be slower than — the known-count gate
+    (max(2, n//2)) keeps update_flags empty no matter the history."""
+    det = _detector(1, patience=1)
+    for _ in range(10):
+        det.record(0, 1000.0)
+        assert det.update_flags() == []
+
+
+def test_two_host_straggler_is_detectable():
+    """Two-host median regression: with the upper-median element the
+    slower host *was* the median, so it could never exceed 1.5x itself
+    and a 2-host fleet was blind to its straggler. The true median
+    (central pair averaged) makes it reachable: e > 1.5*(b+e)/2 iff
+    e > 3b."""
+    det = _detector(2, threshold=1.5, patience=2)
+    _prime(det, {0: 1.0, 1: 4.0})            # med = 2.5, bound = 3.75
+    assert det.update_flags() == []          # streak 1
+    assert det.update_flags() == [1]         # patience met
+
+
+def test_two_host_below_triple_stays_healthy():
+    """The flip side of the 2-host bound: e <= 3b never flags."""
+    det = _detector(2, threshold=1.5, patience=1)
+    _prime(det, {0: 1.0, 1: 3.0})            # med = 2.0, bound = 3.0
+    for _ in range(5):
+        assert det.update_flags() == []
+
+
+def test_reset_clears_history():
+    """`reset(host)` forgets the EWMA and streak — an evicted member
+    rejoining the fleet must not be re-flagged on stale history."""
+    det = _detector(2, patience=1)
+    _prime(det, {0: 1.0, 1: 100.0})
+    assert det.update_flags() == [1]
+    det.reset(1)
+    assert det._ewma[1] is None
+    assert det.update_flags() == []          # no peer pair -> gate holds
+    _prime(det, {1: 1.0})                    # healthy rejoin
+    assert det.update_flags() == []
+
+
+def test_unknown_hosts_gate():
+    """update_flags stays empty until at least max(2, n//2) hosts have
+    reported — a half-silent fleet has no trustworthy median."""
+    det = _detector(8, patience=1)
+    for h in range(3):
+        det.record(h, 1.0)
+        assert det.update_flags() == []      # 1..3 known < 4
+    det.record(3, 100.0)
+    assert det.update_flags() == [3]         # 4 known: gate opens
+
+
+# ---------------------------------------------------------------------------
+# preemption: real signal delivery, in a subprocess
+# ---------------------------------------------------------------------------
+
+_ENV = {**os.environ,
+        "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src"),
+        "JAX_PLATFORMS": "cpu"}
+
+
+def _run_py(script: str) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                          capture_output=True, text=True, timeout=120,
+                          env=_ENV)
+
+
+def test_sigterm_sets_preempted_flag():
+    """A real SIGTERM delivered to the process flips the handler's flag
+    instead of killing it, and restore() reinstates the default
+    disposition."""
+    proc = _run_py("""
+        import os, signal
+        from repro.train.ft import PreemptionHandler
+
+        h = PreemptionHandler()
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.preempted, "flag not set by SIGTERM"
+        h.restore()
+        assert signal.getsignal(signal.SIGTERM) is not h._handler
+        print("HANDLED")
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "HANDLED" in proc.stdout
+
+
+def test_sigterm_triggers_final_blocking_save():
+    """SIGTERM mid-run makes `run_train_loop` cut the run short with one
+    final *blocking* checkpoint save (the preemption contract: the state
+    on disk is the state the summary reports)."""
+    proc = _run_py("""
+        import os, signal
+        import numpy as np
+        from repro.train.loop import LoopConfig, run_train_loop
+
+        class Loader:
+            def next(self):
+                return {"x": np.zeros(1)}
+            def checkpoint(self):
+                return {"pos": 0}
+
+        class Ckpt:
+            saves = []
+            def save(self, step, state, data_state=None, blocking=False):
+                self.saves.append((step, bool(blocking)))
+            def wait(self):
+                pass
+
+        def train_step(state, batch):
+            state["n"] += 1
+            if state["n"] == 3:
+                os.kill(os.getpid(), signal.SIGTERM)
+            return state, {"loss": np.float32(0.5)}
+
+        ckpt = Ckpt()
+        state, summary = run_train_loop(
+            train_step=train_step, state={"n": 0}, loader=Loader(),
+            ckpt=ckpt, loop_cfg=LoopConfig(total_steps=100,
+                                           ckpt_every=1000),
+            log_fn=lambda msg: None)
+        assert summary["preempted"], summary
+        assert summary["final_step"] == 3, summary
+        assert ckpt.saves == [(3, True)], ckpt.saves
+        print("SAVED", ckpt.saves)
+    """)
+    assert proc.returncode == 0, proc.stderr
+    assert "SAVED [(3, True)]" in proc.stdout
